@@ -1,0 +1,36 @@
+"""Shared helpers for the paper-table benchmarks (CPU-tier protocol).
+
+The paper's tables are reproduced at CPU-tractable scale with the SAME
+pipeline code; 'nodes' map to spatial partitions trained independently
+(wall-clock of a multi-node run = max over partitions, since partitions are
+embarrassingly parallel — we train them sequentially and report the max).
+Paper-scale numbers are extrapolated with a calibrated work model and
+clearly labelled as such.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Optional
+
+import numpy as np
+
+RESULT_DIR = "experiments/benchmarks"
+
+
+def save_result(name: str, payload: dict):
+    os.makedirs(RESULT_DIR, exist_ok=True)
+    with open(os.path.join(RESULT_DIR, f"{name}.json"), "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+
+
+def parallel_time(per_partition_seconds):
+    """Wall-clock of independent partitions running concurrently."""
+    return float(np.max(per_partition_seconds))
+
+
+def fmt_minutes(s: float) -> str:
+    return f"{s/60:.2f}m" if s >= 60 else f"{s:.1f}s"

@@ -1,0 +1,143 @@
+"""Roofline analysis over the dry-run records (deliverable g).
+
+Reads experiments/dryrun/single/*.json (the roofline table is single-pod by
+assignment; multi-pod records prove the pod axis shards) and emits the
+per-cell three-term roofline:
+
+    compute_s    HLO_FLOPs / (chip peak 197 TF bf16)
+    memory_s     HLO_bytes / (819 GB/s HBM)
+    collective_s wire_bytes / (50 GB/s ICI link)
+
+plus the dominant term, MODEL_FLOPS/HLO_FLOPs (useful-compute ratio), and a
+one-line "what would move the bottleneck" note.  Everything is per-device.
+
+    PYTHONPATH=src python -m benchmarks.roofline [--dir experiments/dryrun]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+NOTES = {
+    ("compute_s", "moe"): "activate fewer experts per token (EP all-to-all "
+                          "dispatch instead of dense all-expert einsum)",
+    ("compute_s", None): "already compute-bound: raise MXU utilisation "
+                         "(larger matmul tiles, bf16 everywhere)",
+    ("memory_s", "attn"): "flash-attention custom-vjp (drop the per-chunk "
+                          "probability stash), smaller kv blocks",
+    ("memory_s", "moe"): "dense all-expert einsum reads every expert's "
+                         "weights: EP dispatch reads only routed experts",
+    ("memory_s", None): "cut activation stashes (custom-vjp flash attn, "
+                        "remat policy) / fuse loss (lse without full logits)",
+    ("collective_s", "gs"): "hierarchical top-K merge: exchange per-shard "
+                            "candidate lists instead of the full splat table",
+    ("collective_s", None): "overlap TP all-reduces with next-layer matmuls "
+                            "(reduce-scatter + all-gather decomposition), "
+                            "gradient compression on the DP axis",
+}
+
+
+def load_cells(dir: str, mesh: str = "single"):
+    cells = []
+    root = os.path.join(dir, mesh)
+    if not os.path.isdir(root):
+        return cells
+    for fn in sorted(os.listdir(root)):
+        if fn.endswith(".json"):
+            with open(os.path.join(root, fn)) as f:
+                cells.append(json.load(f))
+    return cells
+
+
+def note_for(cell) -> str:
+    dom = cell.get("bottleneck", "?")
+    arch = cell["arch"]
+    family = None
+    if arch.startswith("gs-"):
+        family = "gs"
+    elif "mixtral" in arch or "llama4" in arch or "jamba" in arch:
+        family = "moe"
+    elif cell["shape"].startswith(("train", "prefill")):
+        family = "attn" if dom == "memory_s" else None
+    return NOTES.get((dom, family)) or NOTES.get((dom, None), "")
+
+
+def fmt_table(cells, *, full_notes: bool = False) -> str:
+    rows = []
+    head = (f"{'cell':42s} {'status':7s} {'compute':>9s} {'memory':>9s} "
+            f"{'collect':>9s} {'bound':>10s} {'useful':>7s}")
+    rows.append(head)
+    rows.append("-" * len(head))
+    for c in cells:
+        name = f"{c['arch']}__{c['shape']}"
+        if c["status"] == "skip":
+            rows.append(f"{name:42s} {'skip':7s} {'':>9s} {'':>9s} {'':>9s} "
+                        f"{'':>10s} {'':>7s}")
+            continue
+        if c["status"] != "ok":
+            rows.append(f"{name:42s} {'ERROR':7s}")
+            continue
+        r = c["roofline"]
+        rows.append(
+            f"{name:42s} {'ok':7s} "
+            f"{r['compute_s']*1e3:8.1f}ms {r['memory_s']*1e3:8.1f}ms "
+            f"{r['collective_s']*1e3:8.1f}ms "
+            f"{c['bottleneck'].replace('_s',''):>10s} "
+            f"{c['useful_flops_ratio']:7.3f}")
+        if full_notes:
+            rows.append(f"    -> {note_for(c)}")
+    return "\n".join(rows)
+
+
+def summarize(dir: str = "experiments/dryrun", *, full_notes=True,
+              out_json: Optional[str] = None) -> str:
+    single = load_cells(dir, "single")
+    multi = load_cells(dir, "multi")
+    lines = []
+    lines.append("ROOFLINE (single-pod 16x16 = 256 chips, per-device terms)")
+    lines.append(fmt_table(single, full_notes=full_notes))
+    ok = [c for c in single if c["status"] == "ok"]
+    if ok:
+        worst = min(ok, key=lambda c: c["useful_flops_ratio"])
+        coll = max(ok, key=lambda c: c["roofline"]["collective_s"]
+                   / max(sum(c["roofline"].values()), 1e-12))
+        lines.append("")
+        lines.append(f"worst useful-compute ratio: {worst['arch']}__"
+                     f"{worst['shape']} ({worst['useful_flops_ratio']:.3f})")
+        lines.append(f"most collective-bound:      {coll['arch']}__"
+                     f"{coll['shape']}")
+    lines.append("")
+    n_ok = sum(c["status"] == "ok" for c in multi)
+    n_skip = sum(c["status"] == "skip" for c in multi)
+    n_err = len(multi) - n_ok - n_skip
+    lines.append(f"MULTI-POD (2x16x16 = 512 chips): {n_ok} ok, {n_skip} "
+                 f"skip, {n_err} error")
+    gs_multi = [c for c in multi if c["arch"].startswith("gs-")
+                and c["status"] == "ok"]
+    for c in gs_multi:
+        lines.append(f"  {c['arch']}: pod-spanning collective bytes = "
+                     f"{c['hlo']['pod_spanning_bytes']:.0f} "
+                     f"(paper independence: scalar loss metric only)")
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump({"single": single, "multi": multi}, f, indent=1)
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--notes", action="store_true")
+    args = ap.parse_args()
+    print(summarize(args.dir, full_notes=args.notes))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Benchmark orchestrator: one entry per paper table/figure + roofline.
+
+    PYTHONPATH=src python -m benchmarks.run [--full]
+
+Default mode balances coverage vs CPU time (~10-20 min); --full runs the
+longer protocols.  Results are printed AND saved under
+experiments/benchmarks/*.json; the roofline section reads the dry-run
+records under experiments/dryrun (run `python -m repro.launch.dryrun` first
+for fresh ones).
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--skip-roofline", action="store_true")
+    args = ap.parse_args()
+    quick = not args.full
+    t0 = time.time()
+
+    print("=" * 78)
+    print("BENCHMARKS — Distributed 3D-GS for High-Resolution Isosurface "
+          "Visualization")
+    print("=" * 78)
+
+    from benchmarks import quality_ablation
+    quality_ablation.run(quick=quick)
+
+    from benchmarks import table1_single_node
+    table1_single_node.run(quick=quick)
+
+    from benchmarks import table4_multinode
+    table4_multinode.run(quick=quick)
+
+    from benchmarks import table_quality
+    table_quality.run(quick=quick)
+
+    if not args.skip_roofline:
+        print("\n" + "=" * 78)
+        from benchmarks import roofline
+        print(roofline.summarize("experiments/dryrun", full_notes=False))
+
+    print("\n" + "=" * 78)
+    print(f"[benchmarks] done in {(time.time()-t0)/60:.1f} min; JSON under "
+          f"experiments/benchmarks/")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,108 @@
+"""Table I — single-node multi-GPU scaling (Grendel intra-node parallelism).
+
+Protocol: within one node, Grendel splits *gaussians* across GPUs and
+*pixels* across GPUs; per-step work per GPU is ~ N/g gaussians + T/g tiles.
+We measure the per-step wall time of the per-partition trainer at work/g for
+g in {1, 2, 4} on the CPU tier of each dataset and at two resolutions,
+mirroring Table I's layout (time to a fixed step budget).
+
+A calibrated work model (t = a*N + b*pixels + c per step, least squares over
+the measured grid) extrapolates to the paper's point counts; extrapolations
+are labelled as such and stored next to the measured numbers.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import fmt_minutes, save_result
+from repro.configs.gs_datasets import get_gs_dataset
+from repro.core.cameras import orbital_rig, select
+from repro.core.gaussians import from_points
+from repro.core.pipeline import build_scene, gt_gaussians, render_views
+from repro.core.tiling import TileGrid
+from repro.core.train import GSTrainCfg, fit_partition
+from repro.data.isosurface import point_cloud_for
+
+
+def measure_step_time(points, colors, extent, res, *, steps, K=32,
+                      n_views=6):
+    center = 0.5 * (points.max(0) + points.min(0))
+    grid = TileGrid(res, res, 8, 16)
+    cams = orbital_rig(n_views, center, 1.6 * extent / 2 + 1e-3,
+                       width=res, height=res)
+    cfg = GSTrainCfg(K=K)
+    gts, _ = render_views(gt_gaussians(points, colors), cams, grid, K=K)
+    g0 = from_points(jnp.asarray(points), jnp.asarray(colors), opacity=0.5)
+    t0 = time.perf_counter()
+    fit_partition(g0, cams, jnp.asarray(gts), None, cfg, steps=steps,
+                  extent=extent, grid=grid)
+    total = time.perf_counter() - t0
+    return total / steps
+
+
+def run(datasets=("kingsnake", "rayleigh_taylor"), resolutions=(48, 64),
+        gpus=(1, 2, 4), steps=30, quick=False, step_budget=1000):
+    if quick:
+        steps = 12
+        resolutions = (48,)
+    rows = {}
+    samples = []           # (N, pixels, t) for the work model
+    for ds_name in datasets:
+        ds = get_gs_dataset(ds_name, "scale")
+        points, colors, extent = build_scene(ds)
+        for res in resolutions:
+            for g in gpus:
+                n = len(points) // g
+                t = measure_step_time(points[:n], colors[:n], extent, res,
+                                      steps=steps)
+                rows[(ds_name, res, g)] = t
+                samples.append((n, res * res, t))
+
+    # calibrate t = a*N + b*pixels + c
+    A = np.array([[n, p, 1.0] for n, p, _ in samples])
+    y = np.array([t for _, _, t in samples])
+    coef, *_ = np.linalg.lstsq(A, y, rcond=None)
+
+    print("\n[table1] single-node scaling — measured s/step at work/g "
+          "(CPU tier; paper Table I protocol)")
+    print(f"{'dataset':18s} {'res':>5s} " +
+          " ".join(f"{'g=' + str(g):>9s}" for g in gpus) +
+          f" {'speedup g=4':>12s}")
+    for ds_name in datasets:
+        for res in resolutions:
+            if (ds_name, res, gpus[0]) not in rows:
+                continue
+            ts = [rows[(ds_name, res, g)] for g in gpus]
+            speed = ts[0] / ts[-1]
+            print(f"{ds_name:18s} {res:5d} " +
+                  " ".join(f"{t*1e3:8.1f}m" for t in ts) +
+                  f" {speed:11.2f}x")
+    print(f"[table1] work model: t/step = {coef[0]:.2e}*N + "
+          f"{coef[1]:.2e}*pix + {coef[2]:.2e}")
+    print(f"[table1] extrapolated minutes to {step_budget} steps at paper "
+          f"scale (labelled extrapolation):")
+    for ds_name, n_paper in (("kingsnake", 4e6), ("rayleigh_taylor", 18.2e6)):
+        for res in (1024, 2048):
+            for g in gpus:
+                t = coef[0] * n_paper / g + coef[1] * res * res / g + coef[2]
+                if g == gpus[0]:
+                    print(f"  {ds_name:18s} {res:5d}: ", end="")
+                print(f"g={g} {fmt_minutes(t*step_budget):>8s}", end="  ")
+            print()
+    save_result("table1_single_node", dict(
+        rows={f"{k[0]}|{k[1]}|{k[2]}": v for k, v in rows.items()},
+        model_coef=coef.tolist(), steps=steps))
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    a = ap.parse_args()
+    run(quick=a.quick)

@@ -1,0 +1,66 @@
+"""End-to-end driver for the paper's distributed pipeline (Fig. 1).
+
+    PYTHONPATH=src python examples/distributed_isosurface.py \
+        --dataset rayleigh_taylor --parts 4 --steps 150 --resolution 64
+
+Every stage of §II runs: isosurface extraction -> orbital cameras ->
+spatial partitioning with ghost cells -> per-partition GT renders +
+background masks -> independent per-partition training -> merge ->
+global evaluation, plus the ablation render (no ghosts/masks) so the
+Fig. 2 comparison is visible in numbers.  Checkpoints land per partition
+(the paper's O(1/n) failure-recovery property).
+"""
+
+import argparse
+
+import numpy as np
+
+from repro.core.pipeline import PipelineCfg, run_pipeline
+from repro.core.train import GSTrainCfg
+from repro.runtime import CheckpointManager
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="rayleigh_taylor",
+                    choices=["sphere_shell", "kingsnake", "rayleigh_taylor",
+                             "richtmyer_meshkov"])
+    ap.add_argument("--parts", type=int, default=4)
+    ap.add_argument("--steps", type=int, default=150)
+    ap.add_argument("--resolution", type=int, default=64)
+    ap.add_argument("--views", type=int, default=16)
+    ap.add_argument("--ablation", action="store_true",
+                    help="also run without ghosts/masks (Fig. 2b)")
+    ap.add_argument("--ckpt-dir", default="checkpoints/distributed_iso")
+    args = ap.parse_args()
+
+    common = dict(dataset=args.dataset, n_parts=args.parts,
+                  resolution=args.resolution, steps=args.steps,
+                  n_views=args.views, train=GSTrainCfg())
+
+    print(f"[pipeline] {args.dataset}: {args.parts} partitions, "
+          f"{args.steps} steps @ {args.resolution}^2, {args.views} views")
+    ours = run_pipeline(PipelineCfg(use_ghost=True, use_mask=True, **common))
+    print(f"[pipeline] ghosts+masks:  PSNR {ours.psnr:6.2f}  "
+          f"SSIM {ours.ssim:.4f}  grad_sim {ours.grad_sim:.4f}  "
+          f"splats {ours.n_gaussians:,}")
+    print(f"[pipeline] per-partition train seconds: "
+          f"{[round(t, 1) for t in ours.train_seconds]}")
+
+    ckpt = CheckpointManager(args.ckpt_dir, keep=1)
+    for p, g in enumerate(ours.parts):
+        ckpt.save(args.steps, g, partition=p,
+                  extra={"dataset": args.dataset})
+    print(f"[pipeline] per-partition checkpoints -> {args.ckpt_dir}")
+
+    if args.ablation:
+        broken = run_pipeline(PipelineCfg(use_ghost=False, use_mask=False,
+                                          **common))
+        print(f"[pipeline] ablated (no GC/mask): PSNR {broken.psnr:6.2f}  "
+              f"SSIM {broken.ssim:.4f}   <- Fig. 2b artifacts")
+        print(f"[pipeline] delta: +{ours.psnr - broken.psnr:.2f} dB PSNR "
+              f"from ghost cells + background masks")
+
+
+if __name__ == "__main__":
+    main()

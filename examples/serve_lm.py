@@ -1,0 +1,18 @@
+"""Batched-serving example over the public API (prefill + decode).
+
+    PYTHONPATH=src python examples/serve_lm.py --arch mamba2-780m
+
+Uses the reduced same-family config on CPU; on a pod, drop --smoke to serve
+the full config across the mesh (the decode step is what the dry-run lowers
+for decode_32k / long_500k).
+"""
+
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    if "--smoke" not in sys.argv and "--full" not in sys.argv:
+        sys.argv.append("--smoke")
+    sys.argv = [a for a in sys.argv if a != "--full"]
+    main()

@@ -1,0 +1,90 @@
+"""LM end-to-end driver: train a ~100M-param decoder for a few hundred steps.
+
+    PYTHONPATH=src python examples/train_lm.py --preset tiny --steps 30
+    PYTHONPATH=src python examples/train_lm.py --preset 100m --steps 300
+
+The 100m preset is a minicpm-family model scaled to ~100M params (the
+assignment's end-to-end training target); `tiny` is the CI-speed variant.
+Demonstrates the full LM substrate on one host: synthetic deterministic
+corpus, WSD schedule, grad compression, checkpoint/resume.
+"""
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.data.tokens import SyntheticTokens
+from repro.models import (TrainCfg, init_opt_state, init_params,
+                          make_train_step)
+from repro.models.spec import ModelSpec
+from repro.runtime import CheckpointManager
+
+PRESETS = {
+    # ~100M params: 12L d=768 12H ff=2048 vocab=32000 (embeddings dominate)
+    "100m": ModelSpec(name="lm-100m", family="dense", n_layers=12,
+                      d_model=768, n_q=12, n_kv=12, d_ff=2048, vocab=32000,
+                      tie_embeddings=True, lr_schedule="wsd"),
+    "10m": ModelSpec(name="lm-10m", family="dense", n_layers=6, d_model=384,
+                     n_q=6, n_kv=6, d_ff=1024, vocab=8192,
+                     tie_embeddings=True, lr_schedule="wsd"),
+    "tiny": ModelSpec(name="lm-tiny", family="dense", n_layers=2, d_model=128,
+                      n_q=4, n_kv=4, d_ff=256, vocab=1024,
+                      tie_embeddings=True, lr_schedule="wsd"),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="tiny", choices=list(PRESETS))
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--compression", default="none",
+                    choices=["none", "bf16", "int8"])
+    ap.add_argument("--ckpt-dir", default="checkpoints/train_lm")
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    args = ap.parse_args()
+
+    spec = PRESETS[args.preset]
+    print(f"[train_lm] {spec.name}: {spec.param_count():,} params, "
+          f"{args.steps} steps, batch {args.batch} x seq {args.seq}")
+    cfg = TrainCfg(total_steps=args.steps, schedule="wsd",
+                   compression=args.compression, kv_chunk=args.seq)
+    params = init_params(spec, jax.random.PRNGKey(0))
+    opt = init_opt_state(spec, params, cfg)
+    step_fn = jax.jit(make_train_step(spec, cfg))
+    data = SyntheticTokens(vocab=spec.vocab, seq=args.seq,
+                           global_batch=args.batch)
+    ckpt = CheckpointManager(args.ckpt_dir, keep=1)
+
+    start = ckpt.latest_step() or 0
+    if start:
+        (params, opt), _ = ckpt.restore(start, (params, opt))
+        print(f"[train_lm] resumed @ step {start}")
+
+    losses = []
+    t0 = time.perf_counter()
+    for step in range(start, args.steps):
+        params, opt, m = step_fn(params, opt, data.batch(step))
+        losses.append(float(m["loss"]))
+        if (step + 1) % 10 == 0:
+            dt = (time.perf_counter() - t0) / 10
+            t0 = time.perf_counter()
+            tok_s = args.batch * args.seq / dt
+            print(f"  step {step+1:4d} loss {losses[-1]:.4f} "
+                  f"({dt*1e3:.0f} ms/step, {tok_s:,.0f} tok/s)")
+        if args.ckpt_every and (step + 1) % args.ckpt_every == 0:
+            ckpt.save(step + 1, (params, opt))
+    ckpt.save(args.steps, (params, opt))
+    if len(losses) >= 20:
+        a, b = np.mean(losses[:5]), np.mean(losses[-5:])
+        print(f"[train_lm] loss {a:.3f} -> {b:.3f} "
+              f"({'improving' if b < a else 'NOT improving'})")
+        assert b < a, "loss did not improve"
+    print("[train_lm] ok")
+
+
+if __name__ == "__main__":
+    main()

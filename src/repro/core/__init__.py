@@ -1,0 +1,13 @@
+"""Core: the paper's contribution — distributed 3D-GS for isosurface vis.
+
+Geometry/primitives (gaussians, projection, cameras, tiling), the TPU render
+path (render, kernels/), partitioning + ghost cells, background masks, the
+per-partition trainer, merge, and the mesh-distributed Grendel-style step.
+"""
+
+from repro.core.cameras import Camera, orbital_rig, select
+from repro.core.gaussians import Gaussians, from_points
+from repro.core.pipeline import PipelineCfg, PipelineResult, run_pipeline
+from repro.core.render import render
+from repro.core.tiling import TileGrid
+from repro.core.train import GSTrainCfg, fit_partition

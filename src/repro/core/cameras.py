@@ -1,0 +1,75 @@
+"""Structured orbital camera rig (paper §II "Camera Setup").
+
+All partitions/nodes use the *identical* rig — the paper's consistency
+requirement — so we generate it deterministically from (n_views, radius,
+center): a Fibonacci-spiral orbit gives near-uniform sphere coverage (the
+paper uses 448 views per dataset).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class Camera(NamedTuple):
+    """Pinhole camera. view: (4,4) world->camera; fx/fy in pixels."""
+    view: jax.Array        # (..., 4, 4)
+    fx: jax.Array
+    fy: jax.Array
+    width: int
+    height: int
+
+    @property
+    def cx(self):
+        return self.width / 2.0
+
+    @property
+    def cy(self):
+        return self.height / 2.0
+
+
+def look_at(eye, center, up=(0.0, 0.0, 1.0)):
+    eye = np.asarray(eye, np.float64)
+    center = np.asarray(center, np.float64)
+    up = np.asarray(up, np.float64)
+    f = center - eye
+    f = f / np.linalg.norm(f)
+    s = np.cross(f, up)
+    if np.linalg.norm(s) < 1e-8:           # looking along up: pick another up
+        s = np.cross(f, np.array([1.0, 0.0, 0.0]))
+    s = s / np.linalg.norm(s)
+    u = np.cross(s, f)
+    m = np.eye(4)
+    m[0, :3], m[1, :3], m[2, :3] = s, u, f   # camera looks down +z
+    m[0, 3] = -s @ eye
+    m[1, 3] = -u @ eye
+    m[2, 3] = -f @ eye
+    return m
+
+
+def orbital_rig(n_views: int, center, radius: float, *, width: int, height: int,
+                fov_deg: float = 50.0) -> Camera:
+    """Fibonacci-spiral orbit: identical on every node given identical args."""
+    center = np.asarray(center, np.float64)
+    golden = (1 + 5**0.5) / 2
+    views = []
+    for i in range(n_views):
+        # z in (-0.95, 0.95) avoids degenerate poles
+        z = 0.95 * (2 * (i + 0.5) / n_views - 1)
+        r = np.sqrt(max(1 - z * z, 1e-9))
+        phi = 2 * np.pi * i / golden
+        eye = center + radius * np.array([r * np.cos(phi), r * np.sin(phi), z])
+        views.append(look_at(eye, center))
+    view = jnp.asarray(np.stack(views), jnp.float32)
+    focal = 0.5 * width / np.tan(np.radians(fov_deg) / 2)
+    fx = jnp.full((n_views,), focal, jnp.float32)
+    fy = jnp.full((n_views,), focal, jnp.float32)
+    return Camera(view=view, fx=fx, fy=fy, width=width, height=height)
+
+
+def select(rig: Camera, idx) -> Camera:
+    return Camera(rig.view[idx], rig.fx[idx], rig.fy[idx], rig.width, rig.height)

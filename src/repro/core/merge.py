@@ -1,0 +1,64 @@
+"""Global reconstruction: merge per-partition splats (paper §II step 6).
+
+Each partition trains on owned + ghost gaussians; at merge time a partition
+contributes only gaussians it *owns* (``owner == part_id``) — ghosts are the
+neighbour's responsibility, so every source gaussian appears exactly once in
+the merged scene.  Densified children inherit their parent's owner, keeping
+the dedupe exact under clone/split.
+"""
+
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.gaussians import Gaussians
+
+
+def dedupe_mask(g: Gaussians, part_id: int):
+    return g.active & (g.owner == part_id)
+
+
+def merge_partitions(parts: Sequence[Gaussians],
+                     part_ids: Sequence[int] = None) -> Gaussians:
+    """Concatenate owner-deduped gaussians from every partition.
+
+    Host-level (runs once after training): compacts each partition's buffer
+    with numpy boolean indexing, then concatenates.
+    """
+    if part_ids is None:
+        part_ids = range(len(parts))
+    fields = {k: [] for k in Gaussians._fields}
+    for pid, g in zip(part_ids, parts):
+        keep = np.asarray(dedupe_mask(g, pid))
+        for k in Gaussians._fields:
+            fields[k].append(np.asarray(getattr(g, k))[keep])
+    cat = {k: jnp.asarray(np.concatenate(v)) for k, v in fields.items()}
+    return Gaussians(**cat)
+
+
+def merge_padded(parts: Sequence[Gaussians], part_ids: Sequence[int] = None,
+                 capacity: int = None) -> Gaussians:
+    """Jit-friendly merge: keeps fixed capacity = sum of partition capacities
+    (or ``capacity``), deactivating deduped slots instead of compacting.
+    Used by the distributed pipeline where shapes must be static."""
+    if part_ids is None:
+        part_ids = list(range(len(parts)))
+    cat = {}
+    for k in Gaussians._fields:
+        cat[k] = jnp.concatenate([getattr(g, k) for g in parts])
+    active = jnp.concatenate(
+        [dedupe_mask(g, pid) for g, pid in zip(parts, part_ids)]
+    )
+    out = Gaussians(**dict(cat, active=active))
+    if capacity is not None and capacity != out.capacity:
+        assert capacity >= out.capacity
+        pad = capacity - out.capacity
+        out = Gaussians(*[
+            jnp.pad(f, ((0, pad),) + ((0, 0),) * (f.ndim - 1))
+            for f in out
+        ])
+    return out

@@ -1,0 +1,195 @@
+"""End-to-end single-host pipeline for the paper's workflow (§II, Fig. 1):
+
+  volume -> isosurface point cloud -> camera rig -> spatial partitioning
+  (+ghost cells) -> per-partition GT renders + background masks ->
+  independent per-partition training -> merge -> global evaluation.
+
+This is the CPU-tractable mirror of the production path (launch/train.py +
+core/distributed.py run the same stages sharded over the mesh); benchmarks
+and the quality-ablation tests drive this module.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.gs_datasets import GSDataset, get_gs_dataset
+from repro.core import merge as merge_mod
+from repro.core import metrics
+from repro.core.cameras import Camera, orbital_rig, select
+from repro.core.gaussians import Gaussians, from_points
+from repro.core.masking import background_mask, dilate_mask
+from repro.core.partition import PartitionData, partition_points
+from repro.core.render import render
+from repro.core.tiling import TileGrid
+from repro.core.train import GSTrainCfg, fit_partition
+from repro.data.isosurface import point_cloud_for
+
+
+@dataclasses.dataclass
+class PipelineCfg:
+    dataset: str = "sphere_shell"
+    tier: str = "cpu"
+    n_parts: int = 2
+    resolution: int = 64
+    steps: int = 200
+    K: int = 48
+    use_ghost: bool = True          # ablation switches (Fig. 2/4)
+    use_mask: bool = True
+    densify_every: int = 0
+    train: GSTrainCfg = dataclasses.field(default_factory=GSTrainCfg)
+    n_views: Optional[int] = None   # override dataset default
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class PipelineResult:
+    merged: Gaussians
+    parts: List[Gaussians]
+    psnr: float
+    ssim: float
+    grad_sim: float
+    train_seconds: List[float]
+    n_gaussians: int
+    gt_images: np.ndarray
+    renders: np.ndarray
+    # metrics restricted to partition-boundary pixels — where the paper's
+    # Fig. 2 artifacts (gaps/streaks) live; the global numbers dilute them
+    boundary_psnr: float = float("nan")
+    boundary_ssim: float = float("nan")
+    boundary_frac: float = 0.0
+
+
+def build_scene(ds: GSDataset, seed: int = 0):
+    points, colors = point_cloud_for(ds.volume, ds.n_points, seed=seed)
+    extent = float(np.linalg.norm(points.max(0) - points.min(0)))
+    return points, colors, extent
+
+
+def gt_gaussians(points, colors, *, owner_id: int = 0) -> Gaussians:
+    """Ground-truth splats straight from the point cloud (paper Fig. 4a:
+    'ground truth image rendered directly from the point cloud')."""
+    return from_points(jnp.asarray(points), jnp.asarray(colors),
+                       owner_id=owner_id, opacity=0.95)
+
+
+def render_views(g: Gaussians, cams: Camera, grid: TileGrid, *, K: int,
+                 impl: str = "auto", bg: float = 1.0):
+    """-> (V, H, W, 3) rgb + (V, H, W) coverage, jit over the view loop."""
+    rfn = jax.jit(lambda gg, cam: render(gg, cam, grid, K=K, impl=impl, bg=bg))
+    rgbs, covs = [], []
+    for v in range(cams.view.shape[0]):
+        out = rfn(g, select(cams, v))
+        rgbs.append(np.asarray(out.rgb))
+        covs.append(np.asarray(out.coverage))
+    return np.stack(rgbs), np.stack(covs)
+
+
+def run_pipeline(cfg: PipelineCfg) -> PipelineResult:
+    ds = get_gs_dataset(cfg.dataset, cfg.tier)
+    n_views = cfg.n_views or ds.n_views
+    points, colors, extent = build_scene(ds, cfg.seed)
+    center = 0.5 * (points.max(0) + points.min(0))
+    radius = 1.6 * extent / 2 + 1e-3
+    W = H = cfg.resolution
+    grid = TileGrid(W, H, cfg.train.tile_h, cfg.train.tile_w)
+    cams = orbital_rig(n_views, center, radius, width=W, height=H)
+
+    # global ground truth (full point cloud)
+    g_gt = gt_gaussians(points, colors)
+    gt_imgs, _ = render_views(g_gt, cams, grid, K=cfg.K)
+
+    # partition (+ optional ghosts)
+    ghost_w = ds.ghost_frac * extent if cfg.use_ghost else 0.0
+    parts, _ = partition_points(points, colors, cfg.n_parts,
+                                ghost_width=ghost_w)
+
+    trained: List[Gaussians] = []
+    times: List[float] = []
+    key = jax.random.PRNGKey(cfg.seed)
+    for pd in parts:
+        cap = int(len(pd.points) * ds.capacity_factor) if cfg.densify_every \
+            else len(pd.points)
+        g0 = from_points(jnp.asarray(pd.points), jnp.asarray(pd.colors),
+                         capacity=cap, opacity=0.6)
+        g0 = g0._replace(owner=jnp.concatenate([
+            jnp.asarray(pd.owner),
+            jnp.full((cap - len(pd.points),), pd.part_id, jnp.int32)]))
+
+        # per-partition GT renders of OWN data (+ghosts) and coverage masks
+        part_gt, part_cov = render_views(
+            gt_gaussians(pd.points, pd.colors), cams, grid, K=cfg.K)
+        masks = None
+        if cfg.use_mask:
+            masks = np.stack([
+                np.asarray(dilate_mask(jnp.asarray(c > 1.0 / 255.0), 2))
+                for c in part_cov
+            ])
+
+        key, sub = jax.random.split(key)
+        t0 = time.perf_counter()
+        g1, _, _ = fit_partition(
+            g0, cams, jnp.asarray(part_gt),
+            None if masks is None else jnp.asarray(masks),
+            cfg.train, steps=cfg.steps, extent=extent, key=sub,
+            densify_every=cfg.densify_every, grid=grid,
+        )
+        times.append(time.perf_counter() - t0)
+        trained.append(g1)
+
+    merged = merge_mod.merge_partitions(trained,
+                                        [p.part_id for p in parts])
+    renders, _ = render_views(merged, cams, grid, K=cfg.K)
+
+    ps = float(np.mean([
+        metrics.psnr(jnp.asarray(renders[v]), jnp.asarray(gt_imgs[v]))
+        for v in range(n_views)
+    ]))
+    ss = float(np.mean([
+        metrics.ssim(jnp.asarray(renders[v]), jnp.asarray(gt_imgs[v]))
+        for v in range(n_views)
+    ]))
+    gs = float(np.mean([
+        metrics.grad_sim(jnp.asarray(renders[v]), jnp.asarray(gt_imgs[v]))
+        for v in range(n_views)
+    ]))
+
+    # ---- boundary-region metrics (paper Fig. 2): evaluate on pixels covered
+    # by points within the ghost halo of any partition boundary, computed
+    # with a FIXED eval halo regardless of cfg.use_ghost so all ablation
+    # variants share the same mask
+    eval_gw = ds.ghost_frac * extent
+    eparts, _ = partition_points(points, colors, cfg.n_parts,
+                                 ghost_width=eval_gw)
+    bpts = [p.points[p.n_owned:] for p in eparts if p.n_ghost]
+    b_ps, b_ss, b_frac = float("nan"), float("nan"), 0.0
+    if bpts:
+        bpts = np.concatenate(bpts)
+        _, bcov = render_views(
+            gt_gaussians(bpts, np.zeros_like(bpts)), cams, grid, K=cfg.K)
+        # tight mask: substantial boundary coverage only (no dilation —
+        # CPU-tier splats are already several pixels wide)
+        bmasks = np.stack([np.asarray(c) > 0.5 for c in bcov])
+        b_frac = float(bmasks.mean())
+        if bmasks.any():
+            b_ps = float(np.mean([
+                metrics.psnr(jnp.asarray(renders[v]), jnp.asarray(gt_imgs[v]),
+                             jnp.asarray(bmasks[v]))
+                for v in range(n_views)]))
+            b_ss = float(np.mean([
+                metrics.ssim(jnp.asarray(renders[v]), jnp.asarray(gt_imgs[v]),
+                             jnp.asarray(bmasks[v]))
+                for v in range(n_views)]))
+
+    return PipelineResult(
+        merged=merged, parts=trained, psnr=ps, ssim=ss, grad_sim=gs,
+        train_seconds=times, n_gaussians=int(merged.active.sum()),
+        gt_images=gt_imgs, renders=renders,
+        boundary_psnr=b_ps, boundary_ssim=b_ss, boundary_frac=b_frac,
+    )

@@ -1,0 +1,57 @@
+"""Single-device render path: project -> tile-assign -> gather -> kernel ->
+untile -> composite.  This is the building block for the trainer, merge, and
+ground-truth generation; the multi-device variant (sharding constraints at
+each stage) lives in core/distributed.py.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.cameras import Camera
+from repro.core.gaussians import Gaussians
+from repro.core.projection import project
+from repro.core.tiling import (
+    TileGrid,
+    assign_tiles,
+    gather_tile_features,
+    tile_origins,
+    untile_image,
+)
+from repro.kernels import rasterize_tiles
+
+
+class RenderOut(NamedTuple):
+    rgb: jax.Array        # (H, W, 3), background-composited
+    coverage: jax.Array   # (H, W) alpha coverage in [0, 1]
+
+
+def render_tiles(g: Gaussians, cam: Camera, grid: TileGrid, *, K: int = 64,
+                 impl: str = "auto"):
+    """-> (tiles (T, 4, th, tw), idx, score). Differentiable w.r.t. gaussians
+    (tile index lists are stop-gradiented: discrete assignment)."""
+    splats = project(g, cam)
+    idx, score = assign_tiles(splats, grid, K=K)
+    idx = lax.stop_gradient(idx)
+    score = lax.stop_gradient(score)
+    feats = gather_tile_features(splats, idx, score)
+    tiles = rasterize_tiles(
+        feats, tile_origins(grid),
+        tile_h=grid.tile_h, tile_w=grid.tile_w, impl=impl,
+    )
+    return tiles, idx, score
+
+
+def render(g: Gaussians, cam: Camera, grid: TileGrid, *, K: int = 64,
+           impl: str = "auto", bg: float = 1.0) -> RenderOut:
+    """Full-image render with background composite (paper bg is white)."""
+    tiles, _, _ = render_tiles(g, cam, grid, K=K, impl=impl)
+    img = untile_image(tiles, grid)                 # (H, W, 4)
+    cov = img[..., 3]
+    rgb = img[..., :3] + (1.0 - cov[..., None]) * bg
+    return RenderOut(rgb=rgb, coverage=cov)

@@ -1,0 +1,239 @@
+"""Per-partition 3D-GS trainer: per-group Adam + densify/clone/split/prune.
+
+Faithful to Kerbl et al. training dynamics, jit-stable on TPU (DESIGN.md §3):
+the gaussian buffer has *fixed capacity* with an ``active`` mask; densify
+writes children into free slots (budgeted, ``max_new`` per event) and prune
+clears the mask — no reallocation inside jit.  Densification pressure is the
+accumulated positional gradient norm, as in the reference.
+
+Every partition of the paper's pipeline runs one instance of this trainer on
+its own (owned + ghost) gaussians with its own masked loss; partitions never
+exchange gradients (paper §II step 5).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.cameras import Camera, select
+from repro.core.gaussians import Gaussians
+from repro.core.masking import gs_loss
+from repro.core.render import render
+from repro.core.tiling import TileGrid
+
+
+@dataclasses.dataclass(frozen=True)
+class GSTrainCfg:
+    # per-group LRs (3D-GS reference); lr_means is additionally scaled by the
+    # scene extent, as in the reference implementation
+    lr_means: float = 1.6e-4
+    lr_scales: float = 5e-3
+    lr_quats: float = 1e-3
+    lr_opacity: float = 5e-2
+    lr_colors: float = 2.5e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-15
+    lambda_dssim: float = 0.2
+    K: int = 64
+    tile_h: int = 8
+    tile_w: int = 16            # CPU default; production (TPU) uses 8x128
+    bg: float = 1.0             # white background (paper renders)
+    impl: str = "auto"
+    # densification
+    densify_grad_thresh: float = 5e-6
+    percent_dense: float = 0.01     # split/clone size boundary (x extent)
+    max_new: int = 512              # per densify event (static budget)
+    prune_opacity: float = 0.005
+    prune_scale: float = 0.5        # x extent: prune absurdly large splats
+    split_shrink: float = 1.6
+    # distributed-step options (core/distributed.py; §Perf GS hillclimb)
+    gather_mode: str = "f32"        # "f32" (paper baseline) | "split" (bf16)
+    strip_budget: float = 1.0       # <1: per-strip candidate prefilter
+
+
+class GSOptState(NamedTuple):
+    m: dict
+    v: dict
+    step: jax.Array
+    grad_accum: jax.Array    # (N,) accumulated positional grad norms
+    grad_count: jax.Array    # (N,)
+
+
+def init_opt(g: Gaussians) -> GSOptState:
+    tr = g.trainable()
+    zeros = lambda: jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), tr)
+    n = g.capacity
+    return GSOptState(zeros(), zeros(), jnp.zeros((), jnp.int32),
+                      jnp.zeros((n,), jnp.float32), jnp.zeros((n,), jnp.float32))
+
+
+def group_lrs(cfg: GSTrainCfg, extent: float) -> dict:
+    return {
+        "means": cfg.lr_means * extent,
+        "log_scales": cfg.lr_scales,
+        "quats": cfg.lr_quats,
+        "opacity_logit": cfg.lr_opacity,
+        "colors": cfg.lr_colors,
+    }
+
+
+def make_train_step(cfg: GSTrainCfg, grid: TileGrid, extent: float):
+    lrs = group_lrs(cfg, extent)
+
+    def loss_fn(tr, g: Gaussians, cam: Camera, gt, mask):
+        gg = g.with_trainable(tr)
+        out = render(gg, cam, grid, K=cfg.K, impl=cfg.impl, bg=cfg.bg)
+        return gs_loss(out.rgb, gt, mask, lambda_dssim=cfg.lambda_dssim)
+
+    def step(g: Gaussians, opt: GSOptState, cam: Camera, gt, mask=None):
+        loss, grads = jax.value_and_grad(loss_fn)(g.trainable(), g, cam, gt, mask)
+        step_i = opt.step + 1
+        bc1 = 1.0 - cfg.b1 ** step_i.astype(jnp.float32)
+        bc2 = 1.0 - cfg.b2 ** step_i.astype(jnp.float32)
+
+        def upd(name, p, gr, m, v):
+            gr = gr.astype(jnp.float32)
+            m = cfg.b1 * m + (1 - cfg.b1) * gr
+            v = cfg.b2 * v + (1 - cfg.b2) * gr * gr
+            d = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+            return (p - lrs[name] * d).astype(p.dtype), m, v
+
+        tr = g.trainable()
+        new_tr, new_m, new_v = {}, {}, {}
+        for k in tr:
+            new_tr[k], new_m[k], new_v[k] = upd(k, tr[k], grads[k],
+                                                opt.m[k], opt.v[k])
+        gnorm = jnp.linalg.norm(grads["means"].astype(jnp.float32), axis=-1)
+        new_opt = GSOptState(
+            m=new_m, v=new_v, step=step_i,
+            grad_accum=opt.grad_accum + gnorm,
+            grad_count=opt.grad_count + (gnorm > 0),
+        )
+        return g.with_trainable(new_tr), new_opt, loss
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# Densification (fixed-capacity, budgeted)
+# ---------------------------------------------------------------------------
+
+
+def densify_and_prune(g: Gaussians, opt: GSOptState, key, cfg: GSTrainCfg,
+                      extent: float):
+    """One densify event. Static shapes throughout: up to ``cfg.max_new``
+    sources act; children land in free slots found via fixed-size nonzero."""
+    cap = g.capacity
+    M = min(cfg.max_new, cap)
+    avg = opt.grad_accum / jnp.maximum(opt.grad_count, 1.0)
+    scales = jnp.exp(g.log_scales)
+    smax = scales.max(axis=-1)
+
+    hot = (avg > cfg.densify_grad_thresh) & g.active
+    is_split = hot & (smax > cfg.percent_dense * extent)
+
+    src_idx = jnp.nonzero(hot, size=M, fill_value=-1)[0]
+    free_idx = jnp.nonzero(~g.active, size=M, fill_value=-1)[0]
+    ok = (src_idx >= 0) & (free_idx >= 0)
+    # OOB dest indices are dropped by .at[...] mode="drop"
+    dest = jnp.where(ok, free_idx, cap)
+    src = jnp.where(ok, src_idx, 0)
+
+    src_split = is_split[src]
+    # split offset: sample along the gaussian's own shape (R @ (s * eps))
+    eps = jax.random.normal(key, (M, 3))
+    from repro.core.gaussians import quat_to_rotmat
+    R = quat_to_rotmat(g.quats[src])
+    offset = jnp.einsum("nij,nj->ni", R, jnp.exp(g.log_scales[src]) * eps)
+    offset = jnp.where(src_split[:, None], offset, 0.0)
+    shrink = jnp.where(src_split[:, None],
+                       jnp.log(cfg.split_shrink), 0.0)
+
+    child_means = g.means[src] + offset
+    child_ls = g.log_scales[src] - shrink
+
+    at = lambda arr, idx, val: arr.at[idx].set(val, mode="drop")
+    new = g._replace(
+        means=at(g.means, dest, child_means),
+        log_scales=at(g.log_scales, dest, child_ls),
+        quats=at(g.quats, dest, g.quats[src]),
+        opacity_logit=at(g.opacity_logit, dest, g.opacity_logit[src]),
+        colors=at(g.colors, dest, g.colors[src]),
+        active=at(g.active, dest, ok),
+        owner=at(g.owner, dest, g.owner[src]),
+    )
+    # split sources shrink in place (the "two children" of the reference:
+    # one stays in the source slot, one lands in the free slot)
+    upd_src = jnp.where(ok & src_split, src, cap)
+    new = new._replace(
+        means=new.means.at[upd_src].add(-offset, mode="drop"),
+        log_scales=new.log_scales.at[upd_src].add(-jnp.log(cfg.split_shrink),
+                                                  mode="drop"),
+    )
+
+    # prune: transparent or absurdly large
+    alpha = jax.nn.sigmoid(new.opacity_logit)
+    keep = (alpha > cfg.prune_opacity) & (jnp.exp(new.log_scales).max(-1)
+                                          < cfg.prune_scale * extent)
+    new = new._replace(active=new.active & keep)
+
+    # zero adam moments of written slots; reset densify stats
+    def zero_at(tree):
+        return jax.tree.map(lambda x: x.at[dest].set(0.0, mode="drop"), tree)
+
+    opt = GSOptState(
+        m=zero_at(opt.m), v=zero_at(opt.v), step=opt.step,
+        grad_accum=jnp.zeros_like(opt.grad_accum),
+        grad_count=jnp.zeros_like(opt.grad_count),
+    )
+    return new, opt
+
+
+def reset_opacity(g: Gaussians, ceiling: float = 0.01) -> Gaussians:
+    """Periodic opacity clamp (reference: counters floaters)."""
+    cap_logit = jnp.log(ceiling / (1 - ceiling))
+    return g._replace(opacity_logit=jnp.minimum(g.opacity_logit, cap_logit))
+
+
+# ---------------------------------------------------------------------------
+# Convenience host-loop trainer (examples / benchmarks / tests)
+# ---------------------------------------------------------------------------
+
+
+def fit_partition(g: Gaussians, cams: Camera, gts, masks, cfg: GSTrainCfg,
+                  *, steps: int, extent: float, key=None,
+                  densify_every: int = 0, densify_from: int = 100,
+                  log_every: int = 0, grid: Optional[TileGrid] = None):
+    """Train one partition for ``steps`` steps cycling over its camera set.
+
+    gts: (V, H, W, 3); masks: (V, H, W) bool or None.  Returns (g, losses).
+    """
+    if grid is None:
+        grid = TileGrid(cams.width, cams.height, cfg.tile_h, cfg.tile_w)
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    step = jax.jit(make_train_step(cfg, grid, extent))
+    densify = jax.jit(partial(densify_and_prune, cfg=cfg, extent=extent))
+    opt = init_opt(g)
+    n_views = gts.shape[0]
+    losses = []
+    for i in range(steps):
+        vi = i % n_views
+        cam = select(cams, vi)
+        mask = None if masks is None else masks[vi]
+        g, opt, loss = step(g, opt, cam, gts[vi], mask)
+        losses.append(float(loss))
+        if densify_every and i >= densify_from and (i + 1) % densify_every == 0:
+            key, sub = jax.random.split(key)
+            g, opt = densify(g, opt, sub)
+        if log_every and (i + 1) % log_every == 0:
+            print(f"  step {i+1:5d}  loss {losses[-1]:.4f} "
+                  f"active {int(g.active.sum())}")
+    return g, opt, losses

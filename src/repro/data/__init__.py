@@ -1,0 +1,6 @@
+"""Data substrate: analytic volumes, in-JAX isosurface extraction, synthetic
+token streams, deterministic sharded loaders."""
+
+from repro.data.volumes import VOLUMES, make_volume
+from repro.data.isosurface import extract_isosurface, point_cloud_for
+from repro.data.tokens import SyntheticTokens

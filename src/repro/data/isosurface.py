@@ -1,0 +1,104 @@
+"""In-JAX isosurface extraction (replaces the paper's ParaView step).
+
+Marching-cubes-style *edge-crossing* extraction: for every grid edge along
+x/y/z where the field crosses the iso value, emit the linearly-interpolated
+crossing point.  This yields the isosurface point cloud that seeds the
+Gaussians (paper §II step 1) — for splat initialisation a vertex cloud is
+exactly what is needed (the reference pipeline also discards connectivity).
+
+Fixed-capacity output (``max_points``) keeps the extractor jit-compatible;
+the host wrapper ``point_cloud_for`` picks the grid resolution that hits a
+requested point budget and subsamples deterministically.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import volumes as V
+
+
+@partial(jax.jit, static_argnames=("max_points",))
+def extract_isosurface(field, iso, *, max_points: int):
+    """field: (R, R, R); -> (points (max_points, 3) in [0,1]^3, count).
+
+    Points beyond ``count`` are filled with the last valid point (renderable
+    padding); count saturates at max_points.
+    """
+    R = field.shape[0]
+    f = field - iso
+
+    pts = []
+    valid = []
+    for ax in range(3):
+        a = jax.lax.slice_in_dim(f, 0, R - 1, axis=ax)
+        b = jax.lax.slice_in_dim(f, 1, R, axis=ax)
+        cross = (a * b) < 0
+        t = a / (a - b + 1e-30)                       # in (0,1) where cross
+        ii, jj, kk = jnp.meshgrid(*(jnp.arange(s, dtype=jnp.float32)
+                                    for s in a.shape), indexing="ij")
+        base = jnp.stack([ii, jj, kk], -1)
+        step = jnp.zeros((3,)).at[ax].set(1.0)
+        p = (base + t[..., None] * step + 0.5) / R
+        pts.append(p.reshape(-1, 3))
+        valid.append(cross.reshape(-1))
+    pts = jnp.concatenate(pts)
+    valid = jnp.concatenate(valid)
+    idx = jnp.nonzero(valid, size=max_points, fill_value=0)[0]
+    count = jnp.minimum(valid.sum(), max_points)
+    got = pts[idx]
+    # fill padding with the first valid point so padded splats overlap real ones
+    got = jnp.where((jnp.arange(max_points) < count)[:, None], got, got[0])
+    return got, count
+
+
+_RES_CACHE = {}
+
+
+def point_cloud_for(name: str, n_points: int, *, seed: int = 0):
+    """Extract ~n_points isosurface points from the named analytic volume.
+
+    -> (points (n, 3) float32, colors (n, 3) float32).  Deterministic.
+    Crossing count scales ~ R^2 x surface complexity; we search R once per
+    (name, n_points) and memoise.
+    """
+    key = (name, n_points)
+    if key not in _RES_CACHE:
+        # surface area heuristic: crossings ~ c * R^2; estimate c at R=64
+        field, iso = V.make_volume(name, 64)
+        f = field - iso
+        c = sum(
+            int((np.take(f, range(0, 63), axis=ax)
+                 * np.take(f, range(1, 64), axis=ax) < 0).sum())
+            for ax in range(3)
+        )
+        c = max(c, 1)
+        R = int(np.clip(np.sqrt(n_points / c) * 64, 16, 1024))
+        _RES_CACHE[key] = R
+    R = _RES_CACHE[key]
+    field, iso = V.make_volume(name, R)
+    f = field - iso
+    pts = []
+    for ax in range(3):
+        sl0 = [slice(None)] * 3
+        sl1 = [slice(None)] * 3
+        sl0[ax] = slice(0, R - 1)
+        sl1[ax] = slice(1, R)
+        a, b = f[tuple(sl0)], f[tuple(sl1)]
+        cross = (a * b) < 0
+        t = a / (a - b + 1e-30)
+        idx = np.argwhere(cross).astype(np.float32)
+        tt = t[cross][:, None]
+        step = np.zeros((1, 3), np.float32)
+        step[0, ax] = 1.0
+        pts.append((idx + tt * step + 0.5) / R)
+    pts = np.concatenate(pts).astype(np.float32)
+    rng = np.random.default_rng(seed)
+    if len(pts) > n_points:
+        sel = rng.choice(len(pts), n_points, replace=False)
+        pts = pts[sel]
+    return pts, V.height_colors(pts)

@@ -1,0 +1,3 @@
+"""Pallas TPU kernels (+ pure-jnp oracles) for perf-critical GS compute."""
+
+from repro.kernels.ops import rasterize_tiles, resolve_impl

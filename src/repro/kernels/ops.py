@@ -1,0 +1,67 @@
+"""Jit'd public entry points for the rasterizer kernel.
+
+``rasterize_tiles(feats, origins, tile_h=, tile_w=, impl=)``:
+
+  impl="pallas"   pl.pallas_call kernels (custom_vjp: analytic backward)
+  impl="ref"      pure-jnp oracle (jax autodiff) — CPU training path
+  impl="interpret" pallas kernels in interpret mode (kernel-body validation
+                  on CPU; used by tests)
+  impl="auto"     "pallas" on TPU, "ref" otherwise
+
+All impls share semantics exactly (see kernels/ref.py) so swapping impl never
+changes training math beyond float-associativity noise.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import rasterize as rk
+from repro.kernels import ref as ref_impl
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def _rasterize_pallas(feats, origins, tile_h, tile_w, interpret):
+    return rk.rasterize_fwd(feats, origins, tile_h=tile_h, tile_w=tile_w,
+                            interpret=interpret)
+
+
+def _pallas_fwd(feats, origins, tile_h, tile_w, interpret):
+    out = rk.rasterize_fwd(feats, origins, tile_h=tile_h, tile_w=tile_w,
+                           interpret=interpret)
+    return out, (feats, origins, out)
+
+
+def _pallas_bwd(tile_h, tile_w, interpret, res, gout):
+    feats, origins, out = res
+    gfeats = rk.rasterize_bwd(feats, origins, out, gout,
+                              tile_h=tile_h, tile_w=tile_w,
+                              interpret=interpret)
+    return gfeats.astype(feats.dtype), jnp.zeros_like(origins)
+
+
+_rasterize_pallas.defvjp(_pallas_fwd, _pallas_bwd)
+
+
+def resolve_impl(impl: str) -> str:
+    if impl != "auto":
+        return impl
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def rasterize_tiles(feats, origins, *, tile_h: int, tile_w: int,
+                    impl: str = "auto"):
+    """feats (T, K, F) -> (T, 4, th, tw) [r, g, b, coverage]. Differentiable
+    w.r.t. feats under every impl."""
+    impl = resolve_impl(impl)
+    if impl == "ref":
+        return ref_impl.rasterize_tiles_ref(feats, origins,
+                                            tile_h=tile_h, tile_w=tile_w)
+    if impl == "pallas":
+        return _rasterize_pallas(feats, origins, tile_h, tile_w, False)
+    if impl == "interpret":
+        return _rasterize_pallas(feats, origins, tile_h, tile_w, True)
+    raise ValueError(impl)

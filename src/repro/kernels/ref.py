@@ -1,0 +1,97 @@
+"""Pure-jnp oracle for the tile rasterizer (differentiable, CPU-fast).
+
+Math is *bit-identical* in spirit to the Pallas kernel (`rasterize.py`):
+front-to-back alpha compositing of the per-tile top-K splat lists, with the
+3D-GS reference clamps (alpha <= 0.99, alpha < 1/255 skipped, sigma >= 0).
+No early termination — the GPU reference's T < 1e-4 break is replaced by
+simply continuing to accumulate negligible terms (branchless; identical to the
+TPU kernel), so oracle and kernel agree to float tolerance.
+
+Two implementations:
+  * ``rasterize_tiles_ref``      — lax.scan over K (O(pixels) live memory);
+                                   this is the CPU *training* path.
+  * ``rasterize_tiles_unrolled`` — fully vectorised cumprod over K (used by
+                                   tests as an independent second oracle).
+
+Output per tile: (T, 4, th, tw) float32 = [r, g, b, coverage], coverage =
+1 - prod(1 - alpha).  Composite over a background outside:
+``img_rgb = out_rgb + (1 - coverage) * bg``.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+ALPHA_MAX = 0.99
+ALPHA_MIN = 1.0 / 255.0
+
+
+def _pixel_centers(origins, tile_h: int, tile_w: int):
+    """origins: (T, 2) (x, y) -> px, py: (T, th, tw) pixel-center coords."""
+    jx = jnp.arange(tile_w, dtype=jnp.float32) + 0.5
+    iy = jnp.arange(tile_h, dtype=jnp.float32) + 0.5
+    px = origins[:, 0, None, None] + jx[None, None, :]
+    py = origins[:, 1, None, None] + iy[None, :, None]
+    px = jnp.broadcast_to(px, (origins.shape[0], tile_h, tile_w))
+    py = jnp.broadcast_to(py, (origins.shape[0], tile_h, tile_w))
+    return px, py
+
+
+def _splat_alpha(f, px, py):
+    """f: (..., F) feature rows broadcast against pixel grids px/py."""
+    dx = px - f[..., 0]
+    dy = py - f[..., 1]
+    sigma = 0.5 * (f[..., 2] * dx * dx + f[..., 4] * dy * dy) + f[..., 3] * dx * dy
+    g = jnp.exp(-jnp.maximum(sigma, 0.0))
+    alpha = jnp.minimum(f[..., 8] * g, ALPHA_MAX)
+    return jnp.where(alpha < ALPHA_MIN, 0.0, alpha)
+
+
+@partial(jax.jit, static_argnames=("tile_h", "tile_w"))
+def rasterize_tiles_ref(feats, origins, *, tile_h: int, tile_w: int):
+    """feats: (T, K, F) float32; origins: (T, 2) -> (T, 4, th, tw)."""
+    T, K, F = feats.shape
+    px, py = _pixel_centers(origins, tile_h, tile_w)   # (T, th, tw)
+
+    def body(carry, fk):
+        trans, r, g, b = carry                          # each (T, th, tw)
+        alpha = _splat_alpha(fk[:, None, None, :], px, py)
+        w = trans * alpha
+        return (
+            trans * (1.0 - alpha),
+            r + w * fk[:, 5, None, None],
+            g + w * fk[:, 6, None, None],
+            b + w * fk[:, 7, None, None],
+        ), None
+
+    z = jnp.zeros((T, tile_h, tile_w), jnp.float32)
+    init = (jnp.ones_like(z), z, z, z)
+    # scan over the K axis: feats (T, K, F) -> iterate fk (T, F)
+    (trans, r, g, b), _ = lax.scan(body, init, feats.transpose(1, 0, 2))
+    return jnp.stack([r, g, b, 1.0 - trans], axis=1)
+
+
+@partial(jax.jit, static_argnames=("tile_h", "tile_w"))
+def rasterize_tiles_unrolled(feats, origins, *, tile_h: int, tile_w: int):
+    """Independent second oracle: vectorised over K with an exclusive cumprod."""
+    T, K, F = feats.shape
+    px, py = _pixel_centers(origins, tile_h, tile_w)
+    alpha = _splat_alpha(
+        feats[:, :, None, None, :], px[:, None], py[:, None]
+    )                                                   # (T, K, th, tw)
+    keep = 1.0 - alpha
+    # exclusive cumulative product along K: T_k = prod_{j<k} (1 - alpha_j)
+    trans = jnp.cumprod(keep, axis=1) / jnp.maximum(keep, 1e-12)
+    # exact exclusive form (robust to keep==0): shift instead of divide
+    trans = jnp.concatenate(
+        [jnp.ones((T, 1, tile_h, tile_w)), jnp.cumprod(keep, axis=1)[:, :-1]],
+        axis=1,
+    )
+    w = trans * alpha                                   # (T, K, th, tw)
+    rgb = jnp.einsum("tkhw,tkc->tchw", w, feats[:, :, 5:8])
+    cov = 1.0 - jnp.prod(keep, axis=1)
+    return jnp.concatenate([rgb, cov[:, None]], axis=1)

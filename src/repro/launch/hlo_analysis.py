@@ -1,0 +1,449 @@
+"""Post-optimization HLO analyzer for the dry-run roofline.
+
+``compiled.cost_analysis()`` visits every instruction ONCE — a ``lax.scan``
+over 56 layers contributes a single body's flops (verified; see
+EXPERIMENTS.md §Dry-run).  For a roofline that would undercount compute by
+the layer count, so we parse ``compiled.as_text()`` (the SPMD-partitioned,
+per-device module) ourselves:
+
+  * while bodies are multiplied by XLA's ``known_trip_count``;
+  * flops: dot (2*M*N*K from shapes + contracting dims), convolution
+    (2 * out_elems * kernel_elems / out_features), elementwise and reduce
+    ops at 1 flop/element (dots dominate every model here);
+  * HBM bytes: operand + output bytes of *top-level* (fusion-boundary) ops —
+    fusion internals are VMEM-resident by construction.  Slice-aware:
+    dynamic-slice / gather read (and dynamic-update-slice writes) count the
+    *slice*, not the full buffer — otherwise every scan iteration would be
+    charged the whole stacked parameter array;
+  * collectives: per-op operand/output bytes, ring-model wire bytes
+    (all-gather -> out-in, all-reduce -> 2x(g-1)/g, reduce-scatter/
+    all-to-all/collective-permute -> 1x operand), replica-group size, and
+    whether any group spans the pod axis (must be NO for the GS pipeline —
+    paper partitions are independent).
+
+Scheduled HLO prints operands as bare ``%name`` (no shapes), so we build a
+module-wide symbol table (instruction -> shape) in a first pass and resolve
+operand sizes through it.  Everything is per-device (the module is already
+partitioned).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+SHAPE_RE = re.compile(r"(%s)\[([0-9,]*)\]" % "|".join(_DTYPE_BYTES))
+DEF_RE = re.compile(r"^\s*(ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*)$")
+OPCODE_RE = re.compile(r"\s([a-z][a-z0-9\-]*)\(")
+OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+CALLS_RE = re.compile(r"calls=%?([\w\.\-]+)")
+BODY_RE = re.compile(r"body=%?([\w\.\-]+)")
+TRIP_RE = re.compile(r"known_trip_count[^0-9]*(\d+)")
+GROUPS_RE = re.compile(r"replica_groups=\{(\{[^}]*\}(?:,\{[^}]*\})*)\}")
+GROUPS_IOTA_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([0-9,]+)\](?:T\(([0-9,]+)\))?")
+HEADER_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->\s*.*\{\s*$")
+
+COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+#: ops with no flops and no real HBM traffic of their own
+_FREE_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+             "bitcast", "after-all", "iota", "partition-id", "replica-id",
+             "reshape"}
+
+#: ops looked through when tracing fusion-internal dataflow.  ``convert`` is
+#: here deliberately: XLA:CPU materialises whole-buffer f32<->bf16 round
+#: trips around in-place updates (measured 978 GB/step on minicpm's 12 GB
+#: remat stash) that XLA:TPU performs natively in bf16 — dtype casts are
+#: charged at their *consumers'* access granularity, which is the TPU
+#: fusion semantics this roofline targets.
+_TRANSPARENT = {"bitcast", "reshape", "get-tuple-element", "tuple", "copy",
+                "convert"}
+
+#: operand-sparse readers: charge the *output* (slice) not the operand
+_SLICE_READERS = {"dynamic-slice", "gather", "slice"}
+
+
+def _shape_elems(dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+@dataclasses.dataclass
+class Sym:
+    bytes: int
+    elems: int
+    dims: Optional[List[int]]
+
+
+@dataclasses.dataclass
+class Inst:
+    name: str
+    opcode: str
+    operands: List[str]
+    line: str
+    is_root: bool
+
+
+@dataclasses.dataclass
+class CollectiveOp:
+    op: str
+    operand_bytes: int
+    output_bytes: int
+    wire_bytes: int
+    group_size: int
+    spans_pod: bool
+    count: int = 1
+
+
+@dataclasses.dataclass
+class HloCosts:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collectives: List[CollectiveOp] = dataclasses.field(default_factory=list)
+
+    @property
+    def collective_wire_bytes(self) -> float:
+        return sum(c.wire_bytes * c.count for c in self.collectives)
+
+    @property
+    def pod_spanning_bytes(self) -> float:
+        return sum(c.wire_bytes * c.count for c in self.collectives
+                   if c.spans_pod)
+
+
+def _parse_groups(line: str, pod_size: int) -> Tuple[int, bool]:
+    m = GROUPS_RE.search(line)
+    if m:
+        groups = m.group(1).split("},{")
+        ids0 = [int(x) for x in groups[0].strip("{}").split(",") if x]
+        size = len(ids0)
+        spans = False
+        if pod_size:
+            for g in groups:
+                ids = [int(x) for x in g.strip("{}").split(",") if x]
+                if len({i // pod_size for i in ids}) > 1:
+                    spans = True
+                    break
+        return size, spans
+    m = GROUPS_IOTA_RE.search(line)
+    if m:
+        import numpy as np
+        n_groups, group_size = int(m.group(1)), int(m.group(2))
+        dims = [int(x) for x in m.group(3).split(",")]
+        perm = ([int(x) for x in m.group(4).split(",")]
+                if m.group(4) else list(range(len(dims))))
+        ids = np.arange(int(np.prod(dims))).reshape(dims)
+        ids = ids.transpose(perm).reshape(n_groups, group_size)
+        spans = False
+        if pod_size:
+            spans = any(len({int(i) // pod_size for i in g}) > 1 for g in ids)
+        return group_size, spans
+    return 1, False
+
+
+def _wire_bytes(op: str, operand_b: int, output_b: int, group: int) -> int:
+    if group <= 1:
+        return 0
+    if op == "all-gather":
+        return max(output_b - operand_b, 0)
+    if op == "all-reduce":
+        return 2 * operand_b * (group - 1) // max(group, 1)
+    return operand_b   # reduce-scatter / all-to-all / collective-permute
+
+
+class HloModule:
+    """Minimal parse of a post-optimization (scheduled) HLO text dump."""
+
+    def __init__(self, text: str, *, pod_size: int = 0):
+        self.pod_size = pod_size
+        raw: Dict[str, List[str]] = {}
+        self.entry: Optional[str] = None
+        cur = None
+        for rawline in text.splitlines():
+            ls = rawline.strip()
+            if cur is None:
+                m = HEADER_RE.match(ls)
+                if m and " = " not in ls:
+                    cur = m.group(2)
+                    raw[cur] = []
+                    if m.group(1):
+                        self.entry = cur
+                continue
+            if ls.startswith("}"):
+                cur = None
+            elif ls:
+                raw[cur].append(ls)
+        if self.entry is None:
+            for cand in ("main", "main.0"):
+                if cand in raw:
+                    self.entry = cand
+
+        # pass 1: parse instructions + module-wide symbol table
+        self.symbols: Dict[str, Sym] = {}
+        self.insts: Dict[str, List[Inst]] = {}
+        for comp, lines in raw.items():
+            out = []
+            for line in lines:
+                dm = DEF_RE.match(line)
+                if not dm:
+                    continue
+                is_root, name, rest = bool(dm.group(1)), dm.group(2), dm.group(3)
+                om = OPCODE_RE.search(" " + rest)
+                if not om:
+                    continue
+                opcode = om.group(1)
+                head = rest[: max(om.start() - 1, 0)]
+                shapes = SHAPE_RE.findall(head)
+                if shapes:
+                    b = sum(_DTYPE_BYTES[t] * _shape_elems(d)
+                            for t, d in shapes)
+                    e = sum(_shape_elems(d) for _, d in shapes)
+                    dims = [int(x) for x in shapes[0][1].split(",") if x]
+                    self.symbols[name] = Sym(b, e, dims)
+                out.append(Inst(name, opcode,
+                                self._parse_operands(rest, om.start() - 1),
+                                line, is_root))
+            self.insts[comp] = out
+        self._memo: Dict[str, HloCosts] = {}
+
+    @staticmethod
+    def _parse_operands(rest: str, op_start: int) -> List[str]:
+        tail = rest[op_start:]
+        depth, end = 0, len(tail)
+        for i, ch in enumerate(tail):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        return OPERAND_RE.findall(tail[:end])
+
+    def _sym(self, name: str) -> Sym:
+        return self.symbols.get(name, Sym(0, 0, None))
+
+    # ------------------------------------------------------------------
+    # Fusion I/O: slice-aware reads/writes
+    # ------------------------------------------------------------------
+
+    def _fusion_io_bytes(self, comp: str, operand_names: List[str],
+                         out_bytes: int) -> Tuple[int, int]:
+        insts = self.insts.get(comp, [])
+        by_name = {i.name: i for i in insts}
+        params: Dict[int, str] = {}
+        consumers: Dict[str, List[Inst]] = {}
+        root: Optional[Inst] = None
+        for inst in insts:
+            if inst.opcode == "parameter":
+                pm = re.search(r"parameter\((\d+)\)", inst.line)
+                if pm:
+                    params[int(pm.group(1))] = inst.name
+            else:
+                for o in inst.operands:
+                    consumers.setdefault(o, []).append(inst)
+            if inst.is_root:
+                root = inst
+
+        def effective_consumers(name: str, depth: int = 0) -> List[Inst]:
+            """Consumers, looking through pure layout ops (bitcast & co)."""
+            out: List[Inst] = []
+            for c in consumers.get(name, ()):
+                if c.opcode in _TRANSPARENT and depth < 8:
+                    out += effective_consumers(c.name, depth + 1)
+                else:
+                    out.append(c)
+            return out
+
+        read = 0
+        for idx, pname in params.items():
+            if idx >= len(operand_names):
+                continue
+            full = self._sym(operand_names[idx]).bytes
+            got = 0
+            sliced = True
+            for c in effective_consumers(pname):
+                if c.opcode in _SLICE_READERS:
+                    got += self._sym(c.name).bytes
+                elif c.opcode == "dynamic-update-slice":
+                    # in-place update of an aliased buffer: the old buffer is
+                    # not re-read; charge the update-sized region
+                    got += (self._sym(c.operands[1]).bytes
+                            if len(c.operands) > 1 else full)
+                else:
+                    sliced = False
+                    break
+            read += min(full, got) if sliced else full
+
+        def resolve(name: str, depth: int = 0) -> Optional[Inst]:
+            inst = by_name.get(name)
+            while (inst is not None and inst.opcode in ("bitcast", "reshape",
+                                                        "copy", "convert")
+                   and inst.operands and depth < 8):
+                inst = by_name.get(inst.operands[0])
+                depth += 1
+            return inst
+
+        def elem_write(name: str) -> int:
+            inst = resolve(name)
+            if inst is None:
+                return self._sym(name).bytes
+            if inst.opcode == "dynamic-update-slice" and len(inst.operands) > 1:
+                return self._sym(inst.operands[1]).bytes
+            return self._sym(inst.name).bytes
+
+        write = out_bytes
+        if root is not None:
+            r = resolve(root.name) or root
+            if r.opcode == "dynamic-update-slice":
+                write = elem_write(r.name)
+            elif r.opcode == "tuple":
+                write = sum(elem_write(o) for o in r.operands)
+        return read, write
+
+    # ------------------------------------------------------------------
+
+    def _inst_costs(self, inst: Inst, costs: HloCosts, top_level: bool):
+        opcode, line = inst.opcode, inst.line
+        if opcode in _FREE_OPS:
+            return
+        sym = self._sym(inst.name)
+        operand_b = sum(self._sym(o).bytes for o in inst.operands)
+
+        base = opcode[:-6] if opcode.endswith("-start") else opcode
+        if base in COLLECTIVES:
+            group, spans = _parse_groups(line, self.pod_size)
+            costs.collectives.append(CollectiveOp(
+                op=base, operand_bytes=operand_b, output_bytes=sym.bytes,
+                wire_bytes=_wire_bytes(base, operand_b, sym.bytes, group),
+                group_size=group, spans_pod=spans,
+            ))
+            if top_level:
+                costs.hbm_bytes += operand_b + sym.bytes
+            return
+        if opcode.endswith("-done"):
+            return
+
+        if opcode == "dot":
+            contract = 1
+            cm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", line)
+            lhs = self._sym(inst.operands[0]) if inst.operands else None
+            if cm and lhs and lhs.dims is not None:
+                for d in (cm.group(1).split(",") if cm.group(1) else []):
+                    contract *= lhs.dims[int(d)]
+            costs.flops += 2.0 * sym.elems * contract
+        elif opcode == "convolution":
+            rhs = (self._sym(inst.operands[1])
+                   if len(inst.operands) > 1 else None)
+            o_size = 1
+            m = re.search(r"dim_labels=\w+_(\w+)->", line)
+            if m and rhs and rhs.dims is not None:
+                for i, ch in enumerate(m.group(1)):
+                    if ch == "o" and i < len(rhs.dims):
+                        o_size = rhs.dims[i]
+            rhs_elems = rhs.elems if rhs else 1
+            costs.flops += 2.0 * sym.elems * (rhs_elems / max(o_size, 1))
+        elif opcode in ("fusion", "while", "conditional", "call",
+                        "custom-call"):
+            return  # handled via recursion in _comp_costs
+        else:
+            costs.flops += float(sym.elems)
+
+        if top_level:
+            if opcode in _SLICE_READERS:
+                costs.hbm_bytes += 2 * sym.bytes
+            elif opcode == "dynamic-update-slice":
+                upd = (self._sym(inst.operands[1]).bytes
+                       if len(inst.operands) > 1 else sym.bytes)
+                costs.hbm_bytes += 2 * upd
+            elif opcode == "scatter":
+                upd = (self._sym(inst.operands[2]).bytes
+                       if len(inst.operands) > 2 else sym.bytes)
+                costs.hbm_bytes += 2 * upd
+            else:
+                costs.hbm_bytes += operand_b + sym.bytes
+
+    def _comp_costs(self, name: str, top_level: bool) -> HloCosts:
+        key = f"{name}:{top_level}"
+        if key in self._memo:
+            return self._memo[key]
+        costs = HloCosts()
+        for inst in self.insts.get(name, ()):
+            self._inst_costs(inst, costs, top_level)
+            if inst.opcode == "fusion":
+                cm = CALLS_RE.search(inst.line)
+                if cm:
+                    sub = self._comp_costs(cm.group(1), False)
+                    costs.flops += sub.flops
+                    costs.collectives += [dataclasses.replace(c)
+                                          for c in sub.collectives]
+                    if top_level:
+                        r, w = self._fusion_io_bytes(
+                            cm.group(1), inst.operands,
+                            self._sym(inst.name).bytes)
+                        costs.hbm_bytes += r + w
+            elif inst.opcode == "while":
+                bm = BODY_RE.search(inst.line)
+                tm = TRIP_RE.search(inst.line)
+                trip = int(tm.group(1)) if tm else 1
+                if bm:
+                    sub = self._comp_costs(bm.group(1), top_level)
+                    costs.flops += sub.flops * trip
+                    costs.hbm_bytes += sub.hbm_bytes * trip
+                    for c in sub.collectives:
+                        cc = dataclasses.replace(c)
+                        cc.count = c.count * trip
+                        costs.collectives.append(cc)
+            elif inst.opcode in ("call", "conditional", "custom-call"):
+                cm = re.search(
+                    r"(?:to_apply|called_computations)=\{?%?([\w\.\-]+)",
+                    inst.line)
+                if cm and cm.group(1) in self.insts:
+                    sub = self._comp_costs(cm.group(1), top_level)
+                    costs.flops += sub.flops
+                    costs.hbm_bytes += sub.hbm_bytes
+                    costs.collectives += [dataclasses.replace(c)
+                                          for c in sub.collectives]
+        self._memo[key] = costs
+        return costs
+
+    def entry_costs(self) -> HloCosts:
+        assert self.entry is not None, "no ENTRY computation found"
+        return self._comp_costs(self.entry, True)
+
+
+def analyze(compiled_text: str, *, pod_size: int = 0) -> dict:
+    """-> JSON-friendly cost summary of a partitioned HLO module."""
+    mod = HloModule(compiled_text, pod_size=pod_size)
+    c = mod.entry_costs()
+    per_op: Dict[str, dict] = {}
+    for col in c.collectives:
+        d = per_op.setdefault(col.op, {"count": 0, "wire_bytes": 0.0,
+                                       "operand_bytes": 0.0, "max_group": 0})
+        d["count"] += col.count
+        d["wire_bytes"] += col.wire_bytes * col.count
+        d["operand_bytes"] += col.operand_bytes * col.count
+        d["max_group"] = max(d["max_group"], col.group_size)
+    return {
+        "flops": c.flops,
+        "hbm_bytes": c.hbm_bytes,
+        "collective_wire_bytes": c.collective_wire_bytes,
+        "pod_spanning_bytes": c.pod_spanning_bytes,
+        "collectives": per_op,
+        "n_collective_sites": len(c.collectives),
+    }

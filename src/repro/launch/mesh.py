@@ -1,0 +1,26 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (never module-level constants) so importing this module
+never touches jax device state — required because the dry-run forces 512
+host devices while tests/benches must see 1 (assignment, MULTI-POD DRY-RUN
+step 1).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape, axes):
+    """Arbitrary mesh (elastic restore targets, tests)."""
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def single_device_mesh():
+    return jax.make_mesh((1, 1), ("data", "model"))

@@ -1,0 +1,92 @@
+"""Serving driver: batched prefill + decode loop (CLI).
+
+  python -m repro.launch.serve --arch qwen1.5-4b --smoke --batch 4 \
+      --prompt-len 32 --gen 16
+
+Serves a batch of synthetic prompts: one prefill step builds the KV caches,
+then greedy decode streams tokens.  The same step functions are what the
+dry-run lowers for decode_32k / long_500k on the production mesh.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-4b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    from repro.configs import get_smoke, get_spec
+    from repro.models import init_params, make_decode_step, make_prefill_step
+    from repro.models.steps import cache_len, cache_specs
+
+    spec = get_smoke(args.arch) if args.smoke else get_spec(args.arch)
+    print(f"[serve] arch={spec.name} params={spec.param_count():,}")
+    params = init_params(spec, jax.random.PRNGKey(args.seed))
+
+    B, S = args.batch, args.prompt_len
+    rng = jax.random.PRNGKey(args.seed + 1)
+    batch = {"tokens": jax.random.randint(rng, (B, S), 0, spec.vocab,
+                                          jnp.int32)}
+    if spec.family == "encdec":
+        batch["frames"] = jax.random.normal(
+            rng, (B, S, spec.frontend_dim), jnp.bfloat16)
+    if spec.family == "vlm":
+        batch = {
+            "patches": jax.random.normal(
+                rng, (B, spec.n_prefix_tokens, spec.frontend_dim),
+                jnp.bfloat16),
+            "tokens": batch["tokens"][:, : max(S - spec.n_prefix_tokens, 1)],
+        }
+
+    prefill = jax.jit(make_prefill_step(spec, kv_chunk=min(S, 128)))
+    decode = jax.jit(make_decode_step(spec))
+
+    t0 = time.perf_counter()
+    logits, _prefill_caches = prefill(params, batch)
+    logits.block_until_ready()
+    t_prefill = time.perf_counter() - t0
+    next_tok = jnp.argmax(logits[..., : spec.vocab], axis=-1).astype(jnp.int32)
+
+    # fresh fixed-size decode cache (prompt replay then generation)
+    total = S + args.gen + 1
+    Lc = cache_len(spec, total)
+    caches = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                          cache_specs(spec, B, Lc))
+    toks = batch["tokens"]
+    out_tokens = []
+    t0 = time.perf_counter()
+    pos = 0
+    for i in range(toks.shape[1]):          # replay prompt through the cache
+        tok, caches = decode(params, caches, toks[:, i:i + 1], jnp.int32(pos))
+        pos += 1
+    for i in range(args.gen):               # generate
+        tok, caches = decode(params, caches, tok, jnp.int32(pos))
+        out_tokens.append(np.asarray(tok[:, 0]))
+        pos += 1
+    jax.block_until_ready(tok)
+    t_decode = time.perf_counter() - t0
+
+    gen = np.stack(out_tokens, 1)
+    print(f"[serve] prefill {B}x{S}: {t_prefill*1e3:.1f}ms   "
+          f"decode {args.gen + toks.shape[1]} steps: {t_decode*1e3:.1f}ms "
+          f"({t_decode/(args.gen+toks.shape[1])*1e3:.1f}ms/tok)")
+    print(f"[serve] sample generations (token ids): {gen[:2, :8].tolist()}")
+    assert int(gen.max()) < spec.vocab
+    print("[serve] ok")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+from repro.models.spec import ModelSpec, MoECfg, SSMCfg
+from repro.models.params import init_params, param_specs, param_shardings, param_pspecs
+from repro.models.steps import (
+    SHAPES,
+    TrainCfg,
+    make_train_step,
+    make_prefill_step,
+    make_decode_step,
+    input_specs,
+    input_pspecs,
+    cache_specs,
+    cache_pspecs,
+    init_opt_state,
+    opt_state_specs,
+    opt_state_shardings,
+)

@@ -1,0 +1,230 @@
+"""Model forward passes: train/prefill forward, single-token decode, enc-dec.
+
+The layer stack is a ``lax.scan`` over *superblocks* (see spec.py): each
+superblock applies ``period`` slots whose types (attention / mamba / MLP / MoE)
+are static Python, so heterogeneous architectures (Jamba) compile to one small
+scanned HLO body.  Remat wraps the superblock body.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers as L
+from repro.models.spec import ModelSpec
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+
+def sinusoidal_pe(positions, d_model: int, dtype=jnp.float32):
+    """positions: (S,) -> (S, d_model) fixed sinusoidal embeddings."""
+    half = d_model // 2
+    freqs = jnp.exp(-jnp.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[:, None] * freqs[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+def embed_tokens(spec: ModelSpec, params, tokens, positions=None):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if spec.name.startswith("paligemma"):
+        x = x * jnp.asarray(spec.d_model**0.5, x.dtype)  # gemma embed scaling
+    if spec.rope_theta == 0.0 and positions is not None:
+        # no RoPE (whisper): absolute sinusoidal positions on the decoder side
+        x = x + sinusoidal_pe(positions, spec.d_model, x.dtype)[None]
+    return L.constrain_batch(x)
+
+
+def lm_logits(spec: ModelSpec, params, x):
+    if spec.tie_embeddings:
+        return x @ params["embed"].T
+    return x @ params["head"]
+
+
+def vocab_mask_bias(spec: ModelSpec, dtype=jnp.float32):
+    """Additive bias masking padded vocab entries out of the softmax."""
+    idx = jnp.arange(spec.padded_vocab)
+    return jnp.where(idx < spec.vocab, 0.0, L.NEG_INF).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Superblock bodies
+# ---------------------------------------------------------------------------
+
+
+def _apply_slot_train(spec: ModelSpec, slot: int, x, sp, positions, prefix_len,
+                      kv_chunk, want_cache, enc_h=None):
+    """One slot (layer) of a superblock, training/prefill mode.
+
+    Returns (x, aux_loss, cache_or_None).
+    """
+    aux = jnp.float32(0.0)
+    cache = None
+    if spec.is_attn_slot(slot):
+        h = L.apply_norm(spec, x, sp["ln_attn"])
+        o, kv = L.attention_block(
+            spec, h, sp["attn"], positions=positions, prefix_len=prefix_len,
+            kv_chunk=kv_chunk,
+        )
+        if want_cache:
+            cache = {"k": kv[0], "v": kv[1]}
+        x = x + o
+        if "cross" in sp:
+            assert enc_h is not None
+            B, Se, _ = enc_h.shape
+            Hkv, hd = spec.padded_n_kv, spec.hd
+            ck = (enc_h @ sp["cross"]["wk"]).reshape(B, Se, Hkv, hd)
+            cv = (enc_h @ sp["cross"]["wv"]).reshape(B, Se, Hkv, hd)
+            h = L.apply_norm(spec, x, sp["ln_cross"])
+            x = x + L.cross_attention_block(spec, h, sp["cross"], (ck, cv))
+            if want_cache:
+                cache = dict(cache or {}, cross_k=ck, cross_v=cv)
+    else:
+        h = L.apply_norm(spec, x, sp["ln_ssm"])
+        o, ssm_state = L.mamba2_block(spec, h, sp["ssm"])
+        if want_cache:
+            cache = {"ssm": ssm_state}
+        x = x + o
+    if "moe" in sp:
+        h = L.apply_norm(spec, x, sp["ln_mlp"])
+        o, aux = L.moe_block(spec, h, sp["moe"])
+        x = x + o
+    elif "mlp" in sp:
+        h = L.apply_norm(spec, x, sp["ln_mlp"])
+        x = x + L.mlp_block(spec, h, sp["mlp"])
+    return x, aux, cache
+
+
+def decoder_forward(
+    spec: ModelSpec,
+    params,
+    x,
+    *,
+    positions,
+    prefix_len: int = 0,
+    kv_chunk: int = 1024,
+    remat: bool = True,
+    want_cache: bool = False,
+    enc_h=None,
+):
+    """Run the decoder stack. x: (B, S, D) embedded inputs.
+
+    Returns (hidden (B,S,D), aux_loss, caches) — caches stacked per slot over
+    superblocks when want_cache.
+    """
+
+    def superblock(x, sb_params):
+        # re-pin batch sharding every superblock: fsdp weight shardings
+        # otherwise pull activations into replication (see constrain_batch)
+        x = L.constrain_batch(x)
+        aux_total = jnp.float32(0.0)
+        caches = {}
+        for s in range(spec.period):
+            x, aux, cache = _apply_slot_train(
+                spec, s, x, sb_params[f"slot{s}"], positions, prefix_len,
+                kv_chunk, want_cache, enc_h,
+            )
+            aux_total = aux_total + aux
+            if cache is not None:
+                caches[f"slot{s}"] = cache
+        return x, (aux_total, caches)
+
+    body = jax.checkpoint(superblock) if remat else superblock
+
+    def scan_fn(carry, sb_params):
+        return body(carry, sb_params)
+
+    x, (aux, caches) = lax.scan(scan_fn, x, params["sb"])
+    x = L.apply_norm(spec, x, params["final_norm"])
+    return x, aux.sum(), caches
+
+
+def _apply_slot_decode(spec: ModelSpec, slot: int, x, sp, cache, pos):
+    new_cache = cache
+    if spec.is_attn_slot(slot):
+        h = L.apply_norm(spec, x, sp["ln_attn"])
+        self_cache = {"k": cache["k"], "v": cache["v"]}
+        o, upd = L.attention_decode_block(spec, h, sp["attn"], self_cache, pos)
+        new_cache = dict(cache, **upd)
+        x = x + o
+        if "cross" in sp:
+            h = L.apply_norm(spec, x, sp["ln_cross"])
+            x = x + L.cross_attention_block(
+                spec, h, sp["cross"], (cache["cross_k"], cache["cross_v"])
+            )
+    else:
+        h = L.apply_norm(spec, x, sp["ln_ssm"])
+        o, new_cache = L.mamba2_decode_block(spec, h, sp["ssm"], cache)
+        x = x + o
+    if "moe" in sp:
+        h = L.apply_norm(spec, x, sp["ln_mlp"])
+        o, _ = L.moe_decode_block(spec, h, sp["moe"])
+        x = x + o
+    elif "mlp" in sp:
+        h = L.apply_norm(spec, x, sp["ln_mlp"])
+        x = x + L.mlp_block(spec, h, sp["mlp"])
+    return x, new_cache
+
+
+def decoder_decode(spec: ModelSpec, params, x, caches, pos):
+    """Single-token decode. x: (B, 1, D); caches: per-slot stacked trees.
+
+    Returns (hidden (B,1,D), new_caches).
+    """
+
+    def scan_fn(x, xs):
+        sb_params, sb_caches = xs
+        new_caches = {}
+        for s in range(spec.period):
+            key = f"slot{s}"
+            x, nc = _apply_slot_decode(spec, s, x, sb_params[key], sb_caches[key], pos)
+            new_caches[key] = nc
+        return x, new_caches
+
+    x, new_caches = lax.scan(scan_fn, x, (params["sb"], caches))
+    x = L.apply_norm(spec, x, params["final_norm"])
+    return x, new_caches
+
+
+# ---------------------------------------------------------------------------
+# Encoder (whisper) — bidirectional transformer over frame embeddings
+# ---------------------------------------------------------------------------
+
+
+def encoder_forward(spec: ModelSpec, params, frames, *, remat: bool = True):
+    """frames: (B, S_f, frontend_dim) stub embeddings -> (B, S_f, D)."""
+    x = frames.astype(params["frontend_proj"].dtype) @ params["frontend_proj"]
+    S = x.shape[1]
+    pos = jnp.arange(S)
+    # fixed sinusoidal positions
+    D = spec.d_model
+    half = D // 2
+    freqs = jnp.exp(-jnp.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = pos.astype(jnp.float32)[:, None] * freqs[None, :]
+    pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(x.dtype)
+    x = x + pe[None]
+
+    enc = params["encoder"]
+
+    def block(x, lp):
+        h = L.apply_norm(spec, x, lp["ln_attn"])
+        B, S_, _ = h.shape
+        Hq, hd = spec.padded_n_q, spec.hd
+        q = (h @ lp["attn"]["wq"]).reshape(B, S_, Hq, hd)
+        k = (h @ lp["attn"]["wk"]).reshape(B, S_, spec.padded_n_kv, hd)
+        v = (h @ lp["attn"]["wv"]).reshape(B, S_, spec.padded_n_kv, hd)
+        o = L.flash_attention(q, k, v, causal=False)
+        x = x + o.reshape(B, S_, Hq * hd) @ lp["attn"]["wo"]
+        h = L.apply_norm(spec, x, lp["ln_mlp"])
+        return x + L.mlp_block(spec, h, lp["mlp"]), None
+
+    body = jax.checkpoint(block) if remat else block
+    x, _ = lax.scan(body, x, enc)
+    return L.apply_norm(spec, x, params["enc_final_norm"])

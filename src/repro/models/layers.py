@@ -1,0 +1,740 @@
+"""Core NN layers for the assigned architectures (pure JAX, shard-friendly).
+
+Design notes (see DESIGN.md §5/§6):
+
+* Attention is a *chunked online-softmax* ("flash-style") implementation: a
+  ``lax.scan`` over KV blocks carrying (max, sum, acc).  This bounds the live
+  logits to (B, H_local, S_q, kv_chunk) instead of (…, S_kv), which is what lets
+  32k-prefill fit 16 GB/chip.  Heads are sharded over the "model" mesh axis
+  (padded when the published head count doesn't divide it); KV heads are
+  replicated when n_kv < model-axis and grouped (GQA) otherwise.
+* Sliding-window attention (SWA) is the same kernel with a lower band on the
+  position mask; decode uses a rolling KV cache of window size.
+* MoE uses per-sequence capacity dispatch (GShard-style) with scatter-add into
+  (B, E, C, D) buffers — batch-sharded, so routing is collective-free; the
+  expert FFN is "expert-TP" in the baseline (d_ff sharded over "model"), which
+  makes a MoE layer communication-identical to a dense Megatron MLP.  True
+  expert-parallel all-to-all dispatch is a §Perf hillclimb variant.
+* Mamba2 uses the chunked SSD (state-space duality) algorithm: intra-chunk
+  quadratic term + inter-chunk recurrence (scan over chunks), heads sharded
+  over "model".
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.spec import ModelSpec, MoECfg, SSMCfg
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, w, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + w.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x, w, b, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    y = (x - mu) * lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(dt)
+
+
+def apply_norm(spec: ModelSpec, x, p):
+    if spec.norm == "layernorm":
+        return layer_norm(x, p["w"], p["b"])
+    return rms_norm(x, p["w"])
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_tables(positions, head_dim: int, theta: float):
+    """positions: int32 (...,) -> cos/sin tables (..., head_dim/2)."""
+    half = head_dim // 2
+    freqs = jnp.exp(-math.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: (B, S, H, hd); cos/sin: (B, S, half) or (S, half)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if cos.ndim == 2:
+        cos = cos[None, :, None, :]
+        sin = sin[None, :, None, :]
+    else:
+        cos = cos[:, :, None, :]
+        sin = sin[:, :, None, :]
+    dt = x.dtype
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [x1f * cos - x2f * sin, x2f * cos + x1f * sin], axis=-1
+    ).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Flash-style chunked attention (training / prefill)
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+import os
+
+#: "vjp"  — custom-vjp flash attention: backward recomputes per-chunk
+#:          probabilities (true flash backward; no O(S*S) stash).
+#: "scan" — plain lax.scan online softmax: jax autodiff saves every chunk's
+#:          probability matrix as a scan residual (the paper-faithful
+#:          BASELINE recorded in experiments/dryrun; measured ~51 GB/layer
+#:          stash on minicpm train_4k — see EXPERIMENTS.md §Perf).
+FLASH_IMPL = os.environ.get("REPRO_ATTN_IMPL", "vjp")
+
+
+def set_flash_impl(impl: str):
+    global FLASH_IMPL
+    assert impl in ("vjp", "scan")
+    FLASH_IMPL = impl
+
+
+def constrain_batch(x, batch_axes=("pod", "data")):
+    """Pin the leading (batch) dim of an activation to the DP mesh axes.
+
+    With "fsdp"/"fsdp_pod" policies the weights' d_model dim is sharded over
+    "data" — at the contracting dim of every matmul that CONFLICTS with the
+    activations' batch sharding, and XLA's resolution was to replicate the
+    batch (measured 16x attention traffic on mixtral; EXPERIMENTS.md §Perf).
+    ZeRO-3 semantics require gathering the WEIGHTS instead, which this
+    constraint forces.  No-op unless a mesh context is active (smoke tests,
+    single-device runs).
+    """
+    try:
+        from jax._src import mesh as mesh_lib
+        m = mesh_lib.thread_resources.env.physical_mesh
+        if m.empty:
+            return x
+        axes = tuple(a for a in batch_axes if a in m.axis_names)
+        if not axes:
+            return x
+        from jax.sharding import NamedSharding, PartitionSpec
+        spec = PartitionSpec(axes, *([None] * (x.ndim - 1)))
+        return lax.with_sharding_constraint(x, NamedSharding(m, spec))
+    except Exception:
+        return x
+
+
+def _attn_mask(causal, prefix_len, window, q_pos, kv_pos):
+    """Shared position mask: causal + prefix-LM bidirectional + SWA band."""
+    if not causal:
+        return None
+    ok = kv_pos[None, :] <= q_pos[:, None]
+    if prefix_len:
+        bidir = (q_pos[:, None] < prefix_len) & (kv_pos[None, :] < prefix_len)
+        ok = ok | bidir
+    if window is not None:
+        ok = ok & (kv_pos[None, :] > q_pos[:, None] - window)
+    return ok
+
+
+def flash_attention(
+    q, k, v,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset=0,
+    kv_offset=0,
+    kv_chunk: int = 1024,
+    prefix_len: int = 0,
+    kv_len_mask=None,
+    impl: Optional[str] = None,
+):
+    """Chunked online-softmax attention.
+
+    q: (B, Sq, Hq, hd);  k, v: (B, Skv, Hkv, hd) with Hq = G * Hkv.
+    ``prefix_len``: positions < prefix_len attend bidirectionally (PaliGemma
+    prefix-LM); only meaningful with causal=True.
+    ``kv_len_mask``: optional (B, Skv) bool validity mask (ragged caches).
+    ``impl``: "vjp" (flash backward, default) or "scan" (baseline; autodiff
+    stashes every chunk's probabilities).  Returns (B, Sq, Hq, hd).
+    """
+    impl = impl or FLASH_IMPL
+    if impl == "vjp" and kv_len_mask is None and isinstance(q_offset, int) \
+            and isinstance(kv_offset, int):
+        return _flash_vjp(q, k, v, causal, window, q_offset, kv_offset,
+                          kv_chunk, prefix_len)
+    return _flash_scan(
+        q, k, v, causal=causal, window=window, q_offset=q_offset,
+        kv_offset=kv_offset, kv_chunk=kv_chunk, prefix_len=prefix_len,
+        kv_len_mask=kv_len_mask)
+
+
+def _flash_scan(
+    q, k, v,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset=0,
+    kv_offset=0,
+    kv_chunk: int = 1024,
+    prefix_len: int = 0,
+    kv_len_mask=None,
+):
+    """Baseline scan implementation (jax autodiff through the scan)."""
+    B, Sq, Hq, hd = q.shape
+    _, Skv, Hkv, _ = k.shape
+    G = Hq // Hkv
+    scale = 1.0 / math.sqrt(hd)
+
+    # Repeat KV heads to the query head count.  This keeps every attention
+    # intermediate sharded cleanly on the (padded) head axis even when the
+    # published n_kv does not divide the model axis (GQA groups < axis size);
+    # the repeat of a replicated KV tensor is a local slice per shard.
+    if G > 1:
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+
+    nchunks = max(1, (Skv + kv_chunk - 1) // kv_chunk)
+    pad = nchunks * kv_chunk - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        extra = jnp.zeros((B, pad), dtype=bool)
+        kv_len_mask = (
+            jnp.concatenate([jnp.ones((B, Skv), bool), extra], 1)
+            if kv_len_mask is None
+            else jnp.concatenate([kv_len_mask, extra], 1)
+        )
+    kc = k.reshape(B, nchunks, kv_chunk, Hq, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, nchunks, kv_chunk, Hq, hd).transpose(1, 0, 2, 3, 4)
+    vmask = (
+        kv_len_mask.reshape(B, nchunks, kv_chunk).transpose(1, 0, 2)
+        if kv_len_mask is not None
+        else None
+    )
+
+    q_pos = q_offset + jnp.arange(Sq)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        if vmask is None:
+            kcb, vcb, cidx = xs
+            msk_b = None
+        else:
+            kcb, vcb, msk_b, cidx = xs
+        kv_pos = kv_offset + cidx * kv_chunk + jnp.arange(kv_chunk)
+        # logits: (B, Hq, Sq, C)
+        s = jnp.einsum("bqhd,bchd->bhqc", q, kcb,
+                       preferred_element_type=jnp.float32) * scale
+        if causal:
+            ok = kv_pos[None, :] <= q_pos[:, None]
+            if prefix_len:
+                bidir = (q_pos[:, None] < prefix_len) & (kv_pos[None, :] < prefix_len)
+                ok = ok | bidir
+            if window is not None:
+                ok = ok & (kv_pos[None, :] > q_pos[:, None] - window)
+            s = jnp.where(ok[None, None], s, NEG_INF)
+        if msk_b is not None:
+            s = jnp.where(msk_b[:, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bhqc,bchd->bhqd", p.astype(vcb.dtype), vcb,
+                        preferred_element_type=jnp.float32)
+        acc_new = acc * corr[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    # carry inits derived from q so the head sharding (model axis) PROPAGATES
+    # into the scan carry — literal zeros made XLA replicate the carry and
+    # compute every head on every device (measured 16x traffic on mixtral;
+    # EXPERIMENTS.md §Perf)
+    qz = lax.stop_gradient(q[..., 0].transpose(0, 2, 1)).astype(jnp.float32) * 0.0
+    m0 = qz + NEG_INF
+    l0 = qz
+    a0 = lax.stop_gradient(q.transpose(0, 2, 1, 3)).astype(jnp.float32) * 0.0
+    cidx = jnp.arange(nchunks)
+    xs = (kc, vc, cidx) if vmask is None else (kc, vc, vmask, cidx)
+    (m, l, acc), _ = lax.scan(body, (m0, l0, a0), xs)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = out.transpose(0, 2, 1, 3).reshape(B, Sq, Hq, hd)
+    return out.astype(v.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Flash attention with custom VJP (true flash backward — §Perf hillclimb)
+#
+# jax autodiff through the _flash_scan online-softmax saves every kv-chunk's
+# probability matrix as a scan residual: an O(B*H*Sq*Skv) bf16 stash (measured
+# 51 GB/device/layer on minicpm train_4k @ 8 fake devices).  The flash
+# backward stores only (out, m, l) and RECOMPUTES p chunk-by-chunk:
+#   delta = rowsum(g * out)
+#   p     = exp(s - lse)
+#   ds    = p * (dp - delta) * scale,  dp = g @ v^T
+#   dq   += ds @ k;   dk_c = ds^T @ q;   dv_c = p^T @ g
+# ---------------------------------------------------------------------------
+
+
+def _flash_chunks(k, v, Skv, B, kv_chunk):
+    nchunks = max(1, (Skv + kv_chunk - 1) // kv_chunk)
+    pad = nchunks * kv_chunk - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Hq, hd = k.shape[2], k.shape[3]
+    kc = k.reshape(B, nchunks, kv_chunk, Hq, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, nchunks, kv_chunk, Hq, hd).transpose(1, 0, 2, 3, 4)
+    return kc, vc, nchunks, pad
+
+
+def _flash_fwd_impl(q, k, v, causal, window, q_offset, kv_offset, kv_chunk,
+                    prefix_len):
+    B, Sq, Hq, hd = q.shape
+    _, Skv, Hkv, _ = k.shape
+    G = Hq // Hkv
+    scale = 1.0 / math.sqrt(hd)
+    if G > 1:
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+    kc, vc, nchunks, _ = _flash_chunks(k, v, Skv, B, kv_chunk)
+    q_pos = q_offset + jnp.arange(Sq)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kcb, vcb, cidx = xs
+        kv_idx = cidx * kv_chunk + jnp.arange(kv_chunk)
+        kv_pos = kv_offset + kv_idx
+        s = jnp.einsum("bqhd,bchd->bhqc", q, kcb,
+                       preferred_element_type=jnp.float32) * scale
+        ok = _attn_mask(causal, prefix_len, window, q_pos, kv_pos)
+        valid = kv_idx < Skv                       # padding chunk tail
+        ok = valid[None, :] if ok is None else ok & valid[None, :]
+        s = jnp.where(ok[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bhqc,bchd->bhqd", p.astype(vcb.dtype), vcb,
+                        preferred_element_type=jnp.float32)
+        acc_new = acc * corr[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    # carry inits derived from q so the head sharding (model axis) PROPAGATES
+    # into the scan carry — literal zeros made XLA replicate the carry and
+    # compute every head on every device (measured 16x traffic on mixtral;
+    # EXPERIMENTS.md §Perf)
+    qz = lax.stop_gradient(q[..., 0].transpose(0, 2, 1)).astype(jnp.float32) * 0.0
+    m0 = qz + NEG_INF
+    l0 = qz
+    a0 = lax.stop_gradient(q.transpose(0, 2, 1, 3)).astype(jnp.float32) * 0.0
+    (m, l, acc), _ = lax.scan(body, (m0, l0, a0),
+                              (kc, vc, jnp.arange(nchunks)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = out.transpose(0, 2, 1, 3).reshape(B, Sq, Hq, hd).astype(v.dtype)
+    return out, m, l
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def _flash_vjp(q, k, v, causal, window, q_offset, kv_offset, kv_chunk,
+               prefix_len):
+    out, _, _ = _flash_fwd_impl(q, k, v, causal, window, q_offset, kv_offset,
+                                kv_chunk, prefix_len)
+    return out
+
+
+def _flash_vjp_fwd(q, k, v, causal, window, q_offset, kv_offset, kv_chunk,
+                   prefix_len):
+    out, m, l = _flash_fwd_impl(q, k, v, causal, window, q_offset, kv_offset,
+                                kv_chunk, prefix_len)
+    return out, (q, k, v, out, m, l)
+
+
+def _flash_vjp_bwd(causal, window, q_offset, kv_offset, kv_chunk, prefix_len,
+                   res, g):
+    q, k, v, out, m, l = res
+    B, Sq, Hq, hd = q.shape
+    _, Skv, Hkv, _ = k.shape
+    G = Hq // Hkv
+    scale = 1.0 / math.sqrt(hd)
+    kr = jnp.repeat(k, G, axis=2) if G > 1 else k
+    vr = jnp.repeat(v, G, axis=2) if G > 1 else v
+    kc, vc, nchunks, pad = _flash_chunks(kr, vr, Skv, B, kv_chunk)
+
+    lse = jnp.where(l > 0, m + jnp.log(jnp.maximum(l, 1e-30)), 0.0)
+    gf = g.astype(jnp.float32).transpose(0, 2, 1, 3)      # (B,Hq,Sq,hd)
+    of = out.astype(jnp.float32).transpose(0, 2, 1, 3)
+    delta = jnp.sum(gf * of, axis=-1)                     # (B,Hq,Sq)
+    q_pos = q_offset + jnp.arange(Sq)
+
+    def body(dq, xs):
+        kcb, vcb, cidx = xs
+        kv_idx = cidx * kv_chunk + jnp.arange(kv_chunk)
+        kv_pos = kv_offset + kv_idx
+        s = jnp.einsum("bqhd,bchd->bhqc", q, kcb,
+                       preferred_element_type=jnp.float32) * scale
+        ok = _attn_mask(causal, prefix_len, window, q_pos, kv_pos)
+        valid = kv_idx < Skv
+        ok = valid[None, :] if ok is None else ok & valid[None, :]
+        p = jnp.where(ok[None, None], jnp.exp(s - lse[..., None]), 0.0)
+        dp = jnp.einsum("bhqd,bchd->bhqc", gf, vcb.astype(jnp.float32))
+        ds = p * (dp - delta[..., None]) * scale          # (B,Hq,Sq,C)
+        dq = dq + jnp.einsum("bhqc,bchd->bhqd", ds,
+                             kcb.astype(jnp.float32))
+        dk_c = jnp.einsum("bhqc,bqhd->bchd", ds, q.astype(jnp.float32))
+        dv_c = jnp.einsum("bhqc,bhqd->bchd", p, gf)
+        return dq, (dk_c, dv_c)
+
+    dq0 = q.astype(jnp.float32).transpose(0, 2, 1, 3) * 0.0  # keep sharding
+    dq, (dk_s, dv_s) = lax.scan(body, dq0, (kc, vc, jnp.arange(nchunks)))
+    dq = dq.transpose(0, 2, 1, 3).astype(q.dtype)
+    dk = dk_s.transpose(1, 0, 2, 3, 4).reshape(B, -1, Hq, hd)[:, :Skv]
+    dv = dv_s.transpose(1, 0, 2, 3, 4).reshape(B, -1, Hq, hd)[:, :Skv]
+    if G > 1:
+        dk = dk.reshape(B, Skv, Hkv, G, hd).sum(3)
+        dv = dv.reshape(B, Skv, Hkv, G, hd).sum(3)
+    return dq, dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+_flash_vjp.defvjp(_flash_vjp_fwd, _flash_vjp_bwd)
+
+
+def decode_attention(q, k_cache, v_cache, cache_pos, *, window: Optional[int] = None):
+    """Single-token decode attention against a (possibly sequence-sharded) cache.
+
+    q: (B, 1, Hq, hd); caches: (B, L_cache, Hkv, hd); cache_pos: scalar int —
+    number of valid entries (for rolling SWA caches the whole buffer is valid
+    once full; validity is handled by the caller-provided mask semantics here:
+    entries with index >= cache_pos are masked).
+
+    Softmax reductions over the cache-length axis are plain jnp reductions —
+    when the cache is sharded over "data" (long_500k), XLA inserts the
+    max/sum all-reduces (log-sum-exp combine), i.e. distributed flash-decoding.
+    """
+    B, _, Hq, hd = q.shape
+    _, Lc, Hkv, _ = k_cache.shape
+    G = Hq // Hkv
+    scale = 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, Hq, hd)
+    # logits grouped by kv head: (B, Hkv, G, Lc) -> keep kv heads unexpanded so
+    # the (possibly seq-sharded) cache is contracted without materialising a
+    # repeated copy; softmax reductions over Lc become lse all-reduces when the
+    # cache is sequence-sharded.
+    qg = qg.reshape(B, Hkv, G, hd)
+    s = jnp.einsum("bhgd,bchd->bhgc", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    idx = jnp.arange(Lc)
+    valid = idx[None, :] < cache_pos
+    s = jnp.where(valid[:, None, None, :] if valid.ndim == 2 else valid[None, None, None, :],
+                  s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgc,bchd->bhgd", p.astype(v_cache.dtype), v_cache,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, 1, Hq, hd).astype(v_cache.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention block (projections + rope + flash / decode)
+# ---------------------------------------------------------------------------
+
+
+def attn_project_qkv(spec: ModelSpec, x, p, positions):
+    B, S, D = x.shape
+    Hq, Hkv, hd = spec.padded_n_q, spec.padded_n_kv, spec.hd
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if spec.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    q = q.reshape(B, S, Hq, hd)
+    k = k.reshape(B, S, Hkv, hd)
+    v = v.reshape(B, S, Hkv, hd)
+    if spec.rope_theta > 0:
+        cos, sin = rope_tables(positions, hd, spec.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def attention_block(spec: ModelSpec, x, p, *, positions, prefix_len: int = 0,
+                    kv_chunk: int = 1024):
+    """Full training/prefill attention. x: (B,S,D) -> (B,S,D), plus (k,v) for caching."""
+    q, k, v = attn_project_qkv(spec, x, p, positions)
+    o = flash_attention(
+        q, k, v,
+        causal=True,
+        window=spec.swa_window,
+        prefix_len=prefix_len,
+        kv_chunk=kv_chunk,
+    )
+    B, S, _, _ = q.shape
+    o = o.reshape(B, S, spec.padded_n_q * spec.hd)
+    return o @ p["wo"], (k, v)
+
+
+def attention_decode_block(spec: ModelSpec, x, p, cache, pos):
+    """x: (B,1,D); cache: dict(k,v) (B, Lc, Hkv, hd); pos: scalar current length.
+
+    Returns (out (B,1,D), new_cache).  SWA uses a rolling buffer (Lc = window).
+    """
+    B = x.shape[0]
+    q, k, v = attn_project_qkv(spec, x, p, positions=jnp.full((1,), pos))
+    Lc = cache["k"].shape[1]
+    if spec.swa_window is not None and Lc == spec.swa_window:
+        slot = pos % Lc
+        new_k = lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+        new_v = lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+        n_valid = jnp.minimum(pos + 1, Lc)
+    else:
+        new_k = lax.dynamic_update_slice(cache["k"], k, (0, pos, 0, 0))
+        new_v = lax.dynamic_update_slice(cache["v"], v, (0, pos, 0, 0))
+        n_valid = pos + 1
+    o = decode_attention(q, new_k, new_v, n_valid, window=spec.swa_window)
+    o = o.reshape(B, 1, spec.padded_n_q * spec.hd)
+    return o @ p["wo"], {"k": new_k, "v": new_v}
+
+
+def cross_attention_block(spec: ModelSpec, x, p, enc_kv):
+    """Enc-dec cross attention (whisper). enc_kv: (k, v) from encoder output."""
+    B, S, D = x.shape
+    Hq, hd = spec.padded_n_q, spec.hd
+    q = (x @ p["wq"]).reshape(B, S, Hq, hd)
+    k, v = enc_kv
+    o = flash_attention(q, k, v, causal=False)
+    return o.reshape(B, S, Hq * hd) @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# MLP / MoE
+# ---------------------------------------------------------------------------
+
+
+def mlp_block(spec: ModelSpec, x, p):
+    if spec.act == "silu":
+        h = jax.nn.silu(x @ p["w1"]) * (x @ p["w3"])
+    elif spec.act == "geglu":
+        h = jax.nn.gelu(x @ p["w1"]) * (x @ p["w3"])
+    else:
+        h = jax.nn.gelu(x @ p["w1"])
+    return h @ p["w2"]
+
+
+def moe_block(spec: ModelSpec, x, p):
+    """GShard-style per-sequence capacity routing; expert-TP compute.
+
+    x: (B, S, D).  Router in fp32.  Returns (B, S, D) plus aux load-balance loss.
+    """
+    cfg: MoECfg = spec.moe
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    C = max(K, int(S * K * cfg.capacity_factor / E))
+
+    logits = (x.astype(jnp.float32) @ p["router"].astype(jnp.float32))  # (B,S,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = lax.top_k(probs, K)                                  # (B,S,K)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance aux loss (Switch): E * sum_e f_e * p_e
+    me = probs.mean(axis=(0, 1))
+    one = jax.nn.one_hot(top_e[..., 0], E, dtype=jnp.float32)
+    fe = one.mean(axis=(0, 1))
+    aux = E * jnp.sum(me * fe)
+
+    flat_e = top_e.reshape(B, S * K)                                    # (B, N)
+    # position of each routed token within its expert (per sequence)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)                 # (B, N, E)
+    pos = jnp.cumsum(onehot, axis=1) - 1                                # (B, N, E)
+    pos_in_e = jnp.take_along_axis(pos, flat_e[..., None], axis=-1)[..., 0]  # (B,N)
+    keep = pos_in_e < C
+
+    xr = jnp.repeat(x, K, axis=1)                                       # (B, N, D)
+    safe_pos = jnp.where(keep, pos_in_e, C - 1)
+    w = jnp.where(keep, 1.0, 0.0).astype(x.dtype)
+
+    def disp(xb, eb, pb, wb):
+        buf = jnp.zeros((E, C, D), x.dtype)
+        return buf.at[eb, pb].add(xb * wb[:, None])
+
+    # the batched scatter-add dispatch defeats sharding propagation (XLA
+    # replicated the batch dim and all-reduced every (B,E,C,*) buffer —
+    # EXPERIMENTS.md §Perf); pin batch on every MoE intermediate
+    buf = constrain_batch(jax.vmap(disp)(xr, flat_e, safe_pos, w))      # (B,E,C,D)
+
+    h1 = jnp.einsum("becd,edf->becf", buf, p["w1"])
+    if spec.act == "silu":
+        h = jax.nn.silu(h1) * jnp.einsum("becd,edf->becf", buf, p["w3"])
+    else:
+        h = jax.nn.gelu(h1)
+    h = constrain_batch(h)
+    yb = constrain_batch(
+        jnp.einsum("becf,efd->becd", h, p["w2"]))                       # (B,E,C,D)
+
+    def gath(yb_, eb, pb):
+        return yb_[eb, pb]
+
+    y = constrain_batch(jax.vmap(gath)(yb, flat_e, safe_pos))           # (B,N,D)
+    y = y * (w * top_p.reshape(B, S * K).astype(x.dtype))[..., None]
+    y = y.reshape(B, S, K, D).sum(axis=2)
+    return y, aux
+
+
+def moe_decode_block(spec: ModelSpec, x, p):
+    """Decode-time MoE (S small): dense top-k combine without capacity buffers."""
+    cfg: MoECfg = spec.moe
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    logits = x.astype(jnp.float32) @ p["router"].astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = lax.top_k(probs, K)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+    w1 = p["w1"][top_e]  # (B,S,K,D,F)
+    w3 = p["w3"][top_e] if spec.act == "silu" else None
+    w2 = p["w2"][top_e]
+    h1 = jnp.einsum("bsd,bskdf->bskf", x, w1)
+    if spec.act == "silu":
+        h = jax.nn.silu(h1) * jnp.einsum("bsd,bskdf->bskf", x, w3)
+    else:
+        h = jax.nn.gelu(h1)
+    y = jnp.einsum("bskf,bskfd->bskd", h, w2)
+    return (y * top_p.astype(x.dtype)[..., None]).sum(axis=2), jnp.float32(0.0)
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD — state-space duality, chunked)
+# ---------------------------------------------------------------------------
+
+
+def mamba2_block(spec: ModelSpec, x, p):
+    """Chunked SSD forward. x: (B, S, D) -> (B, S, D), final_state.
+
+    Params: in_proj (D, 2*di + 2*ds + nh), conv (4, di + 2*ds), A_log (nh,),
+    dt_bias (nh,), D_skip (nh,), norm_w (di,), out_proj (di, D).
+    """
+    cfg: SSMCfg = spec.ssm
+    B, S, D = x.shape
+    di = cfg.d_inner(D)
+    nh = cfg.n_heads(D)
+    ds = cfg.d_state
+    ph = cfg.head_dim
+    cl = min(cfg.chunk, S)
+    assert S % cl == 0
+    nc = S // cl
+
+    zxbcdt = x @ p["in_proj"]
+    z, xbc, dt = jnp.split(zxbcdt, [di, di + di + 2 * ds], axis=-1)
+
+    # causal depthwise conv over (x, B, C), kernel 4
+    kw = p["conv"].shape[0]
+    xbc_pad = jnp.pad(xbc, ((0, 0), (kw - 1, 0), (0, 0)))
+    conv = sum(
+        xbc_pad[:, i : i + S, :] * p["conv"][i][None, None, :] for i in range(kw)
+    )
+    xbc = jax.nn.silu(conv + p["conv_b"][None, None, :])
+    xs, Bc, Cc = jnp.split(xbc, [di, di + ds], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])          # (B,S,nh)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                         # (nh,)
+    dA = dt * A[None, None, :]                                           # (B,S,nh) <= 0
+
+    xh = xs.reshape(B, nc, cl, nh, ph)
+    Bh = Bc.reshape(B, nc, cl, ds)
+    Ch = Cc.reshape(B, nc, cl, ds)
+    dAh = dA.reshape(B, nc, cl, nh)
+    dth = dt.reshape(B, nc, cl, nh)
+
+    seg = jnp.cumsum(dAh, axis=2)                                        # (B,nc,cl,nh)
+    # intra-chunk (quadratic within chunk, causal decay):
+    # L[i,j] = exp(seg_i - seg_j) for i >= j
+    rel = seg[:, :, :, None, :] - seg[:, :, None, :, :]                  # (B,nc,i,j,nh)
+    causal = jnp.tril(jnp.ones((cl, cl), bool))
+    # mask BEFORE exp: upper-triangle rel is positive and can overflow exp
+    rel = jnp.where(causal[None, None, :, :, None], rel, NEG_INF)
+    decay = jnp.exp(rel)
+    sBC = jnp.einsum("bnis,bnjs->bnij", Ch, Bh,
+                     preferred_element_type=jnp.float32)                 # (B,nc,i,j)
+    gate = sBC[..., None] * decay * dth[:, :, None, :, :]                # (B,nc,i,j,nh)
+    y_intra = jnp.einsum("bnijh,bnjhp->bnihp", gate.astype(xh.dtype), xh,
+                         preferred_element_type=jnp.float32)
+
+    # chunk end-states: h_c = sum_j exp(seg_end - seg_j) * dt_j * B_j x_j^T
+    end = seg[:, :, -1:, :]                                              # (B,nc,1,nh)
+    w_end = jnp.exp(end - seg) * dth                                     # (B,nc,cl,nh)
+    hc = jnp.einsum("bnjs,bnjh,bnjhp->bnhps", Bh, w_end.astype(xh.dtype), xh,
+                    preferred_element_type=jnp.float32)                  # (B,nc,nh,ph,ds)
+
+    # inter-chunk recurrence over chunks
+    chunk_decay = jnp.exp(end[:, :, 0, :])                               # (B,nc,nh)
+
+    def scan_fn(h_prev, inp):
+        hc_n, dec_n = inp
+        h_new = h_prev * dec_n[:, :, None, None] + hc_n
+        return h_new, h_prev
+
+    h0 = jnp.zeros((B, nh, ph, ds), jnp.float32)
+    hT, h_prevs = lax.scan(
+        scan_fn,
+        h0,
+        (hc.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)                           # (B,nc,nh,ph,ds)
+
+    # inter-chunk output: y_j += C_j · (decay-from-chunk-start_j * h_prev)
+    w_start = jnp.exp(seg)                                               # (B,nc,cl,nh)
+    y_inter = jnp.einsum("bnis,bnhps,bnih->bnihp", Ch, h_prevs.astype(Ch.dtype),
+                         w_start.astype(Ch.dtype),
+                         preferred_element_type=jnp.float32)
+
+    y = (y_intra + y_inter).astype(x.dtype) + xh * p["D_skip"].astype(x.dtype)[None, None, None, :, None]
+    y = y.reshape(B, S, di)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"])
+    return y @ p["out_proj"], hT
+
+
+def mamba2_decode_block(spec: ModelSpec, x, p, state):
+    """Single-token SSD decode. state: dict(ssm (B,nh,ph,ds), conv (B,kw-1,di+2ds))."""
+    cfg: SSMCfg = spec.ssm
+    B, S, D = x.shape  # S == 1
+    di = cfg.d_inner(D)
+    nh = cfg.n_heads(D)
+    ds = cfg.d_state
+    ph = cfg.head_dim
+
+    zxbcdt = x @ p["in_proj"]
+    z, xbc, dt = jnp.split(zxbcdt, [di, di + di + 2 * ds], axis=-1)
+    kw = p["conv"].shape[0]
+    hist = jnp.concatenate([state["conv"], xbc], axis=1)                 # (B,kw,·)
+    conv = jnp.einsum("bkc,kc->bc", hist, p["conv"])[:, None, :]
+    xbc_t = jax.nn.silu(conv + p["conv_b"][None, None, :])
+    new_conv = hist[:, 1:, :]
+    xs, Bc, Cc = jnp.split(xbc_t, [di, di + ds], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])[:, 0]    # (B,nh)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dA = jnp.exp(dt * A[None, :])                                        # (B,nh)
+
+    xh = xs.reshape(B, nh, ph)
+    Bv = Bc[:, 0, :]                                                     # (B,ds)
+    Cv = Cc[:, 0, :]
+    upd = dt[:, :, None, None] * jnp.einsum("bhp,bs->bhps", xh.astype(jnp.float32),
+                                            Bv.astype(jnp.float32))
+    ssm = state["ssm"] * dA[:, :, None, None] + upd
+    y = jnp.einsum("bhps,bs->bhp", ssm, Cv.astype(jnp.float32)).astype(x.dtype)
+    y = y + xh * p["D_skip"].astype(x.dtype)[None, :, None]
+    y = y.reshape(B, 1, di)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"])
+    return y @ p["out_proj"], {"ssm": ssm, "conv": new_conv}

@@ -1,0 +1,403 @@
+"""Train / serve step builders + ShapeDtypeStruct input specs per shape.
+
+Shapes (assignment):
+  train_4k     seq 4096,  global_batch 256   -> train_step
+  prefill_32k  seq 32768, global_batch 32    -> prefill_step (serve)
+  decode_32k   seq 32768 (KV cache), batch 128 -> decode_step (serve)
+  long_500k    seq 524288 (cache), batch 1   -> decode_step, sub-quadratic only
+
+Sharding of activations / caches:
+  tokens, labels          (B, S)           P(batch, None)
+  decode KV caches        (nsb, B, L, H, d) P(None, batch, "model" on L, None, None)
+    — sequence-sharded caches turn decode softmax into a distributed
+    log-sum-exp (flash-decoding); for batch=1 long-context the cache seq dim
+    shards over ("data","model") so all 256 chips participate.
+  mamba ssm state         (nsb, B, nh, p, ds) P(None, batch, "model", None, None)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import decoder as dec
+from repro.models import layers as L
+from repro.models.params import param_shardings, param_specs
+from repro.models.spec import ModelSpec
+from repro.optim import AdamWConfig, adamw_update, compress_grads, make_schedule
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+
+def batch_axes(mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _pad_batch_axes(mesh, batch):
+    """Largest prefix of (pod, data) whose product divides batch."""
+    axes = []
+    prod = 1
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for a in batch_axes(mesh):
+        if batch % (prod * sizes[a]) == 0:
+            axes.append(a)
+            prod *= sizes[a]
+    return tuple(axes)
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+
+def lm_loss(spec: ModelSpec, params, hidden, labels, loss_mask=None):
+    logits = dec.lm_logits(spec, params, hidden).astype(jnp.float32)
+    logits = logits + dec.vocab_mask_bias(spec)[None, None, :]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    # one-hot contraction keeps the gather shard-friendly on a vocab-sharded axis
+    onehot = jax.nn.one_hot(labels, spec.padded_vocab, dtype=logits.dtype)
+    gold = jnp.einsum("bsv,bsv->bs", logits, onehot)
+    nll = lse - gold
+    if loss_mask is not None:
+        nll = nll * loss_mask
+        return nll.sum() / jnp.maximum(loss_mask.sum(), 1.0)
+    return nll.mean()
+
+
+# ---------------------------------------------------------------------------
+# Forward passes per family
+# ---------------------------------------------------------------------------
+
+
+def forward_train(spec: ModelSpec, params, batch, *, remat=True, kv_chunk=1024):
+    """Returns (loss, aux) for one (micro)batch dict."""
+    if spec.family == "encdec":
+        enc_h = dec.encoder_forward(spec, params, batch["frames"], remat=remat)
+        S = batch["tokens"].shape[1]
+        positions = jnp.arange(S)
+        x = dec.embed_tokens(spec, params, batch["tokens"], positions)
+        h, aux, _ = dec.decoder_forward(
+            spec, params, x, positions=positions, remat=remat,
+            kv_chunk=kv_chunk, enc_h=enc_h,
+        )
+        return lm_loss(spec, params, h, batch["labels"]), aux
+    if spec.family == "vlm":
+        pre = batch["patches"].astype(params["embed"].dtype) @ params["frontend_proj"]
+        tx = dec.embed_tokens(spec, params, batch["tokens"])
+        x = jnp.concatenate([pre, tx], axis=1)
+        S = x.shape[1]
+        h, aux, _ = dec.decoder_forward(
+            spec, params, x, positions=jnp.arange(S),
+            prefix_len=spec.n_prefix_tokens, remat=remat, kv_chunk=kv_chunk,
+        )
+        npre = pre.shape[1]
+        h_text = h[:, npre:, :]
+        return lm_loss(spec, params, h_text, batch["labels"]), aux
+    x = dec.embed_tokens(spec, params, batch["tokens"])
+    S = x.shape[1]
+    h, aux, _ = dec.decoder_forward(
+        spec, params, x, positions=jnp.arange(S), remat=remat, kv_chunk=kv_chunk,
+    )
+    return lm_loss(spec, params, h, batch["labels"]), aux
+
+
+# ---------------------------------------------------------------------------
+# Train step (with gradient accumulation + optional grad compression)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainCfg:
+    optimizer: AdamWConfig = AdamWConfig()
+    n_microbatches: int = 1
+    aux_weight: float = 0.01          # MoE load-balance loss weight
+    compression: str = "none"         # none | bf16 | int8
+    schedule: str = "cosine"
+    total_steps: int = 10_000
+    remat: bool = True
+    kv_chunk: int = 1024
+
+
+def make_train_step(spec: ModelSpec, cfg: TrainCfg = TrainCfg()):
+    sched = make_schedule(
+        cfg.schedule if cfg.schedule != "auto" else spec.lr_schedule, cfg.total_steps
+    )
+
+    def loss_fn(params, mb):
+        loss, aux = forward_train(spec, params, mb, remat=cfg.remat,
+                                  kv_chunk=cfg.kv_chunk)
+        return loss + cfg.aux_weight * aux, (loss, aux)
+
+    def train_step(params, opt_state, batch):
+        nmb = cfg.n_microbatches
+        if nmb == 1:
+            (tot, (loss, aux)), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch
+            )
+        else:
+            def split(x):
+                return x.reshape((nmb, x.shape[0] // nmb) + x.shape[1:])
+
+            mbs = jax.tree.map(split, batch)
+
+            def acc_fn(carry, mb):
+                g_acc, l_acc, a_acc = carry
+                (tot, (loss, aux)), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, mb
+                )
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32) / nmb, g_acc, g
+                )
+                return (g_acc, l_acc + loss / nmb, a_acc + aux / nmb), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss, aux), _ = lax.scan(
+                acc_fn, (g0, jnp.float32(0.0), jnp.float32(0.0)), mbs
+            )
+
+        err = opt_state.get("compress_err")
+        grads, new_err, _ = compress_grads(grads, cfg.compression, err)
+        lr_scale = sched(opt_state["adam"]["step"])
+        new_params, new_adam, stats = adamw_update(
+            cfg.optimizer, params, grads, opt_state["adam"], lr_scale
+        )
+        new_opt = {"adam": new_adam}
+        if cfg.compression == "int8":
+            new_opt["compress_err"] = new_err
+        metrics = {"loss": loss, "aux": aux, "grad_norm": stats["grad_norm"],
+                   "lr_scale": lr_scale}
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def opt_state_specs(spec: ModelSpec, cfg: TrainCfg = TrainCfg()):
+    ps = param_specs(spec)
+    st = {
+        "adam": {
+            "m": jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), ps),
+            "v": jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), ps),
+            "step": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+    }
+    if cfg.compression == "int8":
+        st["compress_err"] = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), ps
+        )
+    return st
+
+
+def opt_state_shardings(spec: ModelSpec, mesh, cfg: TrainCfg = TrainCfg()):
+    psh = param_shardings(spec, mesh)
+    st = {
+        "adam": {
+            "m": psh,
+            "v": psh,
+            "step": NamedSharding(mesh, P()),
+        }
+    }
+    if cfg.compression == "int8":
+        st["compress_err"] = psh
+    return st
+
+
+def init_opt_state(spec: ModelSpec, params, cfg: TrainCfg = TrainCfg()):
+    from repro.optim import adamw_init
+
+    st = {"adam": adamw_init(params)}
+    if cfg.compression == "int8":
+        st["compress_err"] = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params
+        )
+    return st
+
+
+# ---------------------------------------------------------------------------
+# Serve: prefill + decode
+# ---------------------------------------------------------------------------
+
+
+def make_prefill_step(spec: ModelSpec, kv_chunk: int = 1024):
+    def prefill(params, batch):
+        if spec.family == "encdec":
+            enc_h = dec.encoder_forward(spec, params, batch["frames"], remat=True)
+            x = dec.embed_tokens(spec, params, batch["tokens"],
+                                 jnp.arange(batch["tokens"].shape[1]))
+            h, _, caches = dec.decoder_forward(
+                spec, params, x, positions=jnp.arange(x.shape[1]),
+                want_cache=True, kv_chunk=kv_chunk, enc_h=enc_h, remat=True,
+            )
+        elif spec.family == "vlm":
+            pre = batch["patches"].astype(params["embed"].dtype) @ params["frontend_proj"]
+            tx = dec.embed_tokens(spec, params, batch["tokens"])
+            x = jnp.concatenate([pre, tx], axis=1)
+            h, _, caches = dec.decoder_forward(
+                spec, params, x, positions=jnp.arange(x.shape[1]),
+                prefix_len=spec.n_prefix_tokens, want_cache=True,
+                kv_chunk=kv_chunk, remat=True,
+            )
+        else:
+            x = dec.embed_tokens(spec, params, batch["tokens"])
+            h, _, caches = dec.decoder_forward(
+                spec, params, x, positions=jnp.arange(x.shape[1]),
+                want_cache=True, kv_chunk=kv_chunk, remat=True,
+            )
+        last = h[:, -1, :]
+        logits = dec.lm_logits(spec, params, last[:, None, :])
+        return logits, caches
+
+    return prefill
+
+
+def make_decode_step(spec: ModelSpec):
+    def decode(params, caches, tokens, pos):
+        """tokens: (B, 1) int32; pos: scalar int32 current length."""
+        x = dec.embed_tokens(spec, params, tokens, jnp.full((1,), pos))
+        h, new_caches = dec.decoder_decode(spec, params, x, caches, pos)
+        logits = dec.lm_logits(spec, params, h).astype(jnp.float32)
+        logits = logits + dec.vocab_mask_bias(spec)[None, None, :]
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, new_caches
+
+    return decode
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct) + shardings per shape
+# ---------------------------------------------------------------------------
+
+
+def cache_len(spec: ModelSpec, seq: int) -> int:
+    if spec.swa_window is not None:
+        return min(spec.swa_window, seq)
+    return seq
+
+
+def cache_specs(spec: ModelSpec, batch: int, seq: int, dtype=jnp.bfloat16):
+    """ShapeDtypeStruct tree of decode caches (stacked over superblocks)."""
+    nsb = spec.n_superblocks
+    Hkv, hd = spec.padded_n_kv, spec.hd
+    Lc = cache_len(spec, seq)
+    out = {}
+    for s in range(spec.period):
+        if spec.is_attn_slot(s):
+            c = {
+                "k": jax.ShapeDtypeStruct((nsb, batch, Lc, Hkv, hd), dtype),
+                "v": jax.ShapeDtypeStruct((nsb, batch, Lc, Hkv, hd), dtype),
+            }
+            if spec.family == "encdec":
+                Se = 1500  # whisper encoder frames
+                c["cross_k"] = jax.ShapeDtypeStruct((nsb, batch, Se, Hkv, hd), dtype)
+                c["cross_v"] = jax.ShapeDtypeStruct((nsb, batch, Se, Hkv, hd), dtype)
+        else:
+            cfg = spec.ssm
+            di = cfg.d_inner(spec.d_model)
+            nh = cfg.n_heads(spec.d_model)
+            c = {
+                "ssm": jax.ShapeDtypeStruct(
+                    (nsb, batch, nh, cfg.head_dim, cfg.d_state), jnp.float32
+                ),
+                "conv": jax.ShapeDtypeStruct(
+                    (nsb, batch, 3, di + 2 * cfg.d_state), dtype
+                ),
+            }
+        out[f"slot{s}"] = c
+    return out
+
+
+def cache_pspecs(spec: ModelSpec, mesh, batch: int):
+    """PartitionSpec tree matching cache_specs."""
+    baxes = _pad_batch_axes(mesh, batch)
+    b = baxes if baxes else None
+    # sequence dim of KV caches: shard over "model"; for batch=1 long-context
+    # also shard over "data" (flash-decoding over 256 chips).
+    seq_ax = ("data", "model") if batch == 1 else "model"
+    kvh = "model" if spec.kv_shardable else None
+    seq_ax = None if kvh == "model" else seq_ax
+    out = {}
+    for s in range(spec.period):
+        if spec.is_attn_slot(s):
+            c = {"k": P(None, b, seq_ax, kvh, None),
+                 "v": P(None, b, seq_ax, kvh, None)}
+            if spec.family == "encdec":
+                c["cross_k"] = P(None, b, None, kvh, None)
+                c["cross_v"] = P(None, b, None, kvh, None)
+        else:
+            c = {"ssm": P(None, b, "model", None, None),
+                 "conv": P(None, b, None, None)}
+        out[f"slot{s}"] = c
+    return out
+
+
+def input_specs(spec: ModelSpec, shape_name: str):
+    """ShapeDtypeStruct stand-ins for every model input of a shape cell."""
+    sh = SHAPES[shape_name]
+    B, S = sh["batch"], sh["seq"]
+    tok = lambda b, s: jax.ShapeDtypeStruct((b, s), jnp.int32)
+    if sh["kind"] == "train":
+        batch = {"tokens": tok(B, S), "labels": tok(B, S)}
+        if spec.family == "encdec":
+            batch["frames"] = jax.ShapeDtypeStruct(
+                (B, S, spec.frontend_dim), jnp.bfloat16
+            )
+        if spec.family == "vlm":
+            npre = spec.n_prefix_tokens
+            batch = {
+                "patches": jax.ShapeDtypeStruct((B, npre, spec.frontend_dim),
+                                                jnp.bfloat16),
+                "tokens": tok(B, S - npre),
+                "labels": tok(B, S - npre),
+            }
+        return {"batch": batch}
+    if sh["kind"] == "prefill":
+        batch = {"tokens": tok(B, S)}
+        if spec.family == "encdec":
+            batch["frames"] = jax.ShapeDtypeStruct(
+                (B, S, spec.frontend_dim), jnp.bfloat16
+            )
+        if spec.family == "vlm":
+            npre = spec.n_prefix_tokens
+            batch = {
+                "patches": jax.ShapeDtypeStruct((B, npre, spec.frontend_dim),
+                                                jnp.bfloat16),
+                "tokens": tok(B, S - npre),
+            }
+        return {"batch": batch}
+    # decode
+    return {
+        "caches": cache_specs(spec, B, S),
+        "tokens": tok(B, 1),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def input_pspecs(spec: ModelSpec, mesh, shape_name: str):
+    sh = SHAPES[shape_name]
+    B = sh["batch"]
+    baxes = _pad_batch_axes(mesh, B)
+    b = baxes if baxes else None
+    if sh["kind"] in ("train", "prefill"):
+        batch = {k: P(b, None) for k in ("tokens", "labels") }
+        if sh["kind"] == "prefill":
+            batch = {"tokens": P(b, None)}
+        if spec.family == "encdec":
+            batch["frames"] = P(b, None, None)
+        if spec.family == "vlm":
+            batch["patches"] = P(b, None, None)
+        return {"batch": batch}
+    return {
+        "caches": cache_pspecs(spec, mesh, B),
+        "tokens": P(b, None),
+        "pos": P(),
+    }

@@ -1,0 +1,3 @@
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.optim.schedules import make_schedule
+from repro.optim.compress import compress_grads

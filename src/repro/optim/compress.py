@@ -1,0 +1,46 @@
+"""Gradient compression for the DP all-reduce, with error feedback.
+
+On a real pod the compression wraps the cross-replica all-reduce (compress →
+reduce → decompress).  Under single-program jit the DP reduction is implicit in
+XLA's sharding propagation, so what we implement — and what matters for
+*convergence* behaviour — is the quantise→dequantise transform applied to the
+gradient contribution of each replica, plus an error-feedback accumulator that
+carries the quantisation residual to the next step (Seide et al. / PowerSGD
+practice).  The *bandwidth* effect is accounted analytically in the roofline
+(collective bytes ÷ compression ratio); see EXPERIMENTS.md §Perf.
+
+Modes: "none", "bf16" (fp32→bf16 on the wire, 2×), "int8" (8-bit per-tensor
+scale, 4×, with error feedback).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_grads(grads, mode: str, err_state=None):
+    """Returns (decompressed_grads, new_err_state, wire_ratio)."""
+    if mode == "none":
+        return grads, err_state, 1.0
+    if mode == "bf16":
+        out = jax.tree.map(lambda g: g.astype(jnp.bfloat16).astype(jnp.float32), grads)
+        return out, err_state, 2.0
+    if mode == "int8":
+        if err_state is None:
+            err_state = jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+        def q(g, e):
+            g = g.astype(jnp.float32) + e
+            scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+            qi = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+            deq = qi.astype(jnp.float32) * scale
+            return deq, g - deq
+
+        flat, tdef = jax.tree.flatten(grads)
+        flat_e = tdef.flatten_up_to(err_state)
+        pairs = [q(g, e) for g, e in zip(flat, flat_e)]
+        out = tdef.unflatten([p[0] for p in pairs])
+        new_err = tdef.unflatten([p[1] for p in pairs])
+        return out, new_err, 4.0
+    raise ValueError(mode)

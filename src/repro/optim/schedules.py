@@ -1,0 +1,29 @@
+"""LR schedules: cosine (default) and WSD (warmup-stable-decay, MiniCPM)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def make_schedule(kind: str, total_steps: int, warmup: int = 100,
+                  decay_frac: float = 0.1, min_ratio: float = 0.1):
+    """Returns step -> lr multiplier in [0, 1]."""
+
+    def cosine(step):
+        step = jnp.asarray(step, jnp.float32)
+        w = jnp.clip(step / jnp.maximum(warmup, 1), 0.0, 1.0)
+        t = jnp.clip((step - warmup) / jnp.maximum(total_steps - warmup, 1), 0.0, 1.0)
+        cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return w * cos
+
+    def wsd(step):
+        """MiniCPM warmup-stable-decay: flat LR, then a short sharp decay tail."""
+        step = jnp.asarray(step, jnp.float32)
+        w = jnp.clip(step / jnp.maximum(warmup, 1), 0.0, 1.0)
+        decay_start = total_steps * (1.0 - decay_frac)
+        t = jnp.clip((step - decay_start) / jnp.maximum(total_steps - decay_start, 1),
+                     0.0, 1.0)
+        stable = jnp.where(step < decay_start, 1.0, 1.0 - (1.0 - min_ratio) * t)
+        return w * stable
+
+    return {"cosine": cosine, "wsd": wsd}[kind]

@@ -1,0 +1,4 @@
+"""Distributed runtime: checkpoint/restart (elastic), fault tolerance."""
+
+from repro.runtime.checkpoint import CheckpointManager
+from repro.runtime.ft import Heartbeat, retry_step, bounded_staleness_merge

@@ -1,0 +1,148 @@
+"""Sharded checkpoint/restart with elastic re-sharding.
+
+Layout (one directory per step)::
+
+    <root>/step_000123/
+        manifest.json          # pytree structure, shapes, dtypes, step meta
+        arr_000000.npy ...     # one file per leaf (host-gathered)
+        _COMPLETE              # written LAST -> crash-safe commit marker
+
+Design points for 1000+-node runs (DESIGN.md §6):
+
+  * atomic commit: everything is written into ``<dir>.tmp`` then renamed;
+    readers only trust directories containing ``_COMPLETE``.  A job killed
+    mid-write never corrupts the latest checkpoint.
+  * elastic restore: leaves are stored UNSHARDED (host-gathered); ``restore``
+    re-shards onto whatever mesh/sharding the *restoring* job provides — a
+    512-chip checkpoint restores onto 256 chips after losing a pod (tested
+    in tests/test_runtime.py with forced multi-device CPU).
+  * per-partition GS checkpoints: the paper's partitions are independent, so
+    each partition saves its own tree under ``partition_<k>/`` and a failed
+    node retrains/restores alone — failure recovery cost is O(1/n).
+  * retention: ``keep`` newest checkpoints are kept, older ones pruned.
+
+On a real multi-host pod, `jax.experimental.multihost_utils` gathers would
+replace ``jax.device_get`` and only process 0 would write; the layout and
+commit protocol stay identical (single-process here).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import time
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+class CheckpointManager:
+    def __init__(self, root: str, *, keep: int = 3):
+        self.root = root
+        self.keep = keep
+        os.makedirs(root, exist_ok=True)
+
+    # ------------------------------------------------------------------
+
+    def _step_dir(self, step: int, partition: Optional[int] = None) -> str:
+        d = os.path.join(self.root, f"step_{step:09d}")
+        if partition is not None:
+            d = os.path.join(d, f"partition_{partition}")
+        return d
+
+    def save(self, step: int, tree: Any, *, partition: Optional[int] = None,
+             extra: Optional[dict] = None):
+        """Host-gather every leaf and atomically write one checkpoint."""
+        final = self._step_dir(step, partition)
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp, exist_ok=True)
+
+        leaves, treedef = _flatten_with_paths(tree)
+        manifest = {
+            "step": step,
+            "time": time.time(),
+            "treedef": str(treedef),
+            "n_leaves": len(leaves),
+            "extra": extra or {},
+            "leaves": [],
+        }
+        for i, leaf in enumerate(leaves):
+            arr = np.asarray(jax.device_get(leaf))
+            np.save(os.path.join(tmp, f"arr_{i:06d}.npy"), arr)
+            manifest["leaves"].append(
+                {"shape": list(arr.shape), "dtype": str(arr.dtype)})
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        with open(os.path.join(tmp, "_COMPLETE"), "w") as f:
+            f.write("ok")
+        os.makedirs(os.path.dirname(final) or ".", exist_ok=True)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        self._prune()
+        return final
+
+    def _prune(self):
+        steps = self.all_steps()
+        for s in steps[: -self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.root, f"step_{s:09d}"),
+                          ignore_errors=True)
+
+    # ------------------------------------------------------------------
+
+    def all_steps(self):
+        out = []
+        for name in sorted(os.listdir(self.root)):
+            if not name.startswith("step_") or name.endswith(".tmp"):
+                continue
+            d = os.path.join(self.root, name)
+            complete = os.path.exists(os.path.join(d, "_COMPLETE")) or any(
+                os.path.exists(os.path.join(d, p, "_COMPLETE"))
+                for p in os.listdir(d) if p.startswith("partition_")
+            )
+            if complete:
+                out.append(int(name[5:]))
+        return out
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, like: Any, *,
+                partition: Optional[int] = None, shardings: Any = None):
+        """Restore into the structure of ``like``; if ``shardings`` is given
+        (a matching tree of NamedSharding), leaves are device_put with it —
+        this is the elastic path: the target mesh may differ arbitrarily
+        from the mesh that saved."""
+        d = self._step_dir(step, partition)
+        assert os.path.exists(os.path.join(d, "_COMPLETE")), d
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        leaves, treedef = _flatten_with_paths(like)
+        assert len(leaves) == manifest["n_leaves"], (
+            f"leaf count mismatch: have {len(leaves)}, "
+            f"checkpoint {manifest['n_leaves']}")
+        arrs = []
+        for i, ref in enumerate(leaves):
+            arr = np.load(os.path.join(d, f"arr_{i:06d}.npy"))
+            want = tuple(ref.shape) if hasattr(ref, "shape") else None
+            assert want is None or want == arr.shape, (
+                f"leaf {i}: shape {arr.shape} != expected {want}")
+            arrs.append(arr)
+        out = jax.tree.unflatten(treedef, arrs)
+        if shardings is not None:
+            out = jax.tree.map(
+                lambda a, s: jax.device_put(a, s), out, shardings)
+        else:
+            out = jax.tree.map(jnp.asarray, out)
+        return out, manifest["extra"]

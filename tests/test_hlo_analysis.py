@@ -1,0 +1,102 @@
+"""HLO analyzer: flop/byte/collective accounting against known-cost programs.
+
+The analyzer is the measurement instrument behind §Roofline — these tests
+pin its semantics: scan trip-count multiplication, dot flop formulas,
+slice-aware fusion I/O, collective wire models, replica-group parsing.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax import lax
+
+from repro.launch.hlo_analysis import (HloModule, _parse_groups, _wire_bytes,
+                                       analyze)
+
+
+def _compile_text(f, *args):
+    return jax.jit(f).lower(*args).compile().as_text()
+
+
+def test_dot_flops_exact():
+    a = jnp.zeros((32, 64))
+    b = jnp.zeros((64, 128))
+    r = analyze(_compile_text(lambda x, y: x @ y, a, b))
+    assert r["flops"] == pytest.approx(2 * 32 * 64 * 128, rel=0.01)
+
+
+def test_scan_trip_count_multiplies():
+    W = jnp.zeros((8, 64, 64))
+    x0 = jnp.zeros((4, 64))
+
+    def f(x, Ws):
+        def body(x, w):
+            return jnp.tanh(x @ w), None
+        return lax.scan(body, x, Ws)[0].sum()
+
+    r = analyze(_compile_text(f, x0, W))
+    dots = 8 * 2 * 4 * 64 * 64
+    assert dots <= r["flops"] <= dots * 1.3
+
+
+def test_scan_hbm_counts_slices_not_whole_buffer():
+    # 16 layers x (64x64) weights: per trip the body should read ~one layer
+    # (16 KB), not the whole 256 KB stack
+    W = jnp.zeros((16, 64, 64))
+    x0 = jnp.zeros((1, 64))
+
+    def f(x, Ws):
+        return lax.scan(lambda x, w: (x @ w, None), x, Ws)[0].sum()
+
+    r = analyze(_compile_text(f, x0, W))
+    whole_stack_every_trip = 16 * (16 * 64 * 64 * 4)
+    assert r["hbm_bytes"] < whole_stack_every_trip / 2
+
+
+def test_no_collectives_on_single_device():
+    r = analyze(_compile_text(lambda x: (x * 2).sum(), jnp.zeros((128,))))
+    assert r["collective_wire_bytes"] == 0
+    assert r["n_collective_sites"] == 0
+
+
+def test_wire_models():
+    # all-gather: out - in
+    assert _wire_bytes("all-gather", 100, 800, 8) == 700
+    # ring all-reduce: 2x(g-1)/g
+    assert _wire_bytes("all-reduce", 800, 800, 8) == 2 * 800 * 7 // 8
+    assert _wire_bytes("reduce-scatter", 800, 100, 8) == 800
+    # group of 1 = free
+    assert _wire_bytes("all-reduce", 800, 800, 1) == 0
+
+
+def test_replica_group_pod_span_detection():
+    line = "replica_groups={{0,1},{2,3}}"
+    size, spans = _parse_groups(line, pod_size=2)
+    assert size == 2 and spans is False
+    line = "replica_groups={{0,2},{1,3}}"
+    size, spans = _parse_groups(line, pod_size=2)
+    assert size == 2 and spans is True
+
+
+def test_replica_group_iota_format():
+    line = "replica_groups=[2,4]<=[8]"
+    size, spans = _parse_groups(line, pod_size=4)
+    assert size == 4 and spans is False      # {0..3},{4..7} within pods
+    line2 = "replica_groups=[4,2]<=[2,4]T(1,0)"
+    size2, spans2 = _parse_groups(line2, pod_size=4)
+    assert size2 == 2 and spans2 is True     # pairs {0,4},... cross pods
+
+
+def test_conv_flops_order_of_magnitude():
+    x = jnp.zeros((1, 3, 16, 16))
+    k = jnp.zeros((8, 3, 3, 3))
+
+    def f(x, k):
+        return lax.conv_general_dilated(
+            x, k, (1, 1), "SAME",
+            dimension_numbers=("NCHW", "OIHW", "NCHW")).sum()
+
+    r = analyze(_compile_text(f, x, k))
+    expect = 2 * (1 * 8 * 16 * 16) * (3 * 3 * 3)
+    assert expect * 0.5 <= r["flops"] <= expect * 2.0

@@ -1,0 +1,167 @@
+"""Checkpoint/restart (incl. elastic re-sharding), heartbeats, retry,
+bounded-staleness merge."""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.runtime import (CheckpointManager, Heartbeat,
+                           bounded_staleness_merge, retry_step)
+
+
+def tree_eq(a, b):
+    return all(
+        np.array_equal(np.asarray(x), np.asarray(y))
+        for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b))
+    )
+
+
+def make_tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {
+        "w": jax.random.normal(k, (8, 16)),
+        "nested": {"b": jnp.arange(10, dtype=jnp.int32),
+                   "s": jnp.float32(3.5)},
+    }
+
+
+def test_save_restore_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    tree = make_tree()
+    mgr.save(7, tree, extra={"note": "hi"})
+    assert mgr.latest_step() == 7
+    like = jax.tree.map(lambda x: jnp.zeros_like(x), tree)
+    got, extra = mgr.restore(7, like)
+    assert tree_eq(got, tree)
+    assert extra["note"] == "hi"
+
+
+def test_atomic_commit_ignores_partial(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, make_tree())
+    # simulate a crash mid-write: directory without _COMPLETE
+    os.makedirs(tmp_path / "step_000000002")
+    (tmp_path / "step_000000002" / "manifest.json").write_text("{}")
+    assert mgr.latest_step() == 1
+
+
+def test_retention(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, make_tree())
+    assert mgr.all_steps() == [3, 4]
+
+
+def test_shape_mismatch_rejected(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, make_tree())
+    bad = {"w": jnp.zeros((4, 4)),
+           "nested": {"b": jnp.zeros(10, jnp.int32), "s": jnp.float32(0)}}
+    with pytest.raises(AssertionError):
+        mgr.restore(1, bad)
+
+
+def test_per_partition_checkpoints(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    for p in range(3):
+        mgr.save(5, {"x": jnp.full((4,), p)}, partition=p)
+    like = {"x": jnp.zeros((4,))}
+    for p in range(3):
+        got, _ = mgr.restore(5, like, partition=p)
+        assert int(got["x"][0]) == p
+
+
+def test_bounded_staleness_merge(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=0)
+    like = {"x": jnp.zeros((2,))}
+    # partition 0 checkpointed at steps 10 and 20; partition 1 only at 10
+    mgr.save(10, {"x": jnp.ones((2,)) * 10}, partition=0)
+    mgr.save(10, {"x": jnp.ones((2,)) * 11}, partition=1)
+    mgr.save(20, {"x": jnp.ones((2,)) * 20}, partition=0)
+    trees, steps, laggards = bounded_staleness_merge(mgr, 2, like, max_lag=5)
+    assert steps == [20, 10]
+    assert laggards == [1]           # partition 1 lags beyond max_lag
+    assert float(trees[0]["x"][0]) == 20 and float(trees[1]["x"][0]) == 11
+
+
+def test_retry_step_recovers():
+    calls = {"n": 0}
+
+    def flaky(x):
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise RuntimeError("transient")
+        return x + 1
+
+    assert retry_step(flaky, 1, retries=3) == 2
+    assert calls["n"] == 3
+    with pytest.raises(RuntimeError):
+        retry_step(lambda: (_ for _ in ()).throw(RuntimeError("perm")),
+                   retries=1)
+
+
+def test_heartbeat_staleness(tmp_path):
+    hb0 = Heartbeat(str(tmp_path), "w0", interval=0)
+    hb1 = Heartbeat(str(tmp_path), "w1", interval=0)
+    hb0.beat(1, force=True)
+    hb1.beat(1, force=True)
+    assert hb0.stale(timeout=60) == []
+    # age w1's heartbeat artificially
+    p = hb1.path()
+    rec = json.loads(open(p).read())
+    rec["time"] -= 120
+    open(p, "w").write(json.dumps(rec))
+    assert hb0.stale(timeout=60) == ["w1"]
+
+
+ELASTIC_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={n}"
+import sys
+import jax, jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+sys.path.insert(0, "{src}")
+from repro.runtime import CheckpointManager
+
+mode, root = sys.argv[1], sys.argv[2]
+mesh = jax.make_mesh(({d}, 2), ("data", "model"))
+sh = NamedSharding(mesh, P("data", "model"))
+mgr = CheckpointManager(root)
+if mode == "save":
+    x = jax.device_put(jnp.arange(64, dtype=jnp.float32).reshape(8, 8), sh)
+    mgr.save(3, {{"x": x}})
+else:
+    like = {{"x": jnp.zeros((8, 8), jnp.float32)}}
+    got, _ = mgr.restore(3, like, shardings={{"x": sh}})
+    assert got["x"].sharding.num_devices == {n}, got["x"].sharding
+    np.testing.assert_array_equal(
+        np.asarray(got["x"]), np.arange(64, dtype=np.float32).reshape(8, 8))
+print("OK", mode)
+"""
+
+
+@pytest.mark.slow
+def test_elastic_restore_across_meshes(tmp_path):
+    """Save on an 8-device (4,2) mesh, restore onto 4-device (2,2) — the
+    'lost a pod' path.  Subprocesses force different CPU device counts."""
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    root = str(tmp_path / "ck")
+
+    def run(n, d, mode):
+        code = ELASTIC_SCRIPT.format(n=n, d=d, src=os.path.abspath(src))
+        out = subprocess.run([sys.executable, "-c", code, mode, root],
+                             capture_output=True, text=True, timeout=300)
+        assert out.returncode == 0, out.stderr[-2000:]
+        assert f"OK {mode}" in out.stdout
+
+    run(8, 4, "save")
+    run(4, 2, "restore")

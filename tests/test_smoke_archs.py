@@ -1,0 +1,111 @@
+"""Per-architecture smoke tests: reduced config, one forward/train/decode step
+on CPU, asserting output shapes and absence of NaNs (assignment deliverable f).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ALIASES, get_smoke
+from repro.models import (
+    TrainCfg,
+    init_opt_state,
+    init_params,
+    make_decode_step,
+    make_prefill_step,
+    make_train_step,
+)
+from repro.models.steps import cache_specs
+
+ARCHS = list(ALIASES.keys())
+B, S = 2, 64
+
+
+def make_batch(spec, rng):
+    r1, r2 = jax.random.split(jax.random.PRNGKey(rng))
+    tokens = jax.random.randint(r1, (B, S), 0, spec.vocab, jnp.int32)
+    labels = jax.random.randint(r2, (B, S), 0, spec.vocab, jnp.int32)
+    batch = {"tokens": tokens, "labels": labels}
+    if spec.family == "encdec":
+        batch["frames"] = jax.random.normal(r1, (B, S, spec.frontend_dim),
+                                            jnp.bfloat16)
+    if spec.family == "vlm":
+        npre = spec.n_prefix_tokens
+        batch = {
+            "patches": jax.random.normal(r1, (B, npre, spec.frontend_dim),
+                                         jnp.bfloat16),
+            "tokens": tokens[:, : S - npre],
+            "labels": labels[:, : S - npre],
+        }
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step(arch):
+    spec = get_smoke(arch)
+    params = init_params(spec, jax.random.PRNGKey(0))
+    cfg = TrainCfg(total_steps=10, kv_chunk=32)
+    step = jax.jit(make_train_step(spec, cfg))
+    opt = init_opt_state(spec, params, cfg)
+    batch = make_batch(spec, 1)
+    new_params, new_opt, metrics = step(params, opt, batch)
+    loss = float(metrics["loss"])
+    assert np.isfinite(loss), f"{arch}: loss={loss}"
+    assert loss > 0
+    # params actually changed
+    l0 = jax.tree.leaves(params)[0]
+    l1 = jax.tree.leaves(new_params)[0]
+    assert l0.shape == l1.shape
+    gn = float(metrics["grad_norm"])
+    assert np.isfinite(gn) and gn > 0, f"{arch}: grad_norm={gn}"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_two_steps_loss_finite(arch):
+    spec = get_smoke(arch)
+    params = init_params(spec, jax.random.PRNGKey(0))
+    cfg = TrainCfg(total_steps=10, kv_chunk=32)
+    step = jax.jit(make_train_step(spec, cfg))
+    opt = init_opt_state(spec, params, cfg)
+    for i in range(2):
+        params, opt, metrics = step(params, opt, make_batch(spec, i))
+        assert np.isfinite(float(metrics["loss"]))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_and_decode(arch):
+    spec = get_smoke(arch)
+    params = init_params(spec, jax.random.PRNGKey(0))
+    prefill = jax.jit(make_prefill_step(spec, kv_chunk=32))
+    batch = make_batch(spec, 2)
+    batch.pop("labels", None)
+    logits, caches = prefill(params, batch)
+    assert logits.shape[0] == B and logits.shape[-1] == spec.padded_vocab
+    assert np.isfinite(np.asarray(logits, np.float32)).all(), arch
+
+    # decode continues from a fresh fixed-size cache (dry-run style)
+    Lc = 32
+    cspecs = cache_specs(spec, B, Lc)
+    caches0 = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), cspecs)
+    if spec.family == "encdec":
+        # reuse prefill cross-kv shapes: re-zero is fine for smoke
+        pass
+    decode = jax.jit(make_decode_step(spec))
+    tok = jnp.zeros((B, 1), jnp.int32)
+    pos = jnp.int32(0)
+    for i in range(3):
+        tok, caches0 = decode(params, caches0, tok, pos + i)
+        assert tok.shape == (B, 1)
+        assert int(tok.max()) < spec.vocab, f"{arch}: sampled padded-vocab token"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_microbatched_train_matches_shapes(arch):
+    spec = get_smoke(arch)
+    params = init_params(spec, jax.random.PRNGKey(0))
+    cfg = TrainCfg(total_steps=10, n_microbatches=2, kv_chunk=32)
+    step = jax.jit(make_train_step(spec, cfg))
+    opt = init_opt_state(spec, params, cfg)
+    _, _, metrics = step(params, opt, make_batch(spec, 3))
+    assert np.isfinite(float(metrics["loss"]))

@@ -1,0 +1,149 @@
+"""System-level checks: public API surface, config registry integrity,
+dry-run machinery on a reduced mesh (subprocess), spec invariants."""
+
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import ALIASES, all_arch_ids, get_smoke, get_spec
+from repro.models.spec import ModelSpec, logical_to_pspec, rules_for
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def test_public_api_imports():
+    import repro.core as core
+    import repro.data as data
+    import repro.kernels as kernels
+    import repro.runtime as runtime
+    for name in ("render", "Gaussians", "TileGrid", "run_pipeline",
+                 "GSTrainCfg", "orbital_rig"):
+        assert hasattr(core, name), name
+    assert hasattr(kernels, "rasterize_tiles")
+    assert hasattr(runtime, "CheckpointManager")
+    assert hasattr(data, "extract_isosurface")
+
+
+def test_registry_covers_all_assigned_archs():
+    assigned = {
+        "minicpm-2b", "h2o-danube-1.8b", "qwen1.5-4b", "codeqwen1.5-7b",
+        "llama4-maverick-400b-a17b", "mixtral-8x22b", "mamba2-780m",
+        "jamba-v0.1-52b", "whisper-tiny", "paligemma-3b",
+    }
+    assert set(ALIASES) == assigned
+
+
+@pytest.mark.parametrize("arch", all_arch_ids())
+def test_spec_invariants(arch):
+    spec = get_spec(arch)
+    smoke = get_smoke(arch)
+    assert spec.family == smoke.family
+    assert spec.n_layers % spec.period == 0
+    if spec.n_q:
+        assert spec.padded_n_q % 16 == 0          # model-axis divisible
+        assert spec.padded_n_q % spec.padded_n_kv == 0
+    assert spec.padded_vocab % (128 * 16) == 0
+    assert spec.param_count() > 0
+    # MoE active params < total
+    if spec.moe is not None:
+        assert spec.param_count(active_only=True) < spec.param_count()
+
+
+PUBLISHED_PARAMS = {
+    # name -> (published count, tolerance) — sanity that configs track the
+    # models they claim (embedding-heavy small models drift most)
+    "minicpm-2b": (2.7e9, 0.35),
+    "qwen1.5-4b": (4e9, 0.35),
+    "codeqwen1.5-7b": (7e9, 0.35),
+    "mixtral-8x22b": (141e9, 0.25),
+    "mamba2-780m": (780e6, 0.35),
+}
+
+
+@pytest.mark.parametrize("arch", list(PUBLISHED_PARAMS))
+def test_param_counts_near_published(arch):
+    want, tol = PUBLISHED_PARAMS[arch]
+    got = get_spec(arch).param_count()
+    assert abs(got - want) / want < tol, (arch, got, want)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.sampled_from(all_arch_ids()),
+       st.sampled_from([("data", "model"), ("pod", "data", "model")]))
+def test_param_pspecs_valid_on_any_mesh(arch, mesh_axes):
+    """Every REAL parameter's PartitionSpec is well-formed on any mesh: no
+    mesh axis appears twice within one leaf's spec, and every referenced
+    axis exists on the mesh."""
+    from repro.models.params import PDef, param_defs
+
+    spec = get_spec(arch)
+    leaves = []
+
+    def collect(tree):
+        if isinstance(tree, PDef):
+            leaves.append(tree)
+        else:
+            for v in tree.values():
+                collect(v)
+
+    collect(param_defs(spec))
+    assert leaves
+    for d in leaves:
+        ps = logical_to_pspec(d.logical, spec.sharding_policy, mesh_axes,
+                              spec.kv_shardable)
+        assert len(ps) == len(d.shape)
+        used = []
+        for entry in ps:
+            if entry is None:
+                continue
+            for ax in (entry if isinstance(entry, tuple) else (entry,)):
+                assert ax in mesh_axes
+                used.append(ax)
+        assert len(used) == len(set(used)), (d.logical, ps)
+
+
+DRYRUN_SMOKE = r"""
+import os, sys, json, subprocess
+env = dict(os.environ, REPRO_DRYRUN_DEVICES="8",
+           PYTHONPATH=r"%(src)s")
+out = subprocess.run(
+    [sys.executable, "-m", "repro.launch.dryrun", "--arch", "whisper-tiny",
+     "--shape", "train_4k", "--mesh", "both", "--out", sys.argv[1]],
+    env=env, capture_output=True, text=True, timeout=1200)
+print(out.stdout[-1500:], out.stderr[-500:])
+assert out.returncode == 0
+rec = json.load(open(sys.argv[1] + "/single/whisper-tiny__train_4k.json"))
+assert rec["status"] == "ok", rec.get("traceback", "")[-500:]
+assert rec["hlo"]["flops"] > 0
+assert rec["roofline"]["compute_s"] > 0
+rec2 = json.load(open(sys.argv[1] + "/multi/whisper-tiny__train_4k.json"))
+assert rec2["status"] == "ok"
+print("DRYRUN-SMOKE-OK")
+"""
+
+
+@pytest.mark.slow
+def test_dryrun_machinery_reduced_mesh(tmp_path):
+    code = DRYRUN_SMOKE % {"src": SRC}
+    out = subprocess.run([sys.executable, "-c", code, str(tmp_path)],
+                         capture_output=True, text=True, timeout=1500)
+    assert out.returncode == 0, (out.stdout[-2000:], out.stderr[-2000:])
+    assert "DRYRUN-SMOKE-OK" in out.stdout
+
+
+def test_mesh_module_is_lazy():
+    """Importing launch.mesh must not initialise jax devices."""
+    code = ("import sys; sys.path.insert(0, r'%s');"
+            "import jax; import repro.launch.mesh as m;"
+            "assert not jax._src.xla_bridge._backends;"
+            "print('LAZY-OK')" % SRC)
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=120)
+    assert out.returncode == 0, out.stderr[-1000:]
+    assert "LAZY-OK" in out.stdout
