@@ -1,0 +1,171 @@
+"""Batched multi-view rendering benchmark (tentpole acceptance gate).
+
+Two measurements of rendering V views on the cpu tier:
+
+  render-phase (headline, acceptance):  the pipeline's real usage — R
+      successive render_views calls over R different gaussian sets (GT,
+      per-partition GT, merged, ...), cold start.  The seed's per-view
+      Python loop rebuilt its jit closure per call, so every round paid a
+      full recompile plus V dispatches + V host syncs; the batched path
+      compiles once (cached jit) and issues one fused dispatch per chunk.
+
+  steady-state:  per-call wall-clock with compilation excluded on both
+      sides — the honest lower bound on the win (dispatch amortization +
+      cross-view vectorization only).
+
+Acceptance: render-phase speedup >= 2x for V >= 8.  Saves JSON under
+experiments/benchmarks/batched_render.json.
+
+    PYTHONPATH=src python -m benchmarks.bench_batched_render [--views 8]
+        [--res 64] [--points 4000] [--smoke]
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import save_result
+from repro.core import pipeline as pl
+from repro.core.cameras import select
+from repro.core.cameras import orbital_rig
+from repro.core.pipeline import gt_gaussians, render_views
+from repro.core.render import render, render_batch
+from repro.core.tiling import TileGrid
+from repro.data.isosurface import point_cloud_for
+
+
+def seed_render_views(g, cams, grid, *, K, impl="ref", bg=1.0):
+    """The seed's pipeline.render_views, verbatim shape: a fresh jit closure
+    (recompiles per call), one dispatch + host sync per view."""
+    rfn = jax.jit(lambda gg, cam: render(gg, cam, grid, K=K, impl=impl, bg=bg))
+    rgbs, covs = [], []
+    for v in range(cams.view.shape[0]):
+        out = rfn(g, select(cams, v))
+        rgbs.append(np.asarray(out.rgb))
+        covs.append(np.asarray(out.coverage))
+    return np.stack(rgbs), np.stack(covs)
+
+
+def _steady(fn, *, reps: int) -> float:
+    fn()                                   # warmup: compile + first run
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run(*, views: int = 8, res: int = 64, n_points: int = 4000, K: int = 32,
+        rounds: int = 5, reps: int = 3, quick: bool = False,
+        gate_floor: float = 2.0):
+    if quick:
+        views, res, n_points, reps = max(4, views // 2), min(res, 48), 1500, 2
+    pts, cols = point_cloud_for("sphere_shell", n_points)
+    center = 0.5 * (pts.max(0) + pts.min(0))
+    extent = float(np.linalg.norm(pts.max(0) - pts.min(0)))
+    cams = orbital_rig(views, center, 1.5 * extent, width=res, height=res)
+    grid = TileGrid(res, res, 8, 16)
+    # R distinct same-shaped gaussian sets — run_pipeline(n_parts=2) makes
+    # exactly 5 such render_views calls per run (global GT, 2x partition GT,
+    # merged eval, boundary coverage)
+    gs = [gt_gaussians(pts + 0.001 * r, cols) for r in range(rounds)]
+
+    # parity first — a fast wrong renderer is not a speedup
+    rgb_l, _ = seed_render_views(gs[0], cams, grid, K=K)
+    rgb_b, _ = render_views(gs[0], cams, grid, K=K, impl="ref", batch=views)
+    np.testing.assert_allclose(rgb_l, rgb_b, rtol=1e-5, atol=1e-5)
+
+    # ---- render phase, cold start on both sides ----
+    pl._render_batch_jit.cache_clear()
+    jax.clear_caches()
+    t0 = time.perf_counter()
+    for g in gs:
+        seed_render_views(g, cams, grid, K=K)
+    t_loop_phase = time.perf_counter() - t0
+
+    jax.clear_caches()
+    t0 = time.perf_counter()
+    for g in gs:
+        render_views(g, cams, grid, K=K, impl="ref", batch=views)
+    t_batch_phase = time.perf_counter() - t0
+    phase_speedup = t_loop_phase / t_batch_phase
+
+    # ---- steady state (compile excluded on both sides) ----
+    rfn = jax.jit(lambda gg, cam: render(gg, cam, grid, K=K, impl="ref"))
+    rb = jax.jit(lambda gg, cc: render_batch(gg, cc, grid, K=K, impl="ref"))
+    g = gs[0]
+    vi = jnp.arange(views)
+
+    def loop_steady():
+        outs = []
+        for v in range(views):
+            out = rfn(g, select(cams, v))
+            outs.append((np.asarray(out.rgb), np.asarray(out.coverage)))
+        return outs
+
+    def batch_steady():
+        out = rb(g, select(cams, vi))
+        return np.asarray(out.rgb), np.asarray(out.coverage)
+
+    t_loop_ss = _steady(loop_steady, reps=reps)
+    t_batch_ss = _steady(batch_steady, reps=reps)
+    ss_speedup = t_loop_ss / t_batch_ss
+
+    print(f"\n[batched_render] V={views} res={res} N={n_points} K={K} "
+          f"rounds={rounds}")
+    print(f"  render phase: loop {t_loop_phase*1e3:8.1f} ms   "
+          f"batch {t_batch_phase*1e3:8.1f} ms   ({phase_speedup:.2f}x)")
+    print(f"  steady state: loop {t_loop_ss*1e3:8.1f} ms   "
+          f"batch {t_batch_ss*1e3:8.1f} ms   ({ss_speedup:.2f}x)")
+    gated = views >= 8            # the speedup gate only binds at V >= 8
+    ok = phase_speedup >= gate_floor or not gated
+    print(f"  acceptance (render phase >={gate_floor}x for V>=8): "
+          f"{'PASS' if ok else 'FAIL'}" + ("" if gated else " (ungated: V<8)"))
+
+    save_result("batched_render", {
+        "views": views, "res": res, "n_points": n_points, "K": K,
+        "rounds": rounds,
+        "t_loop_phase_s": t_loop_phase, "t_batch_phase_s": t_batch_phase,
+        "phase_speedup": phase_speedup,
+        "t_loop_steady_s": t_loop_ss, "t_batch_steady_s": t_batch_ss,
+        "steady_speedup": ss_speedup,
+        # what was actually tested: the floor used and whether V bound it —
+        # "pass" at floor 1.3 or ungated (V<8) is NOT the 2x criterion
+        "gate_floor": gate_floor, "gated": gated, "gate_pass": ok,
+        "meets_2x_criterion": bool(gated and phase_speedup >= 2.0),
+    })
+    if not ok:
+        # fail the build, not just the log line.  Local/default runs gate
+        # at the 2x acceptance criterion; CI passes --gate-floor 1.3 so a
+        # noisy shared runner can't flake the build while a true regression
+        # (e.g. reintroducing per-chunk recompiles, ~1.0x) still fails.
+        raise SystemExit(
+            f"batched_render acceptance FAILED: {phase_speedup:.2f}x < "
+            f"{gate_floor}x at V={views}")
+    return phase_speedup
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--views", type=int, default=8)
+    ap.add_argument("--res", type=int, default=64)
+    ap.add_argument("--points", type=int, default=4000)
+    ap.add_argument("--K", type=int, default=32)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny settings for CI smoke runs")
+    ap.add_argument("--gate-floor", type=float, default=2.0,
+                    help="min render-phase speedup at V>=8 before exiting 1 "
+                         "(CI uses a lower floor to absorb runner noise)")
+    args = ap.parse_args()
+    run(views=args.views, res=args.res, n_points=args.points, K=args.K,
+        quick=args.smoke, gate_floor=args.gate_floor)
+
+
+if __name__ == "__main__":
+    main()

@@ -72,4 +72,10 @@ def orbital_rig(n_views: int, center, radius: float, *, width: int, height: int,
 
 
 def select(rig: Camera, idx) -> Camera:
+    """Scalar idx -> one camera; array idx -> a view-batched Camera."""
     return Camera(rig.view[idx], rig.fx[idx], rig.fy[idx], rig.width, rig.height)
+
+
+#: jax.vmap in_axes spec for a view-batched Camera: view/fx/fy carry the
+#: leading view axis, width/height are static ints shared by every view
+CAM_VAXES = Camera(view=0, fx=0, fy=0, width=None, height=None)

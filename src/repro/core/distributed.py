@@ -35,7 +35,7 @@ from jax import lax
 from jax.experimental.shard_map import shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core.cameras import Camera
+from repro.core.cameras import CAM_VAXES, Camera
 from repro.core.gaussians import Gaussians
 from repro.core.metrics import ssim_map
 from repro.core.projection import project
@@ -52,10 +52,16 @@ def _axes(mesh):
     return pod, "data", "model"
 
 
-def gs_shardings(mesh):
-    """(gaussians, opt, batch) NamedSharding trees for the (P, N) layout."""
+def gs_shardings(mesh, *, views: Optional[int] = None):
+    """(gaussians, opt, batch) NamedSharding trees for the (P, N) layout.
+
+    views=V: gt/mask tile batches carry a leading replicated view axis
+    (V, P*T, ...) — view batches ride along with the gaussian shards; no
+    extra collective is introduced (the view axis folds into the partition
+    axis inside the shard_map body)."""
     pod, data, model = _axes(mesh)
     tile0 = (pod, model) if pod else model
+    vlead = (None,) if views else ()
     g = Gaussians(
         means=P(pod, data, None),
         log_scales=P(pod, data, None),
@@ -76,8 +82,8 @@ def gs_shardings(mesh):
         grad_count=ns(P(pod, data)),
     )
     batch = {
-        "gt_tiles": ns(P(tile0, None, None, None)),
-        "mask_tiles": ns(P(tile0, None, None)),
+        "gt_tiles": ns(P(*vlead, tile0, None, None, None)),
+        "mask_tiles": ns(P(*vlead, tile0, None, None)),
         "cam": Camera(view=ns(P()), fx=ns(P()), fy=ns(P()),
                       width=ns(P()), height=ns(P())),
     }
@@ -158,13 +164,25 @@ def _loss_partials(pred, gt, mask, *, win_size: int = 7):
 
 
 def make_gs_forward(mesh, grid: TileGrid, *, K: int, impl: str = "auto",
-                    lambda_dssim: float = 0.2, assign_block: int = 4096,
+                    lambda_dssim: float = 0.2,
+                    assign_block: Optional[int] = None,
                     return_tiles: bool = False, gather_mode: str = "f32",
-                    strip_budget: float = 1.0):
+                    strip_budget: float = 1.0, views: Optional[int] = None):
     """shard_map'd distributed forward: (gaussians, cam, gt, mask) -> loss.
 
     gt_tiles (P*T, 3, th, tw) / mask_tiles (P*T, th, tw) arrive sharded over
     ("pod", "model") on the flat tile axis.
+
+    views=V enables the view-batched step: cam carries (V, 4, 4) view
+    matrices (replicated), gt/mask gain a leading replicated V axis, and
+    the loss is the MEAN OF PER-VIEW losses (each view's masked pixel
+    normalization stays its own — the same equal-view weighting as
+    train.py's minibatch step).  Inside the shard body the V axis is folded
+    into the partition axis right after the table all-gather, so tile
+    assignment and the kernel launch (one (V*Pl*Tl,) grid) are shared
+    verbatim with the single-view path and the collective schedule is
+    unchanged (one table gather per step, V times the payload; the loss
+    psum carries (V,) vectors instead of scalars).
 
     Beyond-paper options (EXPERIMENTS.md §Perf, GS hillclimb):
 
@@ -187,6 +205,12 @@ def make_gs_forward(mesh, grid: TileGrid, *, K: int, impl: str = "auto",
     assert T % n_model == 0, (T, n_model)
     Tl = T // n_model
     tile0 = (pod, model) if pod else model
+    if assign_block is None:
+        # auto block: the view fold multiplies the assign sweep's leading
+        # axis by V, so shrink the gaussian block to keep per-device peak
+        # temporaries roughly view-count independent (mirrors render_batch's
+        # auto block).  An explicit assign_block is honored verbatim.
+        assign_block = max(1024, 4096 // views) if views else 4096
 
     g_spec = Gaussians(
         means=P(pod, data, None), log_scales=P(pod, data, None),
@@ -194,15 +218,24 @@ def make_gs_forward(mesh, grid: TileGrid, *, K: int, impl: str = "auto",
         colors=P(pod, data, None), active=P(pod, data), owner=P(pod, data),
     )
     cam_spec = Camera(view=P(), fx=P(), fy=P(), width=P(), height=P())
-    in_specs = (g_spec, cam_spec, P(tile0, None, None, None),
-                P(tile0, None, None))
-    out_specs = (P(), P(tile0, None, None, None)) if return_tiles else P()
+    vlead = (None,) if views else ()
+    in_specs = (g_spec, cam_spec, P(*vlead, tile0, None, None, None),
+                P(*vlead, tile0, None, None))
+    tiles_spec = P(*vlead, tile0, None, None, None)
+    out_specs = (P(), tiles_spec) if return_tiles else P()
 
     lo_full, hi_full = tile_bounds(grid)            # (T, 2) host constants
+    # all-gather axis: N sits one deeper when a view axis leads
+    nax = 2 if views else 1
 
     def shard_fn(g: Gaussians, cam: Camera, gt, mask):
         # ---- stage 1 (gaussian-parallel over "data"): project locally
-        splats = project(g, cam)                    # (Pl, Nl, ...)
+        if views:
+            # (V, Pl, Nl, ...): per-view projection of the same local shard
+            splats = jax.vmap(lambda c: project(g, c),
+                              in_axes=(CAM_VAXES,))(cam)
+        else:
+            splats = project(g, cam)                # (Pl, Nl, ...)
 
         # ---- Grendel handoff: all-gather the SMALL projected table over
         # "data".  bwd(all_gather) = psum_scatter -> grads return sharded.
@@ -220,8 +253,8 @@ def make_gs_forward(mesh, grid: TileGrid, *, K: int, impl: str = "auto",
                  splats.rgb[..., 0], splats.rgb[..., 1], splats.rgb[..., 2],
                  alpha_v, jnp.zeros_like(alpha_v)],
                 axis=-1).astype(jnp.bfloat16)                  # (Pl,Nl,8)
-            geo = lax.all_gather(geo_l, data, axis=1, tiled=True)
-            rest = lax.all_gather(rest_l, data, axis=1, tiled=True)
+            geo = lax.all_gather(geo_l, data, axis=nax, tiled=True)
+            rest = lax.all_gather(rest_l, data, axis=nax, tiled=True)
             mean_g = geo[..., 0:2]
             radius_g = geo[..., 2]
             depth_g = geo[..., 3]
@@ -231,12 +264,24 @@ def make_gs_forward(mesh, grid: TileGrid, *, K: int, impl: str = "auto",
             aux_l = jnp.stack(
                 [splats.radius, splats.depth,
                  splats.valid.astype(jnp.float32)], axis=-1)   # (Pl,Nl,3)
-            feat = lax.all_gather(feat_l, data, axis=1, tiled=True)
-            aux = lax.all_gather(aux_l, data, axis=1, tiled=True)
+            feat = lax.all_gather(feat_l, data, axis=nax, tiled=True)
+            aux = lax.all_gather(aux_l, data, axis=nax, tiled=True)
             mean_g = feat[..., 0:2]
             radius_g = aux[..., 0]
             depth_g = aux[..., 1]
             valid_g = aux[..., 2] > 0.5
+
+        if views:
+            # fold the view axis into the partition axis: (V, Pl, ...) ->
+            # (V*Pl, ...) — stage 2 and the kernel launch are V-agnostic
+            fold = lambda x: x.reshape((-1,) + x.shape[2:])
+            mean_g, radius_g, depth_g = (fold(mean_g), fold(radius_g),
+                                         fold(depth_g))
+            valid_g = fold(valid_g)
+            if gather_mode == "split":
+                rest = fold(rest)
+            else:
+                feat = fold(feat)
 
         # ---- stage 2 (pixel-parallel over "model"): my tile strip only
         mi = lax.axis_index(model)
@@ -294,12 +339,26 @@ def make_gs_forward(mesh, grid: TileGrid, *, K: int, impl: str = "auto",
                                 tile_w=grid.tile_w, impl=impl)
 
         # ---- masked loss partials -> psum (scalar-only cross-pod traffic)
-        l1n, l1d, sn, sd = _loss_partials(tiles[:, :3], gt, mask)
         axes = (pod, data, model) if pod else (data, model)
-        l1n, l1d, sn, sd = (lax.psum(x, axes) for x in (l1n, l1d, sn, sd))
-        loss = ((1 - lambda_dssim) * l1n / jnp.maximum(l1d, 1.0)
-                + lambda_dssim * (1.0 - sn / jnp.maximum(sd, 1.0)) / 2.0)
+        if views:
+            # per-view partials ((V,) vectors through the psum), then the
+            # mean of per-view losses — the same equal-view weighting as
+            # train.py's minibatch step, regardless of how many masked
+            # pixels each view has
+            pred_v = tiles[:, :3].reshape((views, -1, 3) + tiles.shape[2:])
+            l1n, l1d, sn, sd = jax.vmap(_loss_partials)(pred_v, gt, mask)
+            l1n, l1d, sn, sd = (lax.psum(x, axes) for x in (l1n, l1d, sn, sd))
+            loss = ((1 - lambda_dssim) * l1n / jnp.maximum(l1d, 1.0)
+                    + lambda_dssim
+                    * (1.0 - sn / jnp.maximum(sd, 1.0)) / 2.0).mean()
+        else:
+            l1n, l1d, sn, sd = _loss_partials(tiles[:, :3], gt, mask)
+            l1n, l1d, sn, sd = (lax.psum(x, axes) for x in (l1n, l1d, sn, sd))
+            loss = ((1 - lambda_dssim) * l1n / jnp.maximum(l1d, 1.0)
+                    + lambda_dssim * (1.0 - sn / jnp.maximum(sd, 1.0)) / 2.0)
         if return_tiles:
+            if views:
+                tiles = tiles.reshape((views, -1) + tiles.shape[1:])
             return loss, tiles
         return loss
 
@@ -313,19 +372,25 @@ def make_gs_forward(mesh, grid: TileGrid, *, K: int, impl: str = "auto",
 
 
 def make_gs_train_step(mesh, cfg: GSTrainCfg, grid: TileGrid, extent: float,
-                       *, impl: str = "auto"):
+                       *, impl: str = "auto", views: Optional[int] = None,
+                       assign_block: Optional[int] = None):
     """jit'd (gaussians, opt, batch) -> (gaussians, opt, loss).
 
     Per-partition losses are averaged globally, but gradients never mix
     partitions (each gaussian belongs to exactly one P slice): the paper's
     independent-training semantics inside one SPMD program.
+
+    views=V runs the minibatch-of-views step: batch["gt_tiles"] is
+    (V, P*T, 3, th, tw), batch["cam"] carries (V, 4, 4) views, and the loss
+    (hence the gradient) averages over the view batch.
     """
     lrs = group_lrs(cfg, extent)
-    g_sh, opt_sh, b_sh = gs_shardings(mesh)
+    g_sh, opt_sh, b_sh = gs_shardings(mesh, views=views)
     fwd = make_gs_forward(mesh, grid, K=cfg.K, impl=impl,
                           lambda_dssim=cfg.lambda_dssim,
                           gather_mode=cfg.gather_mode,
-                          strip_budget=cfg.strip_budget)
+                          strip_budget=cfg.strip_budget, views=views,
+                          assign_block=assign_block)
 
     def loss_fn(tr, g, cam, gt, mask):
         return fwd(g.with_trainable(tr), cam, gt, mask)
@@ -389,18 +454,20 @@ def gs_state_specs(n_parts: int, n_gaussians: int):
     return g, opt
 
 
-def gs_batch_specs(n_parts: int, grid: TileGrid):
+def gs_batch_specs(n_parts: int, grid: TileGrid,
+                   views: Optional[int] = None):
     T = grid.n_tiles
     f32 = jnp.float32
+    vlead = (views,) if views else ()
     return {
         "gt_tiles": jax.ShapeDtypeStruct(
-            (n_parts * T, 3, grid.tile_h, grid.tile_w), f32),
+            vlead + (n_parts * T, 3, grid.tile_h, grid.tile_w), f32),
         "mask_tiles": jax.ShapeDtypeStruct(
-            (n_parts * T, grid.tile_h, grid.tile_w), jnp.bool_),
+            vlead + (n_parts * T, grid.tile_h, grid.tile_w), jnp.bool_),
         "cam": Camera(
-            view=jax.ShapeDtypeStruct((4, 4), f32),
-            fx=jax.ShapeDtypeStruct((), f32),
-            fy=jax.ShapeDtypeStruct((), f32),
+            view=jax.ShapeDtypeStruct(vlead + (4, 4), f32),
+            fx=jax.ShapeDtypeStruct(vlead, f32),
+            fy=jax.ShapeDtypeStruct(vlead, f32),
             width=jax.ShapeDtypeStruct((), jnp.int32),
             height=jax.ShapeDtypeStruct((), jnp.int32),
         ),

@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core.cameras import Camera
+from repro.core.cameras import CAM_VAXES, Camera
 from repro.core.gaussians import Gaussians
 from repro.core.projection import project
 from repro.core.tiling import (
@@ -24,6 +24,7 @@ from repro.core.tiling import (
     untile_image,
 )
 from repro.kernels import rasterize_tiles
+from repro.kernels.ops import rasterize_tiles_batched
 
 
 class RenderOut(NamedTuple):
@@ -31,15 +32,33 @@ class RenderOut(NamedTuple):
     coverage: jax.Array   # (H, W) alpha coverage in [0, 1]
 
 
-def render_tiles(g: Gaussians, cam: Camera, grid: TileGrid, *, K: int = 64,
-                 impl: str = "auto"):
-    """-> (tiles (T, 4, th, tw), idx, score). Differentiable w.r.t. gaussians
-    (tile index lists are stop-gradiented: discrete assignment)."""
+def _gather_feats(g: Gaussians, cam: Camera, grid: TileGrid, *, K: int,
+                  coarse: Optional[int], coarse_budget: Optional[int],
+                  block: int = 4096):
+    """Shared first half of the render: project -> tile-assign (indices
+    stop-gradiented: discrete assignment) -> per-tile feature gather."""
     splats = project(g, cam)
-    idx, score = assign_tiles(splats, grid, K=K)
+    idx, score = assign_tiles(splats, grid, K=K, block=block, coarse=coarse,
+                              coarse_budget=coarse_budget)
     idx = lax.stop_gradient(idx)
     score = lax.stop_gradient(score)
-    feats = gather_tile_features(splats, idx, score)
+    return gather_tile_features(splats, idx, score), idx, score
+
+
+def _composite(img, bg):
+    """(..., H, W, 4) kernel output -> RenderOut over a solid background."""
+    cov = img[..., 3]
+    rgb = img[..., :3] + (1.0 - cov[..., None]) * bg
+    return RenderOut(rgb=rgb, coverage=cov)
+
+
+def render_tiles(g: Gaussians, cam: Camera, grid: TileGrid, *, K: int = 64,
+                 impl: str = "auto", coarse: Optional[int] = None,
+                 coarse_budget: Optional[int] = None):
+    """-> (tiles (T, 4, th, tw), idx, score). Differentiable w.r.t. gaussians
+    (tile index lists are stop-gradiented: discrete assignment)."""
+    feats, idx, score = _gather_feats(g, cam, grid, K=K, coarse=coarse,
+                                      coarse_budget=coarse_budget)
     tiles = rasterize_tiles(
         feats, tile_origins(grid),
         tile_h=grid.tile_h, tile_w=grid.tile_w, impl=impl,
@@ -48,10 +67,45 @@ def render_tiles(g: Gaussians, cam: Camera, grid: TileGrid, *, K: int = 64,
 
 
 def render(g: Gaussians, cam: Camera, grid: TileGrid, *, K: int = 64,
-           impl: str = "auto", bg: float = 1.0) -> RenderOut:
+           impl: str = "auto", bg: float = 1.0,
+           coarse: Optional[int] = None,
+           coarse_budget: Optional[int] = None) -> RenderOut:
     """Full-image render with background composite (paper bg is white)."""
-    tiles, _, _ = render_tiles(g, cam, grid, K=K, impl=impl)
-    img = untile_image(tiles, grid)                 # (H, W, 4)
-    cov = img[..., 3]
-    rgb = img[..., :3] + (1.0 - cov[..., None]) * bg
-    return RenderOut(rgb=rgb, coverage=cov)
+    tiles, _, _ = render_tiles(g, cam, grid, K=K, impl=impl, coarse=coarse,
+                               coarse_budget=coarse_budget)
+    return _composite(untile_image(tiles, grid), bg)
+
+
+def render_batch(g: Gaussians, cams: Camera, grid: TileGrid, *, K: int = 64,
+                 impl: str = "auto", bg: float = 1.0,
+                 coarse: Optional[int] = None,
+                 coarse_budget: Optional[int] = None,
+                 assign_block: Optional[int] = None) -> RenderOut:
+    """View-batched render: cams carries a leading V axis on view/fx/fy.
+
+    Projection -> tile assignment -> feature gather are vmapped over the
+    view axis, then the Pallas/ref kernel runs ONE flattened (V*T,) grid
+    launch instead of V dispatches (the per-view Python loop this replaces).
+    Returns rgb (V, H, W, 3) and coverage (V, H, W); matches V sequential
+    ``render`` calls to float-associativity tolerance.  Differentiable
+    w.r.t. gaussians (the trainer's minibatch-of-views step drives this).
+
+    assign_block bounds the tile-assignment sweep's temporaries; under vmap
+    those are V-fold, so the auto default shrinks the single-view block by
+    V (floored at 1024) to keep the peak footprint roughly view-count
+    independent.
+    """
+    V = cams.view.shape[0]
+    block = assign_block or max(1024, 4096 // max(V, 1))
+
+    def gather_one(cam: Camera):
+        return _gather_feats(g, cam, grid, K=K, coarse=coarse,
+                             coarse_budget=coarse_budget, block=block)[0]
+
+    feats = jax.vmap(gather_one, in_axes=(CAM_VAXES,))(cams)   # (V, T, K, F)
+    tiles = rasterize_tiles_batched(
+        feats, tile_origins(grid),
+        tile_h=grid.tile_h, tile_w=grid.tile_w, impl=impl,
+    )                                                          # (V, T, 4, ...)
+    img = jax.vmap(lambda t: untile_image(t, grid))(tiles)     # (V, H, W, 4)
+    return _composite(img, bg)

@@ -16,7 +16,7 @@ pixels per compositing step (DESIGN.md §3) — while CPU tests use small tiles.
 from __future__ import annotations
 
 from functools import partial
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -69,14 +69,209 @@ def tile_origins(grid: TileGrid):
     return lo
 
 
+# ---------------------------------------------------------------------------
+# Coarse superblock pre-cull
+# ---------------------------------------------------------------------------
+
+
+def superblock_bounds(grid: TileGrid, sb: int):
+    """Bounds of sb x sb tile superblocks: (S, 2) lo / hi pixel rects.
+
+    The last row/column of superblocks may extend past the image — harmless,
+    the coarse test is conservative (a superset of true tile overlaps).
+    """
+    sx = (grid.nx + sb - 1) // sb
+    sy = (grid.ny + sb - 1) // sb
+    syi, sxi = jnp.meshgrid(jnp.arange(sy), jnp.arange(sx), indexing="ij")
+    lo = jnp.stack(
+        [sxi.reshape(-1) * grid.tile_w * sb, syi.reshape(-1) * grid.tile_h * sb],
+        -1,
+    ).astype(jnp.float32)
+    hi = lo + jnp.array([grid.tile_w * sb, grid.tile_h * sb], jnp.float32)
+    return lo, hi
+
+
+def coarse_candidates(mean2d, radius, valid, grid: TileGrid, *, sb: int,
+                      budget: int, block: int = 4096):
+    """Per-superblock candidate splat lists via one cheap circle/rect pass.
+
+    -> cand (S, budget) int32 indices into the splat table; slots past the
+    true per-superblock occupancy hold N (one-past-the-end sentinel).  If a
+    superblock's occupancy exceeds ``budget``, the HIGHEST-INDEXED splats
+    overflow and are dropped — table order, not depth order, so the loss is
+    arbitrary w.r.t. visibility.  Callers must size the budget to the scene
+    (assign_tiles' auto budget is documented there; budget >= occupancy
+    makes the cull exact).
+
+    Blockwise over gaussians like the dense sweep — O(S * block)
+    temporaries, not O(S * N) — carrying per-superblock running counts so
+    each block's hits compact to their final columns with one cumsum + one
+    scatter (a vmapped size-bounded nonzero costs ~3x the whole dense
+    assignment sweep on CPU).
+    """
+    lo, hi = superblock_bounds(grid, sb)             # (S, 2)
+    N = mean2d.shape[0]
+    S = lo.shape[0]
+    block = min(block, max(N, 1))
+    nb = (N + block - 1) // block
+    Np = nb * block
+
+    pad = lambda x, fill: jnp.pad(x, (0, Np - N), constant_values=fill)
+    mx = pad(mean2d[:, 0], 0.0).reshape(nb, block)
+    my = pad(mean2d[:, 1], 0.0).reshape(nb, block)
+    rd = pad(radius, 0.0).reshape(nb, block)
+    vd = pad(valid, False).reshape(nb, block)        # padded rows never hit
+    idxb = jnp.arange(Np, dtype=jnp.int32).reshape(nb, block)
+
+    rows = jnp.arange(S)[:, None]
+
+    def body(carry, x):
+        count, cand = carry                          # (S,), (S, budget+1)
+        bmx, bmy, brd, bvd, bidx = x
+        cx = jnp.clip(bmx[None, :], lo[:, :1], hi[:, :1])     # (S, block)
+        cy = jnp.clip(bmy[None, :], lo[:, 1:], hi[:, 1:])
+        dx = bmx[None, :] - cx
+        dy = bmy[None, :] - cy
+        hit = ((dx * dx + dy * dy) <= (brd * brd)[None, :]) & bvd[None, :]
+        # overflow (and non-hits) land in scratch column ``budget`` ->
+        # sliced off below
+        pos = jnp.where(hit, count[:, None] + jnp.cumsum(hit, axis=1) - 1,
+                        budget)
+        pos = jnp.minimum(pos, budget)
+        cand = cand.at[rows, pos].set(jnp.broadcast_to(bidx, hit.shape),
+                                      mode="drop")
+        return (count + hit.sum(axis=1), cand), None
+
+    init = (jnp.zeros((S,), jnp.int32),
+            jnp.full((S, budget + 1), N, jnp.int32))
+    (_, cand), _ = lax.scan(body, init, (mx, my, rd, vd, idxb))
+    return cand[:, :budget]
+
+
+def _coarse_budget(N: int, S: int, K: int, budget) -> int:
+    """Resolve the per-superblock candidate budget (see assign_tiles)."""
+    if budget is None:
+        # auto budget: 4x headroom over uniform splat->superblock occupancy.
+        # On coarse grids (S < 8) the radius halo rivals the superblock size
+        # and the uniform model breaks down — fall back to exact (budget=N).
+        budget = N if S < 8 else max(4 * K, -(-4 * N // S))
+    budget = min(max(int(budget), K), N)
+    budget = -(-budget // 128) * 128 if budget >= 128 else budget
+    return min(budget, N)
+
+
+def _assign_tiles_coarse(splats: Splats2D, grid: TileGrid, *, K: int,
+                         block: int, sb: int, budget: int):
+    """Exact circle/rect top-K restricted to coarse-pass survivors.
+
+    Same contract as assign_tiles; work drops from O(T*N) to
+    O(S*N + T*budget) where S = T / sb^2.  Candidate features are gathered
+    ONCE per superblock (gather volume S*budget rows, not T*budget) and the
+    fine test runs superblock-major over (S, sb^2 tile slots, block) panes,
+    scattered back to row-major tile order at the end.
+    """
+    T = grid.n_tiles
+    N = splats.mean2d.shape[0]
+    sx = (grid.nx + sb - 1) // sb
+    sy = (grid.ny + sb - 1) // sb
+    S, sb2 = sx * sy, sb * sb
+
+    cand = coarse_candidates(splats.mean2d, splats.radius, splats.valid,
+                             grid, sb=sb, budget=budget,
+                             block=block)                      # (S, M)
+    M = cand.shape[1]
+    cb = min(block, M)
+    nb = (M + cb - 1) // cb
+    cand = jnp.pad(cand, ((0, 0), (0, nb * cb - M)), constant_values=N)
+
+    # one gather per field per superblock; sentinel N -> fill (invalid)
+    take = lambda arr, fill: jnp.take(arr, cand, axis=0, mode="fill",
+                                      fill_value=fill)
+    mean_c = take(splats.mean2d, 0.0)                # (S, Mp, 2)
+    rad_c = take(splats.radius, 0.0)
+    depth_c = take(splats.depth, 1e30)
+    valid_c = take(splats.valid, False)
+
+    # tile-slot rects per superblock, (S, sb2, 2); slots past the image edge
+    # are dead weight (sliced away by the scatter-back below)
+    syi, sxi = jnp.meshgrid(jnp.arange(sy), jnp.arange(sx), indexing="ij")
+    jy, jx = jnp.meshgrid(jnp.arange(sb), jnp.arange(sb), indexing="ij")
+    ty = syi.reshape(-1, 1) * sb + jy.reshape(-1)    # (S, sb2)
+    tx = sxi.reshape(-1, 1) * sb + jx.reshape(-1)
+    lo_sb = jnp.stack([tx * grid.tile_w, ty * grid.tile_h], -1) \
+        .astype(jnp.float32)
+    hi_sb = lo_sb + jnp.array([grid.tile_w, grid.tile_h], jnp.float32)
+
+    xs = (mean_c.reshape(S, nb, cb, 2).transpose(1, 0, 2, 3),
+          rad_c.reshape(S, nb, cb).transpose(1, 0, 2),
+          depth_c.reshape(S, nb, cb).transpose(1, 0, 2),
+          valid_c.reshape(S, nb, cb).transpose(1, 0, 2),
+          cand.reshape(S, nb, cb).transpose(1, 0, 2))
+
+    def body(carry, x):
+        top_score, top_idx = carry                   # (S, sb2, K)
+        mb, rb, db, vb, ci = x                       # (S, cb, ...)
+        cx = jnp.clip(mb[:, None, :, 0], lo_sb[..., :1], hi_sb[..., :1])
+        cy = jnp.clip(mb[:, None, :, 1], lo_sb[..., 1:], hi_sb[..., 1:])
+        dx = mb[:, None, :, 0] - cx                  # (S, sb2, cb)
+        dy = mb[:, None, :, 1] - cy
+        hit = (dx * dx + dy * dy) <= (rb * rb)[:, None, :]
+        score = jnp.where(hit & vb[:, None, :], -db[:, None, :], NEG)
+        cat_s = jnp.concatenate([top_score, score], axis=-1)
+        cat_i = jnp.concatenate(
+            [top_idx, jnp.broadcast_to(ci[:, None, :].astype(jnp.int32),
+                                       score.shape)], axis=-1)
+        new_s, sel = lax.top_k(cat_s, K)
+        new_i = jnp.take_along_axis(cat_i, sel, axis=-1)
+        return (new_s, new_i), None
+
+    init = (jnp.full((S, sb2, K), NEG, jnp.float32),
+            jnp.zeros((S, sb2, K), jnp.int32))
+    (score_s, idx_s), _ = lax.scan(body, init, xs)
+
+    # scatter back: tile t (row-major) lives at slot (sbid, (ty%sb)*sb+tx%sb)
+    tyf, txf = jnp.meshgrid(jnp.arange(grid.ny), jnp.arange(grid.nx),
+                            indexing="ij")
+    pos = ((tyf // sb) * sx + txf // sb) * sb2 + (tyf % sb) * sb + txf % sb
+    pos = pos.reshape(-1)                            # (T,)
+    score = score_s.reshape(S * sb2, K)[pos]
+    idx = idx_s.reshape(S * sb2, K)[pos]
+    # map sentinel slots back to a safe in-range index (they carry score NEG)
+    idx = jnp.where(score > NEG / 2, idx, 0)
+    return idx, score
+
+
 def assign_tiles(splats: Splats2D, grid: TileGrid, *, K: int = 64,
-                 block: int = 4096):
+                 block: int = 4096, coarse: Optional[int] = None,
+                 coarse_budget: Optional[int] = None):
     """Top-K front-most gaussians per tile.
 
     Returns (idx (T, K) int32 into the splat table, score (T, K); score==NEG
     marks empty slots).  Blockwise over gaussians: carry a running top-k and
     merge each block with lax.top_k — O(T * N) work, O(T * block) memory.
+
+    ``coarse=sb`` enables a two-level cull: a cheap circle/rect pass against
+    sb x sb tile superblocks compacts per-superblock candidate lists of size
+    ``coarse_budget`` (auto: N when the grid has S < 8 superblocks, else
+    max(4K, ceil(4N/S)) — 4x headroom over uniform occupancy — rounded up
+    to 128), and the exact per-tile test runs only against those survivors
+    — O(S*N + T*budget) instead of O(T*N).  With budget >= true superblock
+    occupancy the result is identical to the dense path on live slots
+    (empty-slot idx values are unspecified in both paths); on overflow the
+    highest-INDEXED candidates are dropped (arbitrary w.r.t. depth — see
+    coarse_candidates), so size budgets generously.  When the resolved
+    budget reaches N the coarse pass cannot cull anything, so the dense
+    path runs directly (identical result, none of the pre-cull overhead).
     """
+    if coarse is not None and coarse > 1:
+        N = splats.mean2d.shape[0]
+        S = (((grid.nx + coarse - 1) // coarse)
+             * ((grid.ny + coarse - 1) // coarse))
+        budget = _coarse_budget(N, S, K, coarse_budget) if N else 0
+        if 0 < budget < N:
+            return _assign_tiles_coarse(splats, grid, K=K, block=block,
+                                        sb=coarse, budget=budget)
+        # budget >= N (or empty table): fall through to the dense sweep
     lo, hi = tile_bounds(grid)                      # (T, 2)
     N = splats.mean2d.shape[0]
     block = min(block, max(N, K))

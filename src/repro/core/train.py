@@ -24,7 +24,7 @@ from jax import lax
 from repro.core.cameras import Camera, select
 from repro.core.gaussians import Gaussians
 from repro.core.masking import gs_loss
-from repro.core.render import render
+from repro.core.render import render_batch
 from repro.core.tiling import TileGrid
 
 
@@ -46,6 +46,8 @@ class GSTrainCfg:
     tile_w: int = 16            # CPU default; production (TPU) uses 8x128
     bg: float = 1.0             # white background (paper renders)
     impl: str = "auto"
+    view_batch: int = 1         # views per minibatch step (loss = view mean)
+    coarse: Optional[int] = None  # superblock pre-cull factor (tiling.py)
     # densification
     densify_grad_thresh: float = 5e-6
     percent_dense: float = 0.01     # split/clone size boundary (x extent)
@@ -84,13 +86,38 @@ def group_lrs(cfg: GSTrainCfg, extent: float) -> dict:
     }
 
 
+def _as_view_batch(cam: Camera, gt, mask):
+    """Canonicalize (cam, gt, mask) to carry a leading view axis V.
+
+    Accepts either a single view (cam.view (4,4), gt (H,W,3)) or a view
+    minibatch (cam.view (V,4,4), gt (V,H,W,3)); the single-view form becomes
+    a V=1 batch.  Trace-time branch: jit re-traces per input rank anyway.
+    """
+    if cam.view.ndim == 2:
+        cam = Camera(cam.view[None], jnp.reshape(cam.fx, (1,)),
+                     jnp.reshape(cam.fy, (1,)), cam.width, cam.height)
+        gt = gt[None]
+        mask = None if mask is None else mask[None]
+    return cam, gt, mask
+
+
 def make_train_step(cfg: GSTrainCfg, grid: TileGrid, extent: float):
+    """Minibatch-of-views train step: cam/gt/mask may carry a leading view
+    axis (loss is averaged over the batch); plain single-view inputs still
+    work (treated as V=1)."""
     lrs = group_lrs(cfg, extent)
 
     def loss_fn(tr, g: Gaussians, cam: Camera, gt, mask):
         gg = g.with_trainable(tr)
-        out = render(gg, cam, grid, K=cfg.K, impl=cfg.impl, bg=cfg.bg)
-        return gs_loss(out.rgb, gt, mask, lambda_dssim=cfg.lambda_dssim)
+        cam, gt, mask = _as_view_batch(cam, gt, mask)
+        out = render_batch(gg, cam, grid, K=cfg.K, impl=cfg.impl, bg=cfg.bg,
+                           coarse=cfg.coarse)
+        per_view = partial(gs_loss, lambda_dssim=cfg.lambda_dssim)
+        if mask is None:
+            losses = jax.vmap(lambda p, t: per_view(p, t, None))(out.rgb, gt)
+        else:
+            losses = jax.vmap(per_view)(out.rgb, gt, mask)
+        return losses.mean()
 
     def step(g: Gaussians, opt: GSOptState, cam: Camera, gt, mask=None):
         loss, grads = jax.value_and_grad(loss_fn)(g.trainable(), g, cam, gt, mask)
@@ -210,10 +237,14 @@ def reset_opacity(g: Gaussians, ceiling: float = 0.01) -> Gaussians:
 def fit_partition(g: Gaussians, cams: Camera, gts, masks, cfg: GSTrainCfg,
                   *, steps: int, extent: float, key=None,
                   densify_every: int = 0, densify_from: int = 100,
-                  log_every: int = 0, grid: Optional[TileGrid] = None):
+                  log_every: int = 0, grid: Optional[TileGrid] = None,
+                  view_batch: Optional[int] = None):
     """Train one partition for ``steps`` steps cycling over its camera set.
 
-    gts: (V, H, W, 3); masks: (V, H, W) bool or None.  Returns (g, losses).
+    gts: (V, H, W, 3); masks: (V, H, W) bool or None.  Returns
+    (g, opt, losses).  Each step consumes a minibatch of ``view_batch``
+    consecutive views (default cfg.view_batch; loss is the view mean)
+    rendered through one batched dispatch.
     """
     if grid is None:
         grid = TileGrid(cams.width, cams.height, cfg.tile_h, cfg.tile_w)
@@ -223,9 +254,10 @@ def fit_partition(g: Gaussians, cams: Camera, gts, masks, cfg: GSTrainCfg,
     densify = jax.jit(partial(densify_and_prune, cfg=cfg, extent=extent))
     opt = init_opt(g)
     n_views = gts.shape[0]
+    vb = max(1, min(view_batch or cfg.view_batch, n_views))
     losses = []
     for i in range(steps):
-        vi = i % n_views
+        vi = (i * vb + jnp.arange(vb)) % n_views
         cam = select(cams, vi)
         mask = None if masks is None else masks[vi]
         g, opt, loss = step(g, opt, cam, gts[vi], mask)

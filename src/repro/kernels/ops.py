@@ -65,3 +65,22 @@ def rasterize_tiles(feats, origins, *, tile_h: int, tile_w: int,
     if impl == "interpret":
         return _rasterize_pallas(feats, origins, tile_h, tile_w, True)
     raise ValueError(impl)
+
+
+def rasterize_tiles_batched(feats, origins, *, tile_h: int, tile_w: int,
+                            impl: str = "auto"):
+    """View-batched entry point: feats (V, T, K, F) -> (V, T, 4, th, tw).
+
+    origins may be (T, 2) (shared rig geometry, the common case) or
+    (V, T, 2).  The V and T axes are flattened into one (V*T,) kernel grid
+    launch — one dispatch for the whole view batch instead of V — and
+    unflattened afterwards.  Semantics are identical to V independent
+    ``rasterize_tiles`` calls (tiles are independent programs)."""
+    V, T, K, F = feats.shape
+    if origins.ndim == 2:
+        origins = jnp.broadcast_to(origins[None], (V,) + origins.shape)
+    out = rasterize_tiles(
+        feats.reshape(V * T, K, F), origins.reshape(V * T, 2),
+        tile_h=tile_h, tile_w=tile_w, impl=impl,
+    )
+    return out.reshape(V, T, 4, tile_h, tile_w)

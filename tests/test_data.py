@@ -4,7 +4,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # degraded fallback (see tests/_hyp.py)
+    from _hyp import given, settings, st
 
 from repro.data.isosurface import extract_isosurface, point_cloud_for
 from repro.data.tokens import SyntheticTokens

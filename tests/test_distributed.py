@@ -126,3 +126,118 @@ def test_distributed_matches_single_device(tmp_path):
     assert "FWD-MATCH" in out.stdout
     assert "OPT-MATCH" in out.stdout
     assert "STEP-OK" in out.stdout
+
+
+VIEWS_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+sys.path.insert(0, r"%(src)s")
+import jax, jax.numpy as jnp
+import numpy as np
+
+from repro.core.cameras import orbital_rig, select
+from repro.core.distributed import (gs_shardings, make_gs_forward,
+                                    make_gs_train_step)
+from repro.core.gaussians import from_points
+from repro.core.render import render_tiles
+from repro.core.tiling import TileGrid
+from repro.core.train import GSTrainCfg, GSOptState
+from repro.data.isosurface import point_cloud_for
+
+mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+Pn, N, res, K, V = 2, 256, 32, 16, 3
+grid = TileGrid(res, res, 8, 16)
+T = grid.n_tiles
+
+pts, cols = point_cloud_for("sphere_shell", 2 * N)
+pts, cols = pts[: 2 * N], cols[: 2 * N]
+cams = orbital_rig(V, (0.5, 0.5, 0.5), 1.6, width=res, height=res)
+g_all = from_points(jnp.asarray(pts), jnp.asarray(cols), opacity=0.8)
+part = lambda i: jax.tree.map(lambda x: x[i * N:(i + 1) * N], g_all)
+g_batched = jax.tree.map(lambda *xs: jnp.stack(xs), part(0), part(1))
+
+# reference: single-device per-view, per-partition tiles
+ref = []
+for v in range(V):
+    per_p = [render_tiles(part(i), select(cams, v), grid, K=K, impl="ref")[0]
+             for i in range(Pn)]
+    ref.append(jnp.concatenate(per_p))
+ref = jnp.stack(ref)                                 # (V, P*T, 4, th, tw)
+
+gt = jnp.clip(ref[:, :, :3] + 0.05, 0, 1)
+mask = jnp.ones((V, Pn * T, grid.tile_h, grid.tile_w), bool)
+cam_b = select(cams, jnp.arange(V))
+
+# ---- view-batched forward: tiles per view match the per-view reference ----
+fwd = make_gs_forward(mesh, grid, K=K, impl="ref", return_tiles=True, views=V)
+g_sh, _, b_sh = gs_shardings(mesh, views=V)
+g_dev = jax.device_put(g_batched, g_sh)
+loss, tiles = jax.jit(fwd)(g_dev, cam_b,
+                           jax.device_put(gt, b_sh["gt_tiles"]),
+                           jax.device_put(mask, b_sh["mask_tiles"]))
+np.testing.assert_allclose(np.asarray(tiles), np.asarray(ref),
+                           rtol=2e-4, atol=2e-4)
+print("VFWD-MATCH")
+
+# heterogeneous per-view masks: the loss must be the MEAN of per-view
+# losses (train.py's equal-view weighting), not a pixel-count-weighted pool
+from repro.core.masking import tile_l1_dssim_loss
+mask_h = mask.at[0].set(False).at[0, :, :2].set(True)   # view 0 nearly empty
+loss_h = jax.jit(make_gs_forward(mesh, grid, K=K, impl="ref", views=V))(
+    g_dev, cam_b, gt, mask_h)
+want = np.mean([float(tile_l1_dssim_loss(ref[v][:, :3], gt[v], mask_h[v],
+                                         win_size=7)) for v in range(V)])
+np.testing.assert_allclose(float(loss_h), want, rtol=1e-4, atol=1e-5)
+print("VLOSS-MEAN")
+
+# perf variants stay faithful under the view axis
+fwd_s = make_gs_forward(mesh, grid, K=K, impl="ref", return_tiles=True,
+                        views=V, strip_budget=127.0 / 128.0)
+_, tiles_s = jax.jit(fwd_s)(g_dev, cam_b, gt, mask)
+np.testing.assert_allclose(np.asarray(tiles_s), np.asarray(ref),
+                           rtol=2e-4, atol=2e-4)
+fwd_sp = make_gs_forward(mesh, grid, K=K, impl="ref", return_tiles=True,
+                         views=V, gather_mode="split")
+_, tiles_sp = jax.jit(fwd_sp)(g_dev, cam_b, gt, mask)
+err = np.abs(np.asarray(tiles_sp[:, :, :3]) - np.asarray(ref[:, :, :3]))
+assert err.max() < 5e-2, err.max()
+print("VOPT-MATCH")
+
+# ---- view-batched train step: loss decreases, state stays sharded ----
+step = make_gs_train_step(mesh, GSTrainCfg(K=K, lr_colors=5e-2), grid,
+                          extent=1.0, impl="ref", views=V)
+_, opt_sh, _ = gs_shardings(mesh, views=V)
+tr = {k: getattr(g_batched, k) for k in
+      ("means", "log_scales", "quats", "opacity_logit", "colors")}
+opt = GSOptState(
+    m=jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32), tr),
+    v=jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32), tr),
+    step=jnp.int32(0),
+    grad_accum=jnp.zeros((Pn, N)), grad_count=jnp.zeros((Pn, N)))
+opt = jax.device_put(opt, opt_sh)
+batch = {"gt_tiles": jax.device_put(gt, b_sh["gt_tiles"]),
+         "mask_tiles": jax.device_put(mask, b_sh["mask_tiles"]),
+         "cam": cam_b}
+g_cur, losses = g_dev, []
+for i in range(8):
+    g_cur, opt, l = step(g_cur, opt, batch)
+    losses.append(float(l))
+assert losses[-1] < losses[0], losses
+assert g_cur.means.sharding.num_devices == 8
+print("VSTEP-OK", round(losses[0], 5), "->", round(losses[-1], 5))
+"""
+
+
+@pytest.mark.slow
+def test_view_batched_distributed_matches_per_view(tmp_path):
+    """views=V path: vmapped projection + view-axis fold must reproduce the
+    per-view single-device tiles, under all gather/strip variants."""
+    code = VIEWS_SCRIPT % {"src": SRC}
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=900)
+    assert out.returncode == 0, (out.stdout[-2000:], out.stderr[-3000:])
+    assert "VFWD-MATCH" in out.stdout
+    assert "VLOSS-MEAN" in out.stdout
+    assert "VOPT-MATCH" in out.stdout
+    assert "VSTEP-OK" in out.stdout

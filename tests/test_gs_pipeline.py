@@ -6,7 +6,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # degraded fallback (see tests/_hyp.py)
+    from _hyp import given, settings, st
 
 from repro.core import metrics
 from repro.core.cameras import orbital_rig, select

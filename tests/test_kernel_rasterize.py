@@ -103,6 +103,51 @@ def test_backward_matches_autodiff(T, K, th, tw):
     assert np.abs(np.asarray(g_k[..., 9:])).max() == 0.0
 
 
+#: gradient-parity sweep: every K regime ({1, 16, 64}) on both the CPU test
+#: tile and the production (8, 128) tile, with dead (alpha=0) and saturated
+#: (a*G > ALPHA_MAX, where the clamp kills the alpha gradient) splats mixed in
+GRAD_SWEEP = [
+    # (T, K, th, tw)
+    (2, 1, 8, 16),
+    (2, 16, 8, 16),
+    (3, 64, 8, 16),
+    (2, 1, 8, 128),    # production tile shape
+    (2, 16, 8, 128),
+    (2, 64, 8, 128),
+]
+
+
+@pytest.mark.parametrize("T,K,th,tw", GRAD_SWEEP)
+def test_backward_parity_sweep(T, K, th, tw):
+    """Pallas rasterize_bwd (interpret) vs jax-autodiff of kernels/ref.py."""
+    feats, origins = make_tile_inputs(11, T, K, th, tw, dead_frac=0.25)
+    f = np.array(feats)
+    # saturate ~20% of the live splats: alpha feature >> 1 makes a*G exceed
+    # ALPHA_MAX near the center, exercising the clamp's gradient mask
+    r = np.random.default_rng(13)
+    sat = (r.uniform(size=(T, K)) < 0.2) & (f[..., 8] > 0)
+    f[..., 8] = np.where(sat, 3.0, f[..., 8])
+    feats = jnp.asarray(f)
+    gout = jnp.asarray(r.normal(size=(T, 4, th, tw)), jnp.float32)
+
+    def loss_k(x):
+        return jnp.vdot(
+            ops.rasterize_tiles(x, origins, tile_h=th, tile_w=tw,
+                                impl="interpret"), gout)
+
+    def loss_r(x):
+        return jnp.vdot(
+            ref_impl.rasterize_tiles_ref(x, origins, tile_h=th, tile_w=tw),
+            gout)
+
+    g_k = jax.grad(loss_k)(feats)
+    g_r = jax.grad(loss_r)(feats)
+    np.testing.assert_allclose(g_k[..., :9], g_r[..., :9],
+                               rtol=5e-4, atol=5e-4)
+    assert np.abs(np.asarray(g_k[..., 9:])).max() == 0.0
+    assert np.isfinite(np.asarray(g_k)).all()
+
+
 def test_backward_empty_slots_zero_grad():
     feats, origins = make_tile_inputs(3, 2, 8, 8, 16, dead_frac=1.0)
     g = jax.grad(

@@ -9,7 +9,11 @@ import sys
 import jax
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # degraded fallback (see tests/_hyp.py)
+    from _hyp import given, settings, st
 
 from repro.configs import ALIASES, all_arch_ids, get_smoke, get_spec
 from repro.models.spec import ModelSpec, logical_to_pspec, rules_for
