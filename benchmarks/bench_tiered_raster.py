@@ -1,0 +1,204 @@
+"""Occupancy-tiered rasterization benchmark (variable-K tentpole gate).
+
+Measures the RENDER PHASE — feature gather + rasterize kernel + (tiered
+only) binning/compaction/scatter — on precomputed tile assignments, plus
+the end-to-end render for context.  impl="ref", steady-state best-of-reps,
+compilation excluded on both sides.
+
+  sparse scene   a thin low-occupancy field covers the frame with a small
+      heavy cluster — the paper's isosurface-over-background regime: most
+      tiles hold a handful of splats, a few hold hundreds.  Tiered dispatch
+      (k_tiers) runs the light tiles at the small K and skips empty tiles
+      entirely instead of paying the dense Kmax everywhere; the headline
+      number is the dense/tiered render-phase ratio (> 1 == speedup).
+
+  dense scene    every tile sits in the top tier — the worst case for
+      tiering.  The gate: tiered must not regress past ``--dense-slack``
+      (binning + scatter overhead only).
+
+  truncation     a heavy-overlap scene rendered (a) dense at the legacy
+      static K, (b) tiered with a large top tier, both against a
+      high-K dense reference.  Tiering lets heavy tiles keep the large K
+      without paying it everywhere, so its truncation error collapses;
+      recorded as the max-abs-error reduction.
+
+Saves JSON under experiments/benchmarks/tiered_raster.json.
+
+    PYTHONPATH=src python -m benchmarks.bench_tiered_raster [--smoke]
+        [--res 256] [--points 20000] [--reps 3]
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import save_result
+from repro.core.cameras import orbital_rig, select
+from repro.core.gaussians import from_points
+from repro.core.projection import project
+from repro.core.render import _tiered_tiles, render
+from repro.core.tiling import (TileGrid, assign_tiles, auto_tier_caps,
+                               gather_features_at, splat_features,
+                               tile_occupancy, tile_origins)
+from repro.data.isosurface import point_cloud_for
+from repro.kernels import rasterize_tiles
+
+
+def _steady(fn, *, reps: int) -> float:
+    jax.block_until_ready(fn())            # warmup: compile + first run
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _scene(n_points: int, *, res: int, heavy_frac: float, scale: float,
+           seed: int = 0):
+    """Synthetic occupancy-controlled scene: (1-heavy_frac) of the splats
+    scatter uniformly over the frame (low per-tile occupancy), heavy_frac
+    concentrate in a small ball (top-tier tiles).  ``scale`` is the splat
+    radius in units of the mean point spacing."""
+    rng = np.random.default_rng(seed)
+    n_bg = n_points - int(n_points * heavy_frac)
+    pts = rng.uniform(0.0, 1.0, (n_bg, 3))
+    if n_points - n_bg:
+        ball = 0.5 + 0.08 * rng.standard_normal((n_points - n_bg, 3))
+        pts = np.concatenate([pts, ball])
+    cols = rng.uniform(0.0, 1.0, (n_points, 3))
+    spacing = 1.0 / max(n_points, 1) ** (1.0 / 3.0)
+    g = from_points(jnp.asarray(pts, jnp.float32), jnp.asarray(cols),
+                    init_scale=scale * spacing, opacity=0.9)
+    cams = orbital_rig(2, (0.5, 0.5, 0.5), 2.6, width=res, height=res)
+    return g, select(cams, 0)
+
+
+def _phase_fns(g, cam, grid: TileGrid, Kmax: int, k_tiers, caps, impl="ref"):
+    """Jitted render-phase closures over a precomputed assignment: dense =
+    full-K gather + one launch; tiered = binning + per-tier gather/launch +
+    scatter.  Both take the (N, F) feature table so the timed region is
+    exactly the part the tentpole changes."""
+    splats = project(g, cam)
+    idx, score = assign_tiles(splats, grid, K=Kmax)
+    feat = splat_features(splats)
+    occ = np.asarray(tile_occupancy(score))
+    origins = tile_origins(grid)
+
+    dense = jax.jit(lambda f: rasterize_tiles(
+        gather_features_at(f, idx, score), origins,
+        tile_h=grid.tile_h, tile_w=grid.tile_w, impl=impl))
+    tiered = jax.jit(lambda f: _tiered_tiles(
+        f, idx, score, grid, k_tiers=k_tiers, tier_caps=caps, impl=impl)[0])
+    return dense, tiered, feat, occ
+
+
+def run(*, res: int = 256, n_points: int = 20000, reps: int = 3,
+        k_tiers=(16, 64, 128), dense_slack: float = 1.25,
+        quick: bool = False):
+    if quick:
+        res, n_points, reps, k_tiers = 128, 6000, 2, (8, 32, 64)
+    k_tiers = tuple(k_tiers)
+    Kmax = k_tiers[-1]
+    grid = TileGrid(res, res, 8, 16)
+    results = {"res": res, "n_points": n_points, "k_tiers": list(k_tiers),
+               "n_tiles": grid.n_tiles}
+
+    print(f"\n[tiered_raster] res={res} N={n_points} k_tiers={k_tiers} "
+          f"T={grid.n_tiles}")
+    # sparse: a ~6-splat/tile background field + a heavy cluster holding the
+    # rest of the budget — most tiles land in the low tiers, a few in the top
+    n_bg = min(n_points // 2, 6 * grid.n_tiles)
+    scenes = {
+        "sparse": _scene(n_points, res=res,
+                         heavy_frac=1.0 - n_bg / n_points, scale=0.4),
+        # big splats everywhere: every tile saturates the top tier
+        "dense": _scene(n_points, res=res, heavy_frac=0.0, scale=3.0),
+    }
+    for name, (g, cam) in scenes.items():
+        occ_probe = np.asarray(tile_occupancy(
+            assign_tiles(project(g, cam), grid, K=Kmax)[1]))
+        caps = auto_tier_caps(occ_probe[None], k_tiers)
+        fn_d, fn_t, feat, occ = _phase_fns(g, cam, grid, Kmax, k_tiers, caps)
+        np.testing.assert_allclose(np.asarray(fn_t(feat)),
+                                   np.asarray(fn_d(feat)),
+                                   rtol=1e-5, atol=1e-5)
+        t_d = _steady(lambda: fn_d(feat), reps=reps)
+        t_t = _steady(lambda: fn_t(feat), reps=reps)
+        ratio = t_d / t_t
+        # end-to-end (projection + assignment included) for context
+        rfn_d = jax.jit(lambda gg, c=cam: render(gg, c, grid, K=Kmax,
+                                                 impl="ref").rgb)
+        rfn_t = jax.jit(lambda gg, c=cam, tc=caps: render(
+            gg, c, grid, k_tiers=k_tiers, tier_caps=tc, impl="ref").rgb)
+        e_d = _steady(lambda: rfn_d(g), reps=reps)
+        e_t = _steady(lambda: rfn_t(g), reps=reps)
+        frac_bg = float((occ == 0).mean())
+        print(f"  {name:7s} bg-tiles {frac_bg:5.1%}  med-occ "
+              f"{int(np.median(occ[occ > 0])) if (occ > 0).any() else 0:4d}"
+              f"  caps {caps}")
+        print(f"          render-phase dense {t_d*1e3:8.2f} ms  tiered "
+              f"{t_t*1e3:8.2f} ms  ({ratio:.2f}x)   end-to-end "
+              f"{e_d*1e3:8.2f} -> {e_t*1e3:8.2f} ms ({e_d/e_t:.2f}x)")
+        results[name] = {"t_dense_s": t_d, "t_tiered_s": t_t,
+                         "speedup": ratio, "bg_tile_frac": frac_bg,
+                         "t_e2e_dense_s": e_d, "t_e2e_tiered_s": e_t,
+                         "e2e_speedup": e_d / e_t, "tier_caps": list(caps)}
+
+    # ---- truncation-error reduction on a heavy-overlap scene ----
+    k_old = k_tiers[1]                     # the legacy single static K
+    k_ref = max(4 * Kmax, 256)
+    g, cam = _scene(n_points, res=res, heavy_frac=0.5, scale=1.5, seed=1)
+    ref = np.asarray(render(g, cam, grid, K=k_ref, impl="ref").rgb)
+    img_dense = np.asarray(render(g, cam, grid, K=k_old, impl="ref").rgb)
+    trunc_tiers = tuple(list(k_tiers[:-1]) + [k_ref])
+    img_tier = np.asarray(render(g, cam, grid, k_tiers=trunc_tiers,
+                                 impl="ref").rgb)
+    e_dense = float(np.abs(img_dense - ref).max())
+    e_tier = float(np.abs(img_tier - ref).max())
+    print(f"  truncation vs K={k_ref} ref: static K={k_old} err {e_dense:.2e}"
+          f"  tiered{trunc_tiers} err {e_tier:.2e}")
+    results["truncation"] = {"k_static": k_old, "k_ref": k_ref,
+                             "err_static": e_dense, "err_tiered": e_tier}
+
+    sparse_up = results["sparse"]["speedup"]
+    dense_ok = results["dense"]["speedup"] >= 1.0 / dense_slack
+    trunc_ok = e_tier <= e_dense
+    ok = dense_ok and trunc_ok
+    print(f"  acceptance: sparse render-phase {sparse_up:.2f}x recorded; "
+          f"dense within {dense_slack:.2f}x slack: "
+          f"{'PASS' if dense_ok else 'FAIL'}; truncation not worse: "
+          f"{'PASS' if trunc_ok else 'FAIL'}")
+    results.update({"dense_slack": dense_slack, "gate_pass": ok})
+    save_result("tiered_raster", results)
+    if not ok:
+        raise SystemExit(
+            f"tiered_raster acceptance FAILED: dense ratio "
+            f"{results['dense']['speedup']:.2f}x (floor "
+            f"{1.0/dense_slack:.2f}x), truncation {e_tier:.2e} vs "
+            f"{e_dense:.2e}")
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--res", type=int, default=256)
+    ap.add_argument("--points", type=int, default=20000)
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--dense-slack", type=float, default=1.25,
+                    help="max tolerated tiered/dense slowdown on the dense "
+                         "scene before exiting 1 (CPU binning overhead)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny settings for CI smoke runs")
+    args = ap.parse_args()
+    run(res=args.res, n_points=args.points, reps=args.reps,
+        dense_slack=args.dense_slack, quick=args.smoke)
+
+
+if __name__ == "__main__":
+    main()

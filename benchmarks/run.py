@@ -39,6 +39,14 @@ def main():
         bench_batched_render.run(quick=quick or args.smoke, gate_floor=1.3)
     except SystemExit as e:
         print(f"[benchmarks] WARNING (continuing): {e}")
+
+    from benchmarks import bench_tiered_raster
+    try:
+        # generous dense slack for the same reason: the orchestrator only
+        # warns on timing noise; standalone runs use the strict default
+        bench_tiered_raster.run(quick=quick or args.smoke, dense_slack=1.5)
+    except SystemExit as e:
+        print(f"[benchmarks] WARNING (continuing): {e}")
     if args.smoke:
         print(f"\n[benchmarks] smoke tier done in {time.time()-t0:.0f}s; "
               f"JSON under experiments/benchmarks/")

@@ -39,9 +39,12 @@ from repro.core.cameras import CAM_VAXES, Camera
 from repro.core.gaussians import Gaussians
 from repro.core.metrics import ssim_map
 from repro.core.projection import project
-from repro.core.tiling import FEAT_DIM, TileGrid, splat_features, tile_bounds
+from repro.core.tiling import (FEAT_DIM, TileGrid, bin_tiles_by_occupancy,
+                               splat_features, tile_bounds,
+                               topk_by_score_then_index)
 from repro.core.train import GSTrainCfg, GSOptState, group_lrs
 from repro.kernels import rasterize_tiles
+from repro.kernels.ops import rasterize_tiles_tiered
 
 NEG = -1e30
 
@@ -130,8 +133,11 @@ def _assign_tiles_local(mean2d, radius, depth, valid, lo, hi, *, K: int,
         cat_s = jnp.concatenate([top_s, score], axis=-1)
         cat_i = jnp.concatenate(
             [top_i, jnp.broadcast_to(idx, score.shape)], axis=-1)
-        new_s, sel = lax.top_k(cat_s, K)
-        new_i = jnp.take_along_axis(cat_i, sel, axis=-1)
+        # two-key merge (score desc, index asc): the same deterministic
+        # tie-break as the global assign_tiles, so strip-local and global
+        # assignment agree bit-for-bit even when depths tie at the K
+        # boundary (ROADMAP tie-break divergence item)
+        new_s, new_i = topk_by_score_then_index(cat_s, cat_i, K)
         return (new_s, new_i), None
 
     Tl = lo.shape[0]
@@ -167,11 +173,30 @@ def make_gs_forward(mesh, grid: TileGrid, *, K: int, impl: str = "auto",
                     lambda_dssim: float = 0.2,
                     assign_block: Optional[int] = None,
                     return_tiles: bool = False, gather_mode: str = "f32",
-                    strip_budget: float = 1.0, views: Optional[int] = None):
+                    strip_budget: float = 1.0, views: Optional[int] = None,
+                    k_tiers: Optional[tuple] = None,
+                    tier_caps: Optional[tuple] = None,
+                    return_overflow: bool = False):
     """shard_map'd distributed forward: (gaussians, cam, gt, mask) -> loss.
 
     gt_tiles (P*T, 3, th, tw) / mask_tiles (P*T, th, tw) arrive sharded over
     ("pod", "model") on the flat tile axis.
+
+    k_tiers=(16, 64, 256)-style schedules switch each device's strip to
+    occupancy-tiered rasterization: the strip-local assignment runs at
+    k_tiers[-1] (K is then ignored), the strip's (Pl*Tl,) flat tiles are
+    binned with core.tiling.bin_tiles_by_occupancy — the SAME binning as
+    the single-device renderer, so tiered distributed == tiered
+    single-device — and each non-empty tier gets its own kernel launch,
+    scattered back into the strip image.  tier_caps are static per-strip
+    tile capacities shared by all devices (they must cover the worst
+    strip); None defaults to the always-exact full strip size (no tile is
+    ever dropped, but every tier launch is strip-sized — pass measured
+    caps in production).  ``return_overflow=True`` appends the global
+    dropped-tile count (summed over strips/partitions/views; 0 == the
+    tiered step is exact) to the outputs — production configs running
+    measured caps should log it, mirroring RenderOut.overflow on the
+    single-device path.
 
     views=V enables the view-batched step: cam carries (V, 4, 4) view
     matrices (replicated), gt/mask gain a leading replicated V axis, and
@@ -205,6 +230,9 @@ def make_gs_forward(mesh, grid: TileGrid, *, K: int, impl: str = "auto",
     assert T % n_model == 0, (T, n_model)
     Tl = T // n_model
     tile0 = (pod, model) if pod else model
+    if k_tiers is not None:
+        k_tiers = tuple(int(k) for k in k_tiers)
+        K = k_tiers[-1]                  # assignment depth = largest tier
     if assign_block is None:
         # auto block: the view fold multiplies the assign sweep's leading
         # axis by V, so shrink the gaussian block to keep per-device peak
@@ -222,7 +250,12 @@ def make_gs_forward(mesh, grid: TileGrid, *, K: int, impl: str = "auto",
     in_specs = (g_spec, cam_spec, P(*vlead, tile0, None, None, None),
                 P(*vlead, tile0, None, None))
     tiles_spec = P(*vlead, tile0, None, None, None)
-    out_specs = (P(), tiles_spec) if return_tiles else P()
+    out_specs = (P(),)
+    if return_tiles:
+        out_specs += (tiles_spec,)
+    if return_overflow:
+        out_specs += (P(),)
+    out_specs = out_specs if len(out_specs) > 1 else P()
 
     lo_full, hi_full = tile_bounds(grid)            # (T, 2) host constants
     # all-gather axis: N sits one deeper when a view axis leads
@@ -316,27 +349,57 @@ def make_gs_forward(mesh, grid: TileGrid, *, K: int, impl: str = "auto",
         idx = lax.stop_gradient(idx)
         live = lax.stop_gradient(score) > NEG / 2   # (Pl, Tl, K)
 
-        gather_rows = jax.vmap(lambda f, i: f[i])
-        if gather_mode == "split":
-            mean_t = gather_rows(mean_g, idx)                  # (Pl,Tl,K,2)
-            rest_t = gather_rows(rest, idx).astype(jnp.float32)
-            alpha = jnp.where(live, rest_t[..., 6], 0.0)
-            tile_feat = jnp.concatenate(
-                [mean_t, rest_t[..., :6], alpha[..., None],
-                 jnp.zeros(mean_t.shape[:-1] + (FEAT_DIM - 9,),
-                           jnp.float32)], axis=-1)
-        else:
-            tile_feat = gather_rows(feat, idx)                 # (Pl,Tl,K,F)
-            alpha = jnp.where(live, tile_feat[..., 8], 0.0)
-            tile_feat = jnp.concatenate(
-                [tile_feat[..., :8], alpha[..., None],
-                 tile_feat[..., 9:]], -1)
+        def features_for(p_rows, idx_rows, live_rows):
+            """Kernel features for arbitrary tile rows: p_rows (...,) picks
+            the partition slice of the gathered table, idx_rows (..., K')
+            the splat rows within it, live_rows masks dead slots' alpha.
+            Serves both the dense (Pl, Tl, K) gather and the per-tier
+            compacted (cap_i, K_i) gathers."""
+            if gather_mode == "split":
+                mean_t = mean_g[p_rows[..., None], idx_rows]
+                rest_t = rest[p_rows[..., None], idx_rows] \
+                    .astype(jnp.float32)
+                alpha = jnp.where(live_rows, rest_t[..., 6], 0.0)
+                return jnp.concatenate(
+                    [mean_t, rest_t[..., :6], alpha[..., None],
+                     jnp.zeros(mean_t.shape[:-1] + (FEAT_DIM - 9,),
+                               jnp.float32)], axis=-1)
+            feat_t = feat[p_rows[..., None], idx_rows]
+            alpha = jnp.where(live_rows, feat_t[..., 8], 0.0)
+            return jnp.concatenate(
+                [feat_t[..., :8], alpha[..., None], feat_t[..., 9:]], -1)
 
-        Pl = tile_feat.shape[0]
-        flat = tile_feat.reshape(Pl * Tl, K, FEAT_DIM)
-        origins = jnp.tile(lo, (Pl, 1))
-        tiles = rasterize_tiles(flat, origins, tile_h=grid.tile_h,
-                                tile_w=grid.tile_w, impl=impl)
+        Pl = mean_g.shape[0]
+        origins = jnp.tile(lo, (Pl, 1))                 # (Pl*Tl, 2)
+        if k_tiers is not None:
+            # ---- tiered dispatch over the strip's flat tile axis ----
+            M = Pl * Tl
+            idx_f = idx.reshape(M, K)
+            live_f = live.reshape(M, K)
+            occ = live_f.sum(-1).astype(jnp.int32)
+            caps = tier_caps if tier_caps is not None \
+                else (M,) * len(k_tiers)
+            plan = bin_tiles_by_occupancy(occ, k_tiers, caps)
+            overflow_l = plan.overflow
+            tier_feats, tier_origins = [], []
+            for k, ids in zip(k_tiers, plan.tile_ids):
+                safe = jnp.minimum(ids, M - 1)          # sentinel-safe rows
+                live_rows = live_f[safe, :k] & (ids < M)[:, None]
+                tier_feats.append(
+                    features_for(safe // Tl, idx_f[safe, :k], live_rows))
+                tier_origins.append(jnp.take(origins, ids, axis=0,
+                                             mode="fill", fill_value=0.0))
+            tiles = rasterize_tiles_tiered(
+                tier_feats, tier_origins, plan.tile_ids, M,
+                tile_h=grid.tile_h, tile_w=grid.tile_w, impl=impl)
+        else:
+            p_rows = jnp.broadcast_to(
+                jnp.arange(Pl, dtype=jnp.int32)[:, None], idx.shape[:2])
+            tile_feat = features_for(p_rows, idx, live)  # (Pl,Tl,K,F)
+            flat = tile_feat.reshape(Pl * Tl, K, FEAT_DIM)
+            tiles = rasterize_tiles(flat, origins, tile_h=grid.tile_h,
+                                    tile_w=grid.tile_w, impl=impl)
+            overflow_l = jnp.zeros((), jnp.int32)   # dense path never drops
 
         # ---- masked loss partials -> psum (scalar-only cross-pod traffic)
         axes = (pod, data, model) if pod else (data, model)
@@ -356,10 +419,18 @@ def make_gs_forward(mesh, grid: TileGrid, *, K: int, impl: str = "auto",
             l1n, l1d, sn, sd = (lax.psum(x, axes) for x in (l1n, l1d, sn, sd))
             loss = ((1 - lambda_dssim) * l1n / jnp.maximum(l1d, 1.0)
                     + lambda_dssim * (1.0 - sn / jnp.maximum(sd, 1.0)) / 2.0)
-        if return_tiles:
-            if views:
-                tiles = tiles.reshape((views, -1) + tiles.shape[1:])
-            return loss, tiles
+        if return_tiles or return_overflow:
+            outs = (loss,)
+            if return_tiles:
+                if views:
+                    tiles = tiles.reshape((views, -1) + tiles.shape[1:])
+                outs += (tiles,)
+            if return_overflow:
+                # each (pod, model) strip is computed redundantly along the
+                # "data" axis, so sum over the strip-distinct axes only
+                ov_axes = (pod, model) if pod else (model,)
+                outs += (lax.psum(overflow_l, ov_axes),)
+            return outs
         return loss
 
     return shard_map(shard_fn, mesh=mesh, in_specs=in_specs,
@@ -373,7 +444,9 @@ def make_gs_forward(mesh, grid: TileGrid, *, K: int, impl: str = "auto",
 
 def make_gs_train_step(mesh, cfg: GSTrainCfg, grid: TileGrid, extent: float,
                        *, impl: str = "auto", views: Optional[int] = None,
-                       assign_block: Optional[int] = None):
+                       assign_block: Optional[int] = None,
+                       k_tiers: Optional[tuple] = None,
+                       tier_caps: Optional[tuple] = None):
     """jit'd (gaussians, opt, batch) -> (gaussians, opt, loss).
 
     Per-partition losses are averaged globally, but gradients never mix
@@ -383,6 +456,10 @@ def make_gs_train_step(mesh, cfg: GSTrainCfg, grid: TileGrid, extent: float,
     views=V runs the minibatch-of-views step: batch["gt_tiles"] is
     (V, P*T, 3, th, tw), batch["cam"] carries (V, 4, 4) views, and the loss
     (hence the gradient) averages over the view batch.
+
+    k_tiers/tier_caps switch the forward's rasterization to occupancy
+    tiers (see make_gs_forward); cfg.K is then only the dense fallback's
+    assignment depth.
     """
     lrs = group_lrs(cfg, extent)
     g_sh, opt_sh, b_sh = gs_shardings(mesh, views=views)
@@ -390,7 +467,8 @@ def make_gs_train_step(mesh, cfg: GSTrainCfg, grid: TileGrid, extent: float,
                           lambda_dssim=cfg.lambda_dssim,
                           gather_mode=cfg.gather_mode,
                           strip_budget=cfg.strip_budget, views=views,
-                          assign_block=assign_block)
+                          assign_block=assign_block,
+                          k_tiers=k_tiers, tier_caps=tier_caps)
 
     def loss_fn(tr, g, cam, gt, mask):
         return fwd(g.with_trainable(tr), cam, gt, mask)

@@ -14,6 +14,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import time
+import warnings
 from typing import List, Optional
 
 import jax
@@ -27,8 +28,8 @@ from repro.core.cameras import Camera, orbital_rig, select
 from repro.core.gaussians import Gaussians, from_points
 from repro.core.masking import background_mask, dilate_mask
 from repro.core.partition import PartitionData, partition_points
-from repro.core.render import render_batch
-from repro.core.tiling import TileGrid
+from repro.core.render import render_batch, view_occupancy
+from repro.core.tiling import TileGrid, auto_tier_caps
 from repro.core.train import GSTrainCfg, fit_partition
 from repro.data.isosurface import point_cloud_for
 
@@ -82,19 +83,34 @@ def gt_gaussians(points, colors, *, owner_id: int = 0) -> Gaussians:
 
 @functools.lru_cache(maxsize=64)
 def _render_batch_jit(grid: TileGrid, K: int, impl: str, bg: float,
-                      coarse: Optional[int]):
+                      coarse: Optional[int],
+                      k_tiers: Optional[tuple] = None,
+                      tier_caps: Optional[tuple] = None):
     """Cached jitted render_batch: the seed's render_views rebuilt its jit
     closure per call, recompiling the renderer every time the pipeline
     rendered a new gaussian set (GT, per-partition GT, merged, boundary —
-    4+2P compiles per run).  Keying on the static render config makes every
-    same-shaped call after the first dispatch-only."""
+    4+2P compiles per run).  Keying on the static render config (incl. the
+    tier schedule and caps — auto_tier_caps rounds caps so nearby scenes
+    share an entry) makes every same-shaped call after the first
+    dispatch-only."""
     return jax.jit(lambda gg, cc: render_batch(gg, cc, grid, K=K, impl=impl,
-                                               bg=bg, coarse=coarse))
+                                               bg=bg, coarse=coarse,
+                                               k_tiers=k_tiers,
+                                               tier_caps=tier_caps))
+
+
+@functools.lru_cache(maxsize=64)
+def _occupancy_jit(grid: TileGrid, K: int, coarse: Optional[int]):
+    """Cached jitted per-view occupancy prepass (tier-cap auto-sizing)."""
+    return jax.jit(lambda gg, cc: view_occupancy(gg, cc, grid, K=K,
+                                                 coarse=coarse))
 
 
 def render_views(g: Gaussians, cams: Camera, grid: TileGrid, *, K: int,
                  impl: str = "auto", bg: float = 1.0, batch: int = 8,
-                 coarse: Optional[int] = None):
+                 coarse: Optional[int] = None,
+                 k_tiers: Optional[tuple] = None,
+                 tier_caps: Optional[tuple] = None):
     """-> (V, H, W, 3) rgb + (V, H, W) coverage.
 
     View-batched: renders ``batch`` views per dispatch through
@@ -102,15 +118,55 @@ def render_views(g: Gaussians, cams: Camera, grid: TileGrid, *, K: int,
     former one-jit-call-per-view Python loop.  The tail chunk is padded by
     repeating the last view (then cropped) so every dispatch shares one
     traced shape.
+
+    ``k_tiers`` enables occupancy-tiered rasterization; ``K`` is then
+    ignored (both the render and the cap-sizing prepass assign at
+    k_tiers[-1], since occupancy must be measured at the depth the render
+    uses).  When ``tier_caps`` is None the caps are sized from an occupancy
+    prepass of the FIRST chunk only (with slack), and the per-chunk
+    overflow counter closes the loop: a later chunk that outgrows the caps
+    is re-rendered with doubled caps (a bounded number of extra compiles)
+    — so every returned image is exact without paying a full-rig prepass.
+    Explicit ``tier_caps`` are never altered; if they drop tiles, a
+    RuntimeWarning reports the overflow instead of silently returning
+    background where geometry was.
     """
     V = cams.view.shape[0]
     batch = max(1, min(batch, V))
-    rfn = _render_batch_jit(grid, K, impl, bg, coarse)
+    auto_caps = k_tiers is not None and tier_caps is None
+    if k_tiers is not None:
+        k_tiers = tuple(int(k) for k in k_tiers)
+        K = k_tiers[-1]      # dead in tiered mode: pin the jit cache key
+        if tier_caps is None:
+            vi0 = jnp.clip(jnp.arange(batch), 0, V - 1)
+            occ0 = _occupancy_jit(grid, k_tiers[-1], coarse)(
+                g, select(cams, vi0))
+            tier_caps = auto_tier_caps(occ0, k_tiers, slack=1.25)
+        tier_caps = tuple(int(c) for c in tier_caps)
+    rfn = _render_batch_jit(grid, K, impl, bg, coarse, k_tiers, tier_caps)
     rgbs, covs = [], []
     for s in range(0, V, batch):
         take = min(batch, V - s)
         vi = jnp.clip(jnp.arange(s, s + batch), 0, V - 1)
         out = rfn(g, select(cams, vi))
+        if k_tiers is not None:
+            ov = int(np.asarray(out.overflow).sum())
+            while ov and auto_caps:
+                # this chunk outgrew the first-chunk caps: double and retry
+                # (terminates: caps are clamped at the tile count, where
+                # binning provably cannot overflow)
+                tier_caps = tuple(min(grid.n_tiles, max(8, 2 * c))
+                                  for c in tier_caps)
+                rfn = _render_batch_jit(grid, K, impl, bg, coarse, k_tiers,
+                                        tier_caps)
+                out = rfn(g, select(cams, vi))
+                ov = int(np.asarray(out.overflow).sum())
+            if ov:
+                warnings.warn(
+                    f"render_views: {ov} tile(s) in views [{s}, {s + take})"
+                    f" overflowed the explicit tier_caps={tier_caps} and "
+                    f"rendered as background; grow the caps (or pass "
+                    f"tier_caps=None to auto-size)", RuntimeWarning)
         rgbs.append(np.asarray(out.rgb[:take]))
         covs.append(np.asarray(out.coverage[:take]))
     return np.concatenate(rgbs), np.concatenate(covs)

@@ -2,12 +2,26 @@
 untile -> composite.  This is the building block for the trainer, merge, and
 ground-truth generation; the multi-device variant (sharding constraints at
 each stage) lives in core/distributed.py.
+
+Two rasterizer dispatch modes:
+
+  dense (K=)        every tile carries the same static top-K list — one
+                    kernel launch over all T tiles.
+  tiered (k_tiers=) tiles are binned by occupancy into K-tiers (e.g.
+                    K in {16, 64, 256}); each non-empty tier gets its own
+                    launch at its own K, and tier outputs scatter back into
+                    the full tile image.  Sparse/background tiles stop
+                    paying the dense-K gather+compute, heavy tiles stop
+                    truncating at a too-small K.  Exact vs dense at
+                    K = k_tiers[-1] whenever the static tier capacities
+                    cover the occupancy histogram (see
+                    core.tiling.bin_tiles_by_occupancy).
 """
 
 from __future__ import annotations
 
 from functools import partial
-from typing import NamedTuple, Optional
+from typing import NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -17,26 +31,38 @@ from repro.core.cameras import CAM_VAXES, Camera
 from repro.core.gaussians import Gaussians
 from repro.core.projection import project
 from repro.core.tiling import (
+    NEG,
     TileGrid,
     assign_tiles,
+    auto_tier_caps,
+    bin_tiles_by_occupancy,
+    gather_features_at,
     gather_tile_features,
+    splat_features,
+    tile_occupancy,
     tile_origins,
     untile_image,
 )
 from repro.kernels import rasterize_tiles
-from repro.kernels.ops import rasterize_tiles_batched
+from repro.kernels.ops import rasterize_tiles_batched, rasterize_tiles_tiered
 
 
 class RenderOut(NamedTuple):
-    rgb: jax.Array        # (H, W, 3), background-composited
-    coverage: jax.Array   # (H, W) alpha coverage in [0, 1]
+    rgb: jax.Array        # (H, W, 3) or (V, H, W, 3), background-composited
+    coverage: jax.Array   # (H, W) / (V, H, W) alpha coverage in [0, 1]
+    #: tiered renders only: tiles dropped because every tier cap from their
+    #: desired tier upward was full (0 when caps cover the scene; scalar, or
+    #: (V,) for batched renders).  None on the dense path.
+    overflow: Optional[jax.Array] = None
 
 
 def _gather_feats(g: Gaussians, cam: Camera, grid: TileGrid, *, K: int,
                   coarse: Optional[int], coarse_budget: Optional[int],
                   block: int = 4096):
     """Shared first half of the render: project -> tile-assign (indices
-    stop-gradiented: discrete assignment) -> per-tile feature gather."""
+    stop-gradiented: discrete assignment) -> per-tile feature gather.
+
+    -> (tile_feats (T, K, FEAT_DIM), idx (T, K), score (T, K))."""
     splats = project(g, cam)
     idx, score = assign_tiles(splats, grid, K=K, block=block, coarse=coarse,
                               coarse_budget=coarse_budget)
@@ -52,35 +78,160 @@ def _composite(img, bg):
     return RenderOut(rgb=rgb, coverage=cov)
 
 
+# ---------------------------------------------------------------------------
+# Tiered (variable-K) dispatch
+# ---------------------------------------------------------------------------
+
+
+def _tiered_tiles(feat, idx, score, grid: TileGrid, *, k_tiers, tier_caps,
+                  impl: str):
+    """Tier-compact a flat (T, Kmax) assignment and rasterize per tier.
+
+    feat (N, F) differentiable feature table; idx/score (T, Kmax) static
+    assignment (already stop-gradiented).  -> (tiles (T, 4, th, tw), plan).
+    Each tier's tables are compacted to its static cap with K_i columns —
+    the gather volume shrinks together with the kernel work.
+    """
+    T = grid.n_tiles
+    plan = bin_tiles_by_occupancy(tile_occupancy(score), k_tiers, tier_caps)
+    origins = tile_origins(grid)
+    tier_feats, tier_origins = [], []
+    for k, ids in zip(k_tiers, plan.tile_ids):
+        idx_k = jnp.take(idx[:, :k], ids, axis=0, mode="fill", fill_value=0)
+        sc_k = jnp.take(score[:, :k], ids, axis=0, mode="fill",
+                        fill_value=NEG)
+        tier_feats.append(gather_features_at(feat, idx_k, sc_k))
+        tier_origins.append(jnp.take(origins, ids, axis=0, mode="fill",
+                                     fill_value=0.0))
+    tiles = rasterize_tiles_tiered(tier_feats, tier_origins, plan.tile_ids,
+                                   T, tile_h=grid.tile_h, tile_w=grid.tile_w,
+                                   impl=impl)
+    return tiles, plan
+
+
+def _tiered_tiles_batched(feat, idx, score, grid: TileGrid, *, k_tiers,
+                          tier_caps, impl: str):
+    """View-batched tiered dispatch: bin each view's tiles independently
+    (shared static caps), then ONE launch per tier over the flattened
+    (V * cap_i,) tier tables — the tiered analogue of
+    rasterize_tiles_batched's (V*T,) flattening.
+
+    feat (V, N, F); idx/score (V, T, Kmax) -> (tiles (V, T, 4, th, tw),
+    plan with per-view counts/overflow)."""
+    V, T = score.shape[0], grid.n_tiles
+    M = V * T
+    plan = jax.vmap(
+        lambda o: bin_tiles_by_occupancy(o, k_tiers, tier_caps)
+    )(tile_occupancy(score))
+    origins = tile_origins(grid)
+    offs = jnp.arange(V, dtype=jnp.int32)[:, None] * T
+
+    def take_rows(arr, ids, fill):
+        f = lambda a, i: jnp.take(a, i, axis=0, mode="fill", fill_value=fill)
+        return jax.vmap(f)(arr, ids)
+
+    tier_feats, tier_origins, flat_ids = [], [], []
+    for k, ids in zip(k_tiers, plan.tile_ids):       # ids (V, cap_i)
+        cap = ids.shape[1]
+        idx_k = take_rows(idx[:, :, :k], ids, 0)     # (V, cap, k)
+        sc_k = take_rows(score[:, :, :k], ids, NEG)
+        tf = jax.vmap(gather_features_at)(feat, idx_k, sc_k)
+        og = jax.vmap(lambda i: jnp.take(origins, i, axis=0, mode="fill",
+                                         fill_value=0.0))(ids)
+        tier_feats.append(tf.reshape((V * cap,) + tf.shape[2:]))
+        tier_origins.append(og.reshape(V * cap, 2))
+        flat_ids.append(jnp.where(ids < T, ids + offs, M).reshape(-1))
+    tiles = rasterize_tiles_tiered(tier_feats, tier_origins, flat_ids, M,
+                                   tile_h=grid.tile_h, tile_w=grid.tile_w,
+                                   impl=impl)
+    return tiles.reshape(V, T, 4, grid.tile_h, grid.tile_w), plan
+
+
+def _resolve_tiers(k_tiers, tier_caps, score):
+    """Static (k_tiers, tier_caps) tuples; caps auto-sized from concrete
+    occupancy when not given (raises under jit — pass static caps there)."""
+    k_tiers = tuple(int(k) for k in k_tiers)
+    if tier_caps is None:
+        tier_caps = auto_tier_caps(tile_occupancy(score), k_tiers)
+    return k_tiers, tuple(int(c) for c in tier_caps)
+
+
+# ---------------------------------------------------------------------------
+# Public render entry points
+# ---------------------------------------------------------------------------
+
+
 def render_tiles(g: Gaussians, cam: Camera, grid: TileGrid, *, K: int = 64,
                  impl: str = "auto", coarse: Optional[int] = None,
-                 coarse_budget: Optional[int] = None):
-    """-> (tiles (T, 4, th, tw), idx, score). Differentiable w.r.t. gaussians
-    (tile index lists are stop-gradiented: discrete assignment)."""
-    feats, idx, score = _gather_feats(g, cam, grid, K=K, coarse=coarse,
-                                      coarse_budget=coarse_budget)
-    tiles = rasterize_tiles(
-        feats, tile_origins(grid),
-        tile_h=grid.tile_h, tile_w=grid.tile_w, impl=impl,
-    )
+                 coarse_budget: Optional[int] = None,
+                 k_tiers: Optional[Sequence[int]] = None,
+                 tier_caps: Optional[Sequence[int]] = None):
+    """-> (tiles (T, 4, th, tw), idx (T, K'), score (T, K')).
+
+    Differentiable w.r.t. gaussians (tile index lists are stop-gradiented:
+    discrete assignment).  With ``k_tiers`` the assignment runs at
+    K' = k_tiers[-1] and the kernel dispatch is tiered (one launch per
+    non-empty tier); ``K`` is ignored in that mode."""
+    if k_tiers is None:
+        feats, idx, score = _gather_feats(g, cam, grid, K=K, coarse=coarse,
+                                          coarse_budget=coarse_budget)
+        tiles = rasterize_tiles(
+            feats, tile_origins(grid),
+            tile_h=grid.tile_h, tile_w=grid.tile_w, impl=impl,
+        )
+        return tiles, idx, score
+    tiles, idx, score, _ = _render_tiles_tiered(
+        g, cam, grid, impl=impl, coarse=coarse, coarse_budget=coarse_budget,
+        k_tiers=k_tiers, tier_caps=tier_caps)
     return tiles, idx, score
+
+
+def _render_tiles_tiered(g, cam, grid, *, impl, coarse, coarse_budget,
+                         k_tiers, tier_caps):
+    splats = project(g, cam)
+    idx, score = assign_tiles(splats, grid, K=tuple(k_tiers)[-1],
+                              coarse=coarse, coarse_budget=coarse_budget)
+    idx = lax.stop_gradient(idx)
+    score = lax.stop_gradient(score)
+    k_tiers, tier_caps = _resolve_tiers(k_tiers, tier_caps, score)
+    tiles, plan = _tiered_tiles(splat_features(splats), idx, score, grid,
+                                k_tiers=k_tiers, tier_caps=tier_caps,
+                                impl=impl)
+    return tiles, idx, score, plan
 
 
 def render(g: Gaussians, cam: Camera, grid: TileGrid, *, K: int = 64,
            impl: str = "auto", bg: float = 1.0,
            coarse: Optional[int] = None,
-           coarse_budget: Optional[int] = None) -> RenderOut:
-    """Full-image render with background composite (paper bg is white)."""
-    tiles, _, _ = render_tiles(g, cam, grid, K=K, impl=impl, coarse=coarse,
-                               coarse_budget=coarse_budget)
-    return _composite(untile_image(tiles, grid), bg)
+           coarse_budget: Optional[int] = None,
+           k_tiers: Optional[Sequence[int]] = None,
+           tier_caps: Optional[Sequence[int]] = None) -> RenderOut:
+    """Full-image render with background composite (paper bg is white).
+
+    ``k_tiers=(16, 64, 256)``-style schedules switch to occupancy-tiered
+    rasterization (K is then ignored; K' = k_tiers[-1] bounds per-tile
+    depth).  ``tier_caps`` are the static per-tier tile capacities — leave
+    None outside jit to auto-size from this scene, pass explicit caps under
+    jit.  The returned RenderOut.overflow counts tiles dropped past the top
+    tier's cap (0 == the tiered image is exact vs dense at K')."""
+    if k_tiers is None:
+        tiles, _, _ = render_tiles(g, cam, grid, K=K, impl=impl,
+                                   coarse=coarse, coarse_budget=coarse_budget)
+        return _composite(untile_image(tiles, grid), bg)
+    tiles, _, _, plan = _render_tiles_tiered(
+        g, cam, grid, impl=impl, coarse=coarse, coarse_budget=coarse_budget,
+        k_tiers=k_tiers, tier_caps=tier_caps)
+    out = _composite(untile_image(tiles, grid), bg)
+    return out._replace(overflow=plan.overflow)
 
 
 def render_batch(g: Gaussians, cams: Camera, grid: TileGrid, *, K: int = 64,
                  impl: str = "auto", bg: float = 1.0,
                  coarse: Optional[int] = None,
                  coarse_budget: Optional[int] = None,
-                 assign_block: Optional[int] = None) -> RenderOut:
+                 assign_block: Optional[int] = None,
+                 k_tiers: Optional[Sequence[int]] = None,
+                 tier_caps: Optional[Sequence[int]] = None) -> RenderOut:
     """View-batched render: cams carries a leading V axis on view/fx/fy.
 
     Projection -> tile assignment -> feature gather are vmapped over the
@@ -90,6 +241,12 @@ def render_batch(g: Gaussians, cams: Camera, grid: TileGrid, *, K: int = 64,
     ``render`` calls to float-associativity tolerance.  Differentiable
     w.r.t. gaussians (the trainer's minibatch-of-views step drives this).
 
+    ``k_tiers`` switches the kernel dispatch to occupancy tiers: each view
+    bins its own tiles (shared static ``tier_caps``, which must cover the
+    worst view — auto-sized outside jit), and each tier gets one flattened
+    (V * cap_i,) launch.  RenderOut.overflow is then (V,) dropped-tile
+    counts (all-zero == exact vs the dense path at K = k_tiers[-1]).
+
     assign_block bounds the tile-assignment sweep's temporaries; under vmap
     those are V-fold, so the auto default shrinks the single-view block by
     V (floored at 1024) to keep the peak footprint roughly view-count
@@ -98,14 +255,55 @@ def render_batch(g: Gaussians, cams: Camera, grid: TileGrid, *, K: int = 64,
     V = cams.view.shape[0]
     block = assign_block or max(1024, 4096 // max(V, 1))
 
-    def gather_one(cam: Camera):
-        return _gather_feats(g, cam, grid, K=K, coarse=coarse,
-                             coarse_budget=coarse_budget, block=block)[0]
+    if k_tiers is None:
+        def gather_one(cam: Camera):
+            return _gather_feats(g, cam, grid, K=K, coarse=coarse,
+                                 coarse_budget=coarse_budget, block=block)[0]
 
-    feats = jax.vmap(gather_one, in_axes=(CAM_VAXES,))(cams)   # (V, T, K, F)
-    tiles = rasterize_tiles_batched(
-        feats, tile_origins(grid),
-        tile_h=grid.tile_h, tile_w=grid.tile_w, impl=impl,
-    )                                                          # (V, T, 4, ...)
-    img = jax.vmap(lambda t: untile_image(t, grid))(tiles)     # (V, H, W, 4)
-    return _composite(img, bg)
+        feats = jax.vmap(gather_one, in_axes=(CAM_VAXES,))(cams)  # (V,T,K,F)
+        tiles = rasterize_tiles_batched(
+            feats, tile_origins(grid),
+            tile_h=grid.tile_h, tile_w=grid.tile_w, impl=impl,
+        )                                                      # (V, T, 4, ...)
+        img = jax.vmap(lambda t: untile_image(t, grid))(tiles)  # (V, H, W, 4)
+        return _composite(img, bg)
+
+    Kmax = tuple(k_tiers)[-1]
+
+    def gather_one_tiered(cam: Camera):
+        splats = project(g, cam)
+        idx, score = assign_tiles(splats, grid, K=Kmax, block=block,
+                                  coarse=coarse, coarse_budget=coarse_budget)
+        return (splat_features(splats), lax.stop_gradient(idx),
+                lax.stop_gradient(score))
+
+    feat, idx, score = jax.vmap(gather_one_tiered, in_axes=(CAM_VAXES,))(cams)
+    k_tiers, tier_caps = _resolve_tiers(k_tiers, tier_caps, score)
+    tiles, plan = _tiered_tiles_batched(feat, idx, score, grid,
+                                        k_tiers=k_tiers, tier_caps=tier_caps,
+                                        impl=impl)
+    img = jax.vmap(lambda t: untile_image(t, grid))(tiles)
+    return _composite(img, bg)._replace(overflow=plan.overflow)
+
+
+def view_occupancy(g: Gaussians, cams: Camera, grid: TileGrid, *, K: int,
+                   coarse: Optional[int] = None,
+                   coarse_budget: Optional[int] = None,
+                   assign_block: Optional[int] = None):
+    """(V, T) int32 per-view tile occupancy at assignment depth K.
+
+    The cheap prepass pipeline.render_views uses to auto-size static tier
+    caps once per gaussian set before entering the cached tiered jit.
+    assign_block defaults to the same V-shrunk block as render_batch so the
+    vmapped sweep's temporaries stay view-count independent; callers with
+    many views should additionally chunk the view axis (render_views does)."""
+    V = cams.view.shape[0]
+    block = assign_block or max(1024, 4096 // max(V, 1))
+
+    def one(cam: Camera):
+        splats = project(g, cam)
+        _, score = assign_tiles(splats, grid, K=K, block=block,
+                                coarse=coarse, coarse_budget=coarse_budget)
+        return tile_occupancy(score)
+
+    return jax.vmap(one, in_axes=(CAM_VAXES,))(cams)

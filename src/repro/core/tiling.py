@@ -6,20 +6,34 @@ keys with atomics.  On TPU we keep the top-K *front-most* gaussians per tile
 dense, regular compute, no atomics/sort (DESIGN.md §3).  K >= the local
 overlap depth makes this exact; tests validate the approximation.
 
-The resulting (T, K) index lists come out depth-sorted (top-k on -depth), which
+The resulting (T, K) index lists come out depth-sorted (top-k on -depth,
+ties broken by splat index so every merge order yields the same list), which
 is exactly the order front-to-back compositing needs.
 
 Tiles are rectangular: the TPU-native shape is (8, 128) — one VREG row of
 pixels per compositing step (DESIGN.md §3) — while CPU tests use small tiles.
+
+Shape-contract glossary (used across tiling/render/kernels docstrings):
+  N  gaussians in the (projected) splat table
+  T  image tiles (grid.n_tiles); M for a generic flat tile axis
+  K  per-tile splat-list depth; Kmax = the largest tier when tiered
+  V  views in a batched render
+  S  superblocks in the coarse pre-cull
+
+Variable-K tiers: ``bin_tiles_by_occupancy`` groups tiles into K-tiers
+(e.g. K in {16, 64, 256}) by their live-entry count so the rasterizer can
+launch one kernel per tier instead of paying the max K everywhere; see
+``TierPlan`` and kernels/ops.rasterize_tiles_tiered.
 """
 
 from __future__ import annotations
 
 from functools import partial
-from typing import NamedTuple, Optional
+from typing import NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 
 from repro.core.projection import Splats2D
@@ -33,6 +47,10 @@ FEAT_DIM = 16
 
 
 class TileGrid(NamedTuple):
+    """Static image/tile geometry: (height, width) pixels split into
+    row-major (tile_h, tile_w) tiles — T = n_tiles = ny * nx.  Hashable, so
+    it can key jit caches (pipeline._render_batch_jit) and be closed over
+    as a static argument."""
     width: int
     height: int
     tile_h: int = 8
@@ -69,6 +87,34 @@ def tile_origins(grid: TileGrid):
     return lo
 
 
+def topk_by_score_then_index(cat_s, cat_i, K: int):
+    """Top-K of (score, idx) pairs: score descending, splat index ascending.
+
+    cat_s (..., C) float32 scores, cat_i (..., C) int32 indices ->
+    (..., K) of each.  The secondary index key makes the selection a pure
+    function of the (score, idx) SET — any blockwise/strip-wise merge order
+    (dense sweep, coarse survivors, distributed tile strips) lands on the
+    same K entries even when scores tie at the boundary, which is what keeps
+    single-device and distributed assignment bit-identical (ROADMAP
+    tie-break divergence item).
+
+    Implemented with lax.top_k, which breaks value ties by the LOWER input
+    position (the chlo.top_k contract; ~30x cheaper on CPU than an explicit
+    two-key lax.sort over the (K + block)-wide merge).  Positional ties
+    equal index-order ties under one PRECONDITION every caller satisfies:
+    within any run of equal scores, cat_i must be ascending.  The blockwise
+    scans guarantee it structurally — the carry holds only earlier
+    (lower-index) blocks and is inductively index-sorted within ties, and
+    each block's candidates are generated in index order (coarse candidate
+    lists and strip-compacted tables preserve table order too).  The
+    merge-order-invariance test in test_tiling_properties.py pins this
+    against backend regressions.
+    """
+    new_s, sel = lax.top_k(cat_s, K)
+    return new_s, jnp.take_along_axis(cat_i.astype(jnp.int32), sel,
+                                      axis=-1)
+
+
 # ---------------------------------------------------------------------------
 # Coarse superblock pre-cull
 # ---------------------------------------------------------------------------
@@ -95,13 +141,16 @@ def coarse_candidates(mean2d, radius, valid, grid: TileGrid, *, sb: int,
                       budget: int, block: int = 4096):
     """Per-superblock candidate splat lists via one cheap circle/rect pass.
 
-    -> cand (S, budget) int32 indices into the splat table; slots past the
-    true per-superblock occupancy hold N (one-past-the-end sentinel).  If a
-    superblock's occupancy exceeds ``budget``, the HIGHEST-INDEXED splats
-    overflow and are dropped — table order, not depth order, so the loss is
-    arbitrary w.r.t. visibility.  Callers must size the budget to the scene
-    (assign_tiles' auto budget is documented there; budget >= occupancy
-    makes the cull exact).
+    -> (cand (S, budget) int32, overflow () int32).  ``cand`` holds indices
+    into the splat table; slots past the true per-superblock occupancy hold
+    N (one-past-the-end sentinel).  If a superblock's occupancy exceeds
+    ``budget``, the HIGHEST-INDEXED splats overflow and are dropped — table
+    order, not depth order, so the loss is arbitrary w.r.t. visibility.
+    ``overflow`` counts exactly those dropped (superblock, splat) candidate
+    pairs; 0 means the cull was exact.  Callers must size the budget to the
+    scene (assign_tiles' auto budget is documented there; budget >=
+    occupancy makes the cull exact) and should monitor the counter in
+    production instead of trusting the budget blindly.
 
     Blockwise over gaussians like the dense sweep — O(S * block)
     temporaries, not O(S * N) — carrying per-superblock running counts so
@@ -144,8 +193,9 @@ def coarse_candidates(mean2d, radius, valid, grid: TileGrid, *, sb: int,
 
     init = (jnp.zeros((S,), jnp.int32),
             jnp.full((S, budget + 1), N, jnp.int32))
-    (_, cand), _ = lax.scan(body, init, (mx, my, rd, vd, idxb))
-    return cand[:, :budget]
+    (count, cand), _ = lax.scan(body, init, (mx, my, rd, vd, idxb))
+    overflow = jnp.maximum(count - budget, 0).sum().astype(jnp.int32)
+    return cand[:, :budget], overflow
 
 
 def _coarse_budget(N: int, S: int, K: int, budget) -> int:
@@ -164,11 +214,12 @@ def _assign_tiles_coarse(splats: Splats2D, grid: TileGrid, *, K: int,
                          block: int, sb: int, budget: int):
     """Exact circle/rect top-K restricted to coarse-pass survivors.
 
-    Same contract as assign_tiles; work drops from O(T*N) to
-    O(S*N + T*budget) where S = T / sb^2.  Candidate features are gathered
-    ONCE per superblock (gather volume S*budget rows, not T*budget) and the
-    fine test runs superblock-major over (S, sb^2 tile slots, block) panes,
-    scattered back to row-major tile order at the end.
+    Same contract as assign_tiles (returns (idx, score, overflow)); work
+    drops from O(T*N) to O(S*N + T*budget) where S = T / sb^2.  Candidate
+    features are gathered ONCE per superblock (gather volume S*budget rows,
+    not T*budget) and the fine test runs superblock-major over (S, sb^2
+    tile slots, block) panes, scattered back to row-major tile order at the
+    end.
     """
     T = grid.n_tiles
     N = splats.mean2d.shape[0]
@@ -176,9 +227,10 @@ def _assign_tiles_coarse(splats: Splats2D, grid: TileGrid, *, K: int,
     sy = (grid.ny + sb - 1) // sb
     S, sb2 = sx * sy, sb * sb
 
-    cand = coarse_candidates(splats.mean2d, splats.radius, splats.valid,
-                             grid, sb=sb, budget=budget,
-                             block=block)                      # (S, M)
+    cand, overflow = coarse_candidates(splats.mean2d, splats.radius,
+                                       splats.valid, grid, sb=sb,
+                                       budget=budget,
+                                       block=block)            # (S, M)
     M = cand.shape[1]
     cb = min(block, M)
     nb = (M + cb - 1) // cb
@@ -221,8 +273,7 @@ def _assign_tiles_coarse(splats: Splats2D, grid: TileGrid, *, K: int,
         cat_i = jnp.concatenate(
             [top_idx, jnp.broadcast_to(ci[:, None, :].astype(jnp.int32),
                                        score.shape)], axis=-1)
-        new_s, sel = lax.top_k(cat_s, K)
-        new_i = jnp.take_along_axis(cat_i, sel, axis=-1)
+        new_s, new_i = topk_by_score_then_index(cat_s, cat_i, K)
         return (new_s, new_i), None
 
     init = (jnp.full((S, sb2, K), NEG, jnp.float32),
@@ -238,17 +289,24 @@ def _assign_tiles_coarse(splats: Splats2D, grid: TileGrid, *, K: int,
     idx = idx_s.reshape(S * sb2, K)[pos]
     # map sentinel slots back to a safe in-range index (they carry score NEG)
     idx = jnp.where(score > NEG / 2, idx, 0)
-    return idx, score
+    return idx, score, overflow
 
 
 def assign_tiles(splats: Splats2D, grid: TileGrid, *, K: int = 64,
                  block: int = 4096, coarse: Optional[int] = None,
-                 coarse_budget: Optional[int] = None):
+                 coarse_budget: Optional[int] = None,
+                 return_overflow: bool = False):
     """Top-K front-most gaussians per tile.
 
     Returns (idx (T, K) int32 into the splat table, score (T, K); score==NEG
-    marks empty slots).  Blockwise over gaussians: carry a running top-k and
-    merge each block with lax.top_k — O(T * N) work, O(T * block) memory.
+    marks empty slots).  With ``return_overflow=True`` a third () int32 is
+    appended: the number of candidates the coarse pre-cull dropped past its
+    budget (always 0 on the dense path) — production configs should log it
+    and treat nonzero as "grow coarse_budget".  Blockwise over gaussians:
+    carry a running top-k and merge each block with a two-key sort (score
+    desc, splat index asc) — O(T * N) work, O(T * block) memory; the index
+    tie-break makes the result independent of the merge order (see
+    topk_by_score_then_index).
 
     ``coarse=sb`` enables a two-level cull: a cheap circle/rect pass against
     sb x sb tile superblocks compacts per-superblock candidate lists of size
@@ -269,8 +327,9 @@ def assign_tiles(splats: Splats2D, grid: TileGrid, *, K: int = 64,
              * ((grid.ny + coarse - 1) // coarse))
         budget = _coarse_budget(N, S, K, coarse_budget) if N else 0
         if 0 < budget < N:
-            return _assign_tiles_coarse(splats, grid, K=K, block=block,
-                                        sb=coarse, budget=budget)
+            idx, score, overflow = _assign_tiles_coarse(
+                splats, grid, K=K, block=block, sb=coarse, budget=budget)
+            return (idx, score, overflow) if return_overflow else (idx, score)
         # budget >= N (or empty table): fall through to the dense sweep
     lo, hi = tile_bounds(grid)                      # (T, 2)
     N = splats.mean2d.shape[0]
@@ -305,20 +364,144 @@ def assign_tiles(splats: Splats2D, grid: TileGrid, *, K: int = 64,
         idx = b0 + jnp.arange(block, dtype=jnp.int32)[None, :]
         cat_s = jnp.concatenate([top_score, score], axis=1)
         cat_i = jnp.concatenate([top_idx, jnp.broadcast_to(idx, score.shape)], 1)
-        new_s, sel = lax.top_k(cat_s, K)
-        new_i = jnp.take_along_axis(cat_i, sel, axis=1)
+        new_s, new_i = topk_by_score_then_index(cat_s, cat_i, K)
         return (new_s, new_i), None
 
     T = grid.n_tiles
     init = (jnp.full((T, K), NEG, jnp.float32), jnp.zeros((T, K), jnp.int32))
     b0s = jnp.arange(nb, dtype=jnp.int32) * block
     (score, idx), _ = lax.scan(body, init, (meanb, radb, depthb, validb, b0s))
+    if return_overflow:
+        return idx, score, jnp.zeros((), jnp.int32)   # dense path never drops
     return idx, score
 
 
+# ---------------------------------------------------------------------------
+# Variable-K occupancy binning (tiered rasterization)
+# ---------------------------------------------------------------------------
+
+
+class TierPlan(NamedTuple):
+    """Static-shape dispatch schedule for tiered rasterization.
+
+    tile_ids  per tier i: (cap_i,) int32 flat tile ids compacted to the
+              front; slots past ``counts[i]`` hold M (one-past-the-end
+              sentinel, M = the flat tile count) so scatters with
+              ``mode="drop"`` ignore them.  cap_i is STATIC — it is part of
+              the traced shape, so a jit cache keyed on the caps never
+              recompiles for scenes with the same cap signature.
+    counts    (n_tiers,) int32: tiles actually placed per tier (<= cap_i).
+    overflow  () int32: tiles that fit no tier because every cap from their
+              desired tier upward was full — those tiles are DROPPED from
+              rasterization (they render as background).  0 whenever caps
+              cover the true tier histogram (auto_tier_caps guarantees it).
+    """
+    tile_ids: Tuple[jax.Array, ...]
+    counts: jax.Array
+    overflow: jax.Array
+
+
+def tile_occupancy(score):
+    """(..., T, K) assignment scores -> (..., T) int32 live-entry counts.
+
+    Occupancy is exact when the assignment K covered the true per-tile
+    overlap depth; tiles saturating all K slots may be undercounted, which
+    is why tiered callers assign at Kmax = the largest tier first.
+    """
+    return (score > NEG / 2).sum(axis=-1).astype(jnp.int32)
+
+
+def tile_tiers(occupancy, k_tiers: Sequence[int]):
+    """Per-tile tier index: the smallest tier whose K covers the occupancy.
+
+    occupancy (..., T) int32 -> (..., T) int32 in [-1, n_tiers).  Empty
+    tiles (occupancy 0) get tier -1 — "no rasterization work at all" (their
+    output is exactly zero under the kernel semantics: every slot carries
+    alpha 0, so color 0 / coverage 0).  Tiles whose occupancy exceeds even
+    the top tier land in the top tier (truncation, same as the dense path
+    at K = k_tiers[-1]).
+    """
+    kt = jnp.asarray(tuple(k_tiers), jnp.int32)
+    covered = occupancy[..., None] <= kt               # (..., T, n_tiers)
+    tier = jnp.argmax(covered, axis=-1).astype(jnp.int32)
+    tier = jnp.where(covered.any(-1), tier, len(tuple(k_tiers)) - 1)
+    return jnp.where(occupancy > 0, tier, -1)
+
+
+def bin_tiles_by_occupancy(occupancy, k_tiers: Sequence[int],
+                           tier_caps: Sequence[int]) -> TierPlan:
+    """Bin flat tiles into K-tiers with STATIC per-tier capacities.
+
+    occupancy (M,) int32; k_tiers strictly increasing per-tile K budgets;
+    tier_caps same length, static ints.  Tiles fill their desired tier
+    (smallest K covering their occupancy) in flat-tile-id order; a tile
+    whose tier is full PROMOTES to the next larger tier (a bigger K is
+    still exact), and tiles that fall off the top are counted in
+    ``overflow`` and dropped.  Empty tiles (occupancy 0) are placed in no
+    tier — the rasterizer's output for them is identically zero, so the
+    scatter's zero-initialised image already IS their result.
+
+    Fully jit-compatible: every output shape depends only on ``tier_caps``.
+    """
+    k_tiers = tuple(int(k) for k in k_tiers)
+    tier_caps = tuple(int(c) for c in tier_caps)
+    if len(tier_caps) != len(k_tiers):
+        raise ValueError(f"{len(k_tiers)} tiers but {len(tier_caps)} caps")
+    if any(b <= a for a, b in zip(k_tiers, k_tiers[1:])):
+        raise ValueError(f"k_tiers must be strictly increasing: {k_tiers}")
+    M = occupancy.shape[0]
+    tier = tile_tiers(occupancy, k_tiers)
+    ids = jnp.arange(M, dtype=jnp.int32)
+    tile_ids, counts = [], []
+    carry = jnp.zeros((M,), bool)           # overflow promoted from below
+    for i, cap in enumerate(tier_caps):
+        want = (tier == i) | carry
+        rank = jnp.cumsum(want) - 1         # id-order position within tier
+        take = want & (rank < cap)
+        pos = jnp.where(take, jnp.minimum(rank, cap), cap)  # cap = scratch
+        buf = jnp.full((cap + 1,), M, jnp.int32)
+        buf = buf.at[pos].set(jnp.where(take, ids, M))
+        tile_ids.append(buf[:cap])
+        counts.append(jnp.minimum(want.sum(), cap).astype(jnp.int32))
+        carry = want & ~take
+    return TierPlan(tile_ids=tuple(tile_ids),
+                    counts=jnp.stack(counts),
+                    overflow=carry.sum().astype(jnp.int32))
+
+
+def auto_tier_caps(occupancy, k_tiers: Sequence[int], *, slack: float = 1.0,
+                   round_to: int = 8) -> Tuple[int, ...]:
+    """Host-side cap sizing from CONCRETE occupancy counts.
+
+    occupancy (..., T) (any leading batch axes, e.g. a view axis) ->
+    static per-tier caps covering the worst slice of the batch, scaled by
+    ``slack`` and rounded up to a multiple of ``round_to`` so nearby scenes
+    hash to the same jit cache entry.  Raises under tracing — pass explicit
+    ``tier_caps`` inside jit.
+    """
+    if isinstance(occupancy, jax.core.Tracer):
+        raise TypeError(
+            "auto_tier_caps needs concrete occupancy; pass static tier_caps "
+            "when calling the tiered renderer under jit")
+    occ = np.asarray(occupancy)
+    occ = occ.reshape(-1, occ.shape[-1])
+    tiers = np.asarray(tile_tiers(jnp.asarray(occ), k_tiers))
+    M = occ.shape[-1]
+    caps = []
+    for i in range(len(tuple(k_tiers))):
+        c = int((tiers == i).sum(axis=-1).max())
+        if c:
+            c = int(np.ceil(c * slack))
+            c = min(-(-c // round_to) * round_to, M)
+        caps.append(c)
+    return tuple(caps)
+
+
 def splat_features(splats: Splats2D):
-    """Per-splat kernel features (..., FEAT_DIM); invalid splats get alpha=0.
-    Batch-polymorphic over leading dims."""
+    """Per-splat kernel features: (N, FEAT_DIM) rows [mx, my, conicA, conicB,
+    conicC, r, g, b, alpha, 0-pad]; invalid splats get alpha=0.
+    Batch-polymorphic over leading dims ((..., N, FEAT_DIM) in general —
+    the distributed path carries (P, N), render_batch (V, N))."""
     a, b, c = splats.cov2d[..., 0], splats.cov2d[..., 1], splats.cov2d[..., 2]
     det = jnp.maximum(a * c - b * b, 1e-12)
     conic = jnp.stack([c / det, -b / det, a / det], -1)      # (..., 3)
@@ -330,20 +513,31 @@ def splat_features(splats: Splats2D):
     return jnp.pad(feat, ((0, 0),) * (feat.ndim - 1) + ((0, pad),))
 
 
-def gather_tile_features(splats: Splats2D, idx, score):
-    """Pack per-tile splat features: (T, K, FEAT_DIM).
+def gather_features_at(feat, idx, score):
+    """Gather rows of a (N, FEAT_DIM) feature table into per-tile lists.
 
-    Empty slots (score==NEG) get alpha=0 -> contribute nothing.  This gather is
-    plain jnp (differentiable); its transpose (scatter-add) is what routes the
-    kernel's per-tile grads back to gaussians.
+    feat (N, F); idx (..., K) int32 rows; score (..., K) with NEG marking
+    empty slots -> (..., K, F).  Empty slots get alpha=0 -> contribute
+    nothing.  This gather is plain jnp (differentiable); its transpose
+    (scatter-add) is what routes the kernel's per-tile grads back to
+    gaussians.  The tiered path calls this once per K-tier with that tier's
+    compacted (cap_i, K_i) index table.
     """
-    feat = splat_features(splats)                            # (N, F)
-    tile_feat = feat[idx]                                    # (T, K, F)
-    live = score > NEG / 2                                   # (T, K)
+    tile_feat = feat[idx]                                    # (..., K, F)
+    live = score > NEG / 2                                   # (..., K)
     alpha = jnp.where(live, tile_feat[..., 8], 0.0)
     return jnp.concatenate(
         [tile_feat[..., :8], alpha[..., None], tile_feat[..., 9:]], axis=-1
     )
+
+
+def gather_tile_features(splats: Splats2D, idx, score):
+    """Pack per-tile splat features: (T, K, FEAT_DIM).
+
+    splats with (N,) leading axis; idx/score (T, K) from assign_tiles.
+    See gather_features_at for the slot semantics.
+    """
+    return gather_features_at(splat_features(splats), idx, score)
 
 
 def untile_image(tiles, grid: TileGrid):

@@ -10,6 +10,14 @@
 
 All impls share semantics exactly (see kernels/ref.py) so swapping impl never
 changes training math beyond float-associativity noise.
+
+Three dispatch shapes share these kernels:
+
+  rasterize_tiles          one (T,) grid launch at a single static K
+  rasterize_tiles_batched  view-batched: (V, T) flattened to one (V*T,) launch
+  rasterize_tiles_tiered   variable-K: one launch per occupancy tier (each at
+                           its own K_i over its own compacted tile list),
+                           scattered back into the full flat tile image
 """
 
 from __future__ import annotations
@@ -84,3 +92,37 @@ def rasterize_tiles_batched(feats, origins, *, tile_h: int, tile_w: int,
         tile_h=tile_h, tile_w=tile_w, impl=impl,
     )
     return out.reshape(V, T, 4, tile_h, tile_w)
+
+
+def rasterize_tiles_tiered(tier_feats, tier_origins, tier_ids, n_tiles: int,
+                           *, tile_h: int, tile_w: int, impl: str = "auto"):
+    """Variable-K dispatch: one kernel launch per non-empty occupancy tier.
+
+    tier_feats    per tier i: (cap_i, K_i, F) compacted feature tables —
+                  each tier carries its OWN static K_i, so sparse tiles pay
+                  K_i=16 gather/compute instead of the dense Kmax.
+    tier_origins  per tier i: (cap_i, 2) tile origins aligned with the feats.
+    tier_ids      per tier i: (cap_i,) int32 flat tile ids (TierPlan.tile_ids
+                  from core.tiling.bin_tiles_by_occupancy); slots holding the
+                  sentinel ``n_tiles`` are padding and are dropped by the
+                  scatter.
+    n_tiles       M: the flat tile count of the full image.
+
+    -> (M, 4, th, tw).  Tiles placed in no tier (empty tiles, or overflow
+    past the top tier's cap) come back as exact zeros — identical to what
+    the kernel produces for an all-alpha-0 list.  Differentiable w.r.t.
+    every tier_feats entry: each launch goes through the same custom-VJP
+    (pallas/interpret) or autodiff (ref) path as rasterize_tiles, and the
+    scatter's transpose routes the per-tier output cotangents back to the
+    corresponding tier table (padding slots get zeros via mode="drop").
+    Tier capacities are static, so this traces to a fixed launch schedule —
+    cap_i == 0 tiers are skipped at trace time ("non-empty tier" dispatch).
+    """
+    out = jnp.zeros((n_tiles, 4, tile_h, tile_w), jnp.float32)
+    for feats, origins, ids in zip(tier_feats, tier_origins, tier_ids):
+        if feats.shape[0] == 0:
+            continue
+        tiles = rasterize_tiles(feats, origins, tile_h=tile_h, tile_w=tile_w,
+                                impl=impl)
+        out = out.at[ids].set(tiles, mode="drop")
+    return out

@@ -24,6 +24,14 @@ VMEM budget per program (production tile 8x128, K=64):
 
 Layouts: feats (T, K, 16) f32, origins (T, 2) f32, out (T, 4, th, tw) f32
 (channels [r, g, b, coverage]).
+
+K is a trace-time constant, not a baked-in config: each pallas_call
+specializes its (1, K, F) block spec and fori_loop bound to the incoming
+feats shape.  The variable-K tiered dispatch (kernels/ops.
+rasterize_tiles_tiered) relies on exactly this — it calls these kernels
+once per occupancy tier with that tier's own (cap_i, K_i, F) table, so a
+K=16 tier runs a 16-step compositing loop over a 1 KB VMEM block instead
+of paying the top tier's K everywhere.
 """
 
 from __future__ import annotations

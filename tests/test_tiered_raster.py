@@ -1,0 +1,264 @@
+"""Variable-K occupancy-binned rasterization (the tentpole).
+
+Pins the tier contract:
+  * binning is a partition: every non-empty tile lands in exactly one tier
+    (its smallest covering K) when caps suffice, empty tiles in none;
+  * tiered rendering is EXACT vs the dense path at K = k_tiers[-1] whenever
+    caps cover the occupancy histogram — forward (ref + interpret impls,
+    single and view-batched) and gradients through the tier scatter;
+  * capacity pressure promotes tiles upward (still exact) and only the top
+    tier drops, surfaced via the overflow counter;
+  * edge cases: every tile in one tier, empty tiers, all-background scenes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.cameras import orbital_rig, select
+from repro.core.gaussians import from_points
+from repro.core.pipeline import render_views
+from repro.core.render import render, render_batch
+from repro.core.tiling import (NEG, TileGrid, auto_tier_caps,
+                               bin_tiles_by_occupancy, tile_occupancy,
+                               tile_tiers)
+from repro.data.isosurface import point_cloud_for
+
+
+def scene(n=600, res=48, n_views=3, seed=0, opacity=0.9):
+    pts, cols = point_cloud_for("sphere_shell", n, seed=seed)
+    g = from_points(jnp.asarray(pts), jnp.asarray(cols), opacity=opacity)
+    cams = orbital_rig(n_views, (0.5, 0.5, 0.5), 1.5, width=res, height=res)
+    return g, cams, TileGrid(res, res, 8, 16)
+
+
+# ---------------------------------------------------------------------------
+# binning unit tests
+# ---------------------------------------------------------------------------
+
+
+def test_binning_is_a_partition_when_caps_cover():
+    rng = np.random.default_rng(0)
+    occ = jnp.asarray(rng.integers(0, 65, 200), jnp.int32)
+    kt = (8, 32, 64)
+    caps = auto_tier_caps(occ, kt)
+    plan = bin_tiles_by_occupancy(occ, kt, caps)
+    assert int(plan.overflow) == 0
+    placed = np.concatenate([np.asarray(t) for t in plan.tile_ids])
+    placed = placed[placed < 200]
+    # exactly the non-empty tiles, each exactly once
+    np.testing.assert_array_equal(np.sort(placed),
+                                  np.nonzero(np.asarray(occ) > 0)[0])
+    # every placed tile's tier K covers its occupancy
+    tiers = np.asarray(tile_tiers(occ, kt))
+    for i, (k, ids) in enumerate(zip(kt, plan.tile_ids)):
+        ids = np.asarray(ids)
+        live = ids[ids < 200]
+        assert (np.asarray(occ)[live] <= k).all()
+        assert (tiers[live] == i).all()
+        assert int(plan.counts[i]) == len(live)
+
+
+def test_binning_promotes_on_capacity_pressure_and_counts_overflow():
+    occ = jnp.asarray([4, 4, 4, 40, 70, 70, 70], jnp.int32)
+    kt = (8, 32, 64)
+    # tier0 cap 1: two tier0 tiles promote; tier1 takes one + its own; the
+    # top tier (cap 2) holds two of {promoted, 70s} and drops the rest
+    plan = bin_tiles_by_occupancy(occ, kt, (1, 2, 2))
+    assert int(plan.counts.sum()) + int(plan.overflow) == 7
+    assert int(plan.overflow) == 2
+    # promotion keeps ids sorted within each tier and never demotes
+    tiers = np.asarray(tile_tiers(occ, kt))
+    for i, ids in enumerate(plan.tile_ids):
+        live = np.asarray(ids)[np.asarray(ids) < 7]
+        assert (tiers[live] <= i).all()
+        assert (np.diff(live) > 0).all()
+
+
+def test_binning_rejects_bad_schedules():
+    occ = jnp.zeros((4,), jnp.int32)
+    with pytest.raises(ValueError):
+        bin_tiles_by_occupancy(occ, (16, 16), (4, 4))
+    with pytest.raises(ValueError):
+        bin_tiles_by_occupancy(occ, (16, 64), (4,))
+
+
+def test_auto_tier_caps_under_jit_raises_with_guidance():
+    with pytest.raises(TypeError, match="static tier_caps"):
+        jax.jit(lambda o: auto_tier_caps(o, (8, 16)))(
+            jnp.zeros((4,), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# forward parity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("impl", ["ref", "interpret"])
+def test_tiered_render_exact_vs_dense_maxk(impl):
+    g, cams, grid = scene()
+    cam = select(cams, 0)
+    kt = (4, 16, 64)
+    dense = render(g, cam, grid, K=kt[-1], impl=impl)
+    tiered = render(g, cam, grid, k_tiers=kt, impl=impl)
+    assert int(tiered.overflow) == 0
+    np.testing.assert_allclose(np.asarray(tiered.rgb), np.asarray(dense.rgb),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(tiered.coverage),
+                               np.asarray(dense.coverage),
+                               rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("impl", ["ref", "interpret"])
+def test_tiered_render_batch_exact_vs_dense(impl):
+    g, cams, grid = scene(n_views=3)
+    kt = (4, 16, 64)
+    dense = render_batch(g, cams, grid, K=kt[-1], impl=impl)
+    tiered = render_batch(g, cams, grid, k_tiers=kt, impl=impl)
+    assert tiered.overflow.shape == (3,)
+    assert int(tiered.overflow.sum()) == 0
+    np.testing.assert_allclose(np.asarray(tiered.rgb), np.asarray(dense.rgb),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_tiered_render_views_matches_dense_and_caches():
+    from repro.core import pipeline as pl
+    g, cams, grid = scene(n_views=5)
+    r0, c0 = render_views(g, cams, grid, K=64, impl="ref", batch=2)
+    before = pl._render_batch_jit.cache_info().misses
+    r1, c1 = render_views(g, cams, grid, K=64, impl="ref", batch=2,
+                          k_tiers=(4, 16, 64))
+    r2, _ = render_views(g, cams, grid, K=64, impl="ref", batch=2,
+                         k_tiers=(4, 16, 64))
+    np.testing.assert_allclose(r0, r1, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(c0, c1, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(r1, r2)
+    # the second tiered call reuses the cached jit (same auto caps)
+    assert pl._render_batch_jit.cache_info().misses == before + 1
+
+
+def test_tiered_with_static_caps_under_jit():
+    g, cams, grid = scene()
+    cam = select(cams, 0)
+    kt = (4, 16, 64)
+    caps = auto_tier_caps(
+        tile_occupancy(_score(g, cam, grid, kt[-1])), kt)
+    f = jax.jit(lambda gg: render(gg, cam, grid, k_tiers=kt,
+                                  tier_caps=caps, impl="ref").rgb)
+    dense = render(g, cam, grid, K=kt[-1], impl="ref").rgb
+    np.testing.assert_allclose(np.asarray(f(g)), np.asarray(dense),
+                               rtol=1e-6, atol=1e-6)
+
+
+def _score(g, cam, grid, K):
+    from repro.core.projection import project
+    from repro.core.tiling import assign_tiles
+    return assign_tiles(project(g, cam), grid, K=K)[1]
+
+
+# ---------------------------------------------------------------------------
+# gradients through the tier scatter
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("impl", ["ref", "interpret"])
+def test_tiered_gradient_parity(impl):
+    g, cams, grid = scene(n=300, res=32)
+    cam = select(cams, 0)
+    kt = (4, 16, 64)
+    target = jnp.zeros((32, 32, 3))
+
+    def loss(colors, k_tiers):
+        out = render(g._replace(colors=colors), cam, grid,
+                     K=kt[-1], impl=impl, k_tiers=k_tiers)
+        return jnp.mean((out.rgb - target) ** 2)
+
+    gd = jax.grad(lambda c: loss(c, None))(g.colors)
+    gt = jax.grad(lambda c: loss(c, kt))(g.colors)
+    np.testing.assert_allclose(np.asarray(gt), np.asarray(gd),
+                               rtol=1e-5, atol=1e-6)
+    assert float(jnp.abs(gd).max()) > 0  # non-trivial gradient
+
+
+def test_tiered_gradient_parity_batched():
+    g, cams, grid = scene(n=300, res=32, n_views=2)
+    kt = (4, 16, 64)
+
+    def loss(means, k_tiers):
+        out = render_batch(g._replace(means=means), cams, grid,
+                           K=kt[-1], impl="ref", k_tiers=k_tiers)
+        return jnp.mean(out.rgb ** 2)
+
+    gd = jax.grad(lambda m: loss(m, None))(g.means)
+    gt = jax.grad(lambda m: loss(m, kt))(g.means)
+    np.testing.assert_allclose(np.asarray(gt), np.asarray(gd),
+                               rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# edge cases
+# ---------------------------------------------------------------------------
+
+
+def test_all_tiles_in_one_tier():
+    g, cams, grid = scene()
+    cam = select(cams, 0)
+    occ = tile_occupancy(_score(g, cam, grid, 600))   # 600 splats: exact
+    m = int(occ.max())
+    kt = (m, 2 * m)                        # tier 0 swallows every live tile
+    caps = auto_tier_caps(occ, kt)
+    assert caps[1] == 0                    # top tier is empty -> no launch
+    out = render(g, cam, grid, k_tiers=kt, impl="ref")
+    dense = render(g, cam, grid, K=2 * m, impl="ref")
+    assert int(out.overflow) == 0
+    np.testing.assert_allclose(np.asarray(out.rgb), np.asarray(dense.rgb),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_all_background_scene_renders_bg():
+    """A fully inactive gaussian set: every tile is empty, zero launches."""
+    g, cams, grid = scene()
+    g = g._replace(active=jnp.zeros_like(g.active))
+    out = render(g, select(cams, 0), grid, k_tiers=(4, 16), bg=1.0,
+                 impl="ref")
+    assert int(out.overflow) == 0
+    np.testing.assert_allclose(np.asarray(out.rgb), 1.0)
+    np.testing.assert_allclose(np.asarray(out.coverage), 0.0)
+
+
+def test_top_tier_overflow_is_counted_not_silent():
+    g, cams, grid = scene()
+    cam = select(cams, 0)
+    out = render(g, cam, grid, k_tiers=(4, 16, 64), tier_caps=(1, 1, 1),
+                 impl="ref")
+    assert int(out.overflow) > 0
+
+
+def test_render_views_explicit_undersized_caps_warn():
+    """Explicit caps are the user's contract: never altered, but dropping
+    tiles must be LOUD (RuntimeWarning), not silent background."""
+    g, cams, grid = scene()
+    with pytest.warns(RuntimeWarning, match="overflowed"):
+        render_views(g, cams, grid, K=64, impl="ref", k_tiers=(4, 16, 64),
+                     tier_caps=(1, 1, 1))
+
+
+def test_render_views_auto_caps_grow_on_later_chunks():
+    """Auto caps are sized from the FIRST chunk; a later chunk with much
+    higher occupancy must trigger the overflow-driven cap growth and still
+    come back exact (not silently cropped to the first chunk's caps)."""
+    g, _, grid = scene()
+    far = orbital_rig(1, (0.5, 0.5, 0.5), 4.0, width=48, height=48)
+    near = orbital_rig(1, (0.5, 0.5, 0.5), 1.2, width=48, height=48)
+    cams = far._replace(   # width/height are scalar (shared) fields
+        view=jnp.concatenate([far.view, near.view]),
+        fx=jnp.concatenate([far.fx, near.fx]),
+        fy=jnp.concatenate([far.fy, near.fy]))
+    kt = (4, 16, 64)
+    r_tier, c_tier = render_views(g, cams, grid, K=64, impl="ref",
+                                  k_tiers=kt, batch=1)
+    r_dense, c_dense = render_views(g, cams, grid, K=64, impl="ref",
+                                    batch=1)
+    np.testing.assert_allclose(r_tier, r_dense, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(c_tier, c_dense, rtol=1e-6, atol=1e-6)

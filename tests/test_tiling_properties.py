@@ -99,15 +99,73 @@ def test_coarse_cull_matches_dense(seed, n, res, sb):
     grid = TileGrid(res, res, 8, 16)
     splats = random_splats(seed, n, res, res, rmax=6.0)
     i0, s0 = assign_tiles(splats, grid, K=24)
-    # full budget: provably no overflow -> exact
-    i1, s1 = assign_tiles(splats, grid, K=24, coarse=sb, coarse_budget=n)
+    # full budget: provably no overflow -> exact (and the counter agrees)
+    i1, s1, ov1 = assign_tiles(splats, grid, K=24, coarse=sb,
+                               coarse_budget=n, return_overflow=True)
+    assert int(ov1) == 0
     np.testing.assert_array_equal(np.asarray(s0), np.asarray(s1))
     live = np.asarray(s0) > NEG / 2
     np.testing.assert_array_equal(np.asarray(i0)[live], np.asarray(i1)[live])
     # auto budget on these scenes also covers the occupancy
-    i2, s2 = assign_tiles(splats, grid, K=24, coarse=sb)
+    i2, s2, ov2 = assign_tiles(splats, grid, K=24, coarse=sb,
+                               return_overflow=True)
+    assert int(ov2) == 0
     np.testing.assert_array_equal(np.asarray(s0), np.asarray(s2))
     np.testing.assert_array_equal(np.asarray(i0)[live], np.asarray(i2)[live])
+
+
+def test_coarse_overflow_counter_fires_on_saturated_budget():
+    """A starved budget must be SURFACED, not silently wrong: the counter
+    reports exactly the dropped (superblock, splat) candidate pairs."""
+    grid = TileGrid(64, 64, 8, 16)
+    splats = random_splats(8, 400, 64, 64, rmax=6.0, invalid_frac=0.0)
+    from repro.core.tiling import coarse_candidates
+    cand_full, ov_full = coarse_candidates(
+        splats.mean2d, splats.radius, splats.valid, grid, sb=2, budget=400)
+    assert int(ov_full) == 0
+    occ = (np.asarray(cand_full) < 400).sum(axis=1)       # true occupancy
+    budget = max(int(occ.max()) // 2, 1)
+    _, ov = coarse_candidates(
+        splats.mean2d, splats.radius, splats.valid, grid, sb=2,
+        budget=budget)
+    want = np.maximum(occ - budget, 0).sum()
+    assert int(ov) == want and want > 0
+    # the dense path never drops -> overflow is identically 0
+    _, _, ov_dense = assign_tiles(splats, grid, K=24, return_overflow=True)
+    assert int(ov_dense) == 0
+
+
+def test_topk_tiebreak_is_merge_order_invariant():
+    """Duplicate depths at the K boundary: the secondary splat-index key
+    must make assignment independent of the block/merge order (the ROADMAP
+    tie-break divergence item).  With many equal-depth splats per tile and
+    K smaller than the overlap, different block sizes change the merge
+    order — idx must not change."""
+    res = 32
+    grid = TileGrid(res, res, 8, 16)
+    r = np.random.default_rng(42)
+    n = 300
+    depths = np.repeat(r.uniform(0.5, 5.0, n // 4), 4)[:n]  # 4-way ties
+    splats = random_splats(9, n, res, res, rmax=12.0, invalid_frac=0.0)
+    splats = splats._replace(depth=jnp.asarray(depths, jnp.float32))
+    idx_ref, score_ref = assign_tiles(splats, grid, K=8, block=n)
+    for block in (7, 32, 128):
+        idx_b, score_b = assign_tiles(splats, grid, K=8, block=block)
+        np.testing.assert_array_equal(np.asarray(idx_ref), np.asarray(idx_b))
+        np.testing.assert_array_equal(np.asarray(score_ref),
+                                      np.asarray(score_b))
+    # and the coarse path agrees bit-for-bit on live slots too
+    idx_c, score_c = assign_tiles(splats, grid, K=8, coarse=2,
+                                  coarse_budget=n)
+    live = np.asarray(score_ref) > NEG / 2
+    np.testing.assert_array_equal(np.asarray(score_ref), np.asarray(score_c))
+    np.testing.assert_array_equal(np.asarray(idx_ref)[live],
+                                  np.asarray(idx_c)[live])
+    # within equal scores the indices come out ascending (front-to-back
+    # order with a deterministic tie order)
+    sc, ix = np.asarray(score_ref), np.asarray(idx_ref)
+    same = (np.diff(sc, axis=1) == 0) & (sc[:, :-1] > NEG / 2)
+    assert (np.diff(ix, axis=1)[same] > 0).all()
 
 
 def test_coarse_cull_under_vmap():
