@@ -31,15 +31,24 @@ def main():
     ap.add_argument("--views", type=int, default=16)
     ap.add_argument("--ablation", action="store_true",
                     help="also run without ghosts/masks (Fig. 2b)")
+    ap.add_argument("--dense-k", type=int, default=None,
+                    help="escape hatch: train with DENSE fixed-K "
+                         "rasterization at this depth instead of the "
+                         "default occupancy-tiered schedule")
     ap.add_argument("--ckpt-dir", default="checkpoints/distributed_iso")
     args = ap.parse_args()
 
+    train_cfg = GSTrainCfg(dense_k=args.dense_k)
     common = dict(dataset=args.dataset, n_parts=args.parts,
                   resolution=args.resolution, steps=args.steps,
-                  n_views=args.views, train=GSTrainCfg())
+                  n_views=args.views, train=train_cfg)
 
+    kt = train_cfg.resolved_k_tiers()
+    raster = (f"tiered k_tiers={kt} (TierSchedule re-probes caps per "
+              f"densify)" if kt else f"dense K={train_cfg.assign_K}")
     print(f"[pipeline] {args.dataset}: {args.parts} partitions, "
-          f"{args.steps} steps @ {args.resolution}^2, {args.views} views")
+          f"{args.steps} steps @ {args.resolution}^2, {args.views} views, "
+          f"rasterizer: {raster}")
     ours = run_pipeline(PipelineCfg(use_ghost=True, use_mask=True, **common))
     print(f"[pipeline] ghosts+masks:  PSNR {ours.psnr:6.2f}  "
           f"SSIM {ours.ssim:.4f}  grad_sim {ours.grad_sim:.4f}  "

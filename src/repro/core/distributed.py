@@ -1,18 +1,34 @@
 """Distributed 3D-GS training step (paper §II + Grendel [6]), shard_map-native.
 
-Mesh mapping (DESIGN.md §4):
+Mesh mapping (docs/distributed-training.md has the full guide):
 
   pod    one spatial partition per pod — *independent* training, the paper's
          node-level parallelism.  Every tensor carries a leading partition
          dim P sharded over "pod"; the only cross-pod traffic is the 4-byte
-         scalar-loss psum (metrics), verified in the dry-run HLO.
-  data   gaussian-parallel: the partition's gaussians are sharded over
-         "data"; projection is local; the *projected splat table* (small,
-         Grendel's key insight) is all-gathered over "data" — raw gaussians
-         and optimizer state never move.
+         scalar-loss psum (metrics), verified in the dry-run HLO.  Optional.
+  part   gaussian-parallel: the partition's gaussians are sharded over
+         "part"; projection is local; the *projected splat table* (small,
+         Grendel's key insight) is all-gathered over "part" — raw gaussians
+         and optimizer state never move.  "data" is accepted as a legacy
+         alias for this axis.  Required.
   model  pixel-parallel: image tiles are sharded over "model"; each device
          builds top-K lists, rasterizes and evaluates the loss only for its
-         own tile strip.
+         own tile strip.  Optional (absent -> every device rasterizes the
+         full tile grid for its views).
+  view   view-parallel: the view minibatch is sharded over "view" — each
+         device projects, gathers and rasterizes only its V/n_view views,
+         so the per-device table-gather payload and rasterization work stop
+         scaling with the global view batch.  The only collective this axis
+         adds is a scalar per-step loss pmean (the per-view losses are
+         already averaged with equal weight); gaussians/optimizer state are
+         replicated along it, and their gradients are summed across the
+         axis by the shard_map transpose automatically.  Optional (absent
+         == the degenerate n_view=1 case: views replicated, the pre-2-D
+         behaviour).
+
+Canonical production meshes: ``("part", "view")`` for the 2-D trainer and
+``("pod", "part", "model")`` for the legacy pixel-sharded layout; any subset
+containing a "part"/"data" axis works (see ``_axes``).
 
 Implemented with ``shard_map`` + explicit ``lax.all_gather`` so the
 collective schedule is *by construction* (an earlier pjit-constraint version
@@ -20,7 +36,7 @@ let the SPMD partitioner sink the table all-gather into the tile-assignment
 scan and replicate the partition axis across pods through the top-k sort —
 500x the wire bytes; see EXPERIMENTS.md §Perf).  The backward pass of
 ``all_gather`` is ``psum_scatter``, which lands per-gaussian grads back on
-their "data" shards automatically.
+their "part" shards automatically.
 """
 
 from __future__ import annotations
@@ -49,22 +65,64 @@ from repro.kernels.ops import rasterize_tiles_tiered
 NEG = -1e30
 
 
-def _axes(mesh):
+class MeshAxes(NamedTuple):
+    """Resolved mesh-axis names; None = axis absent from this mesh."""
+    pod: Optional[str]
+    data: str            # gaussian axis: "part" (canonical) or "data" alias
+    model: Optional[str]
+    view: Optional[str]
+
+
+def _axes(mesh) -> MeshAxes:
+    """Map a mesh's axis names onto the four roles above.
+
+    The gaussian axis is mandatory and is named "part" (canonical) or
+    "data" (legacy alias); "pod", "model" and "view" are optional.  Any
+    other axis name is an error — better loud than silently replicated.
+    """
     names = mesh.axis_names
-    pod = "pod" if "pod" in names else None
-    return pod, "data", "model"
+    data = "part" if "part" in names else ("data" if "data" in names else None)
+    if data is None:
+        raise ValueError(
+            f"mesh must carry a gaussian axis named 'part' (or legacy "
+            f"'data'); got axes {names}")
+    ax = MeshAxes(pod="pod" if "pod" in names else None, data=data,
+                  model="model" if "model" in names else None,
+                  view="view" if "view" in names else None)
+    known = {a for a in ax if a is not None}
+    extra = [n for n in names if n not in known]
+    if extra:
+        raise ValueError(f"unknown mesh axes {extra}; expected a subset of "
+                         f"('pod', 'part'|'data', 'model', 'view')")
+    return ax
+
+
+def _tile_axes(ax: MeshAxes):
+    """PartitionSpec entry for the flat (P*T,) tile dim: sharded over the
+    present subset of (pod, model), replicated when neither exists."""
+    present = tuple(a for a in (ax.pod, ax.model) if a)
+    return present if present else None
 
 
 def gs_shardings(mesh, *, views: Optional[int] = None):
     """(gaussians, opt, batch) NamedSharding trees for the (P, N) layout.
 
-    views=V: gt/mask tile batches carry a leading replicated view axis
-    (V, P*T, ...) — view batches ride along with the gaussian shards; no
-    extra collective is introduced (the view axis folds into the partition
-    axis inside the shard_map body)."""
-    pod, data, model = _axes(mesh)
-    tile0 = (pod, model) if pod else model
-    vlead = (None,) if views else ()
+    Mesh-axis contract (see module docstring / docs/distributed-training.md):
+    gaussian + optimizer leaves are sharded (pod, part) on their leading
+    (P, N) dims and REPLICATED along "model"/"view"; gt/mask tile batches
+    are sharded over (pod, model) on the flat (P*T,) tile dim.
+
+    views=V: gt/mask (and cam.view/fx/fy) gain a leading view axis.  On a
+    mesh WITH a "view" axis that leading dim is sharded over it — each
+    device holds only V/n_view views and the table all-gather stays on
+    "part" with a per-device payload of V/n_view tables.  Without a "view"
+    axis the leading dim is replicated (the degenerate n_view=1 case): view
+    batches ride along with the gaussian shards and the view axis folds
+    into the partition axis inside the shard_map body."""
+    ax = _axes(mesh)
+    pod, data = ax.pod, ax.data
+    tile0 = _tile_axes(ax)
+    vlead = (ax.view,) if views else ()
     g = Gaussians(
         means=P(pod, data, None),
         log_scales=P(pod, data, None),
@@ -84,10 +142,12 @@ def gs_shardings(mesh, *, views: Optional[int] = None):
         grad_accum=ns(P(pod, data)),
         grad_count=ns(P(pod, data)),
     )
+    cam_v = P(*vlead, None, None) if views else P()
+    cam_f = P(*vlead) if views else P()
     batch = {
         "gt_tiles": ns(P(*vlead, tile0, None, None, None)),
         "mask_tiles": ns(P(*vlead, tile0, None, None)),
-        "cam": Camera(view=ns(P()), fx=ns(P()), fy=ns(P()),
+        "cam": Camera(view=ns(cam_v), fx=ns(cam_f), fy=ns(cam_f),
                       width=ns(P()), height=ns(P())),
     }
     return g, opt, batch
@@ -199,15 +259,21 @@ def make_gs_forward(mesh, grid: TileGrid, *, K: int, impl: str = "auto",
     single-device path.
 
     views=V enables the view-batched step: cam carries (V, 4, 4) view
-    matrices (replicated), gt/mask gain a leading replicated V axis, and
-    the loss is the MEAN OF PER-VIEW losses (each view's masked pixel
-    normalization stays its own — the same equal-view weighting as
-    train.py's minibatch step).  Inside the shard body the V axis is folded
-    into the partition axis right after the table all-gather, so tile
-    assignment and the kernel launch (one (V*Pl*Tl,) grid) are shared
-    verbatim with the single-view path and the collective schedule is
-    unchanged (one table gather per step, V times the payload; the loss
-    psum carries (V,) vectors instead of scalars).
+    matrices, gt/mask gain a leading V axis, and the loss is the MEAN OF
+    PER-VIEW losses (each view's masked pixel normalization stays its own —
+    the same equal-view weighting as train.py's minibatch step).  On a mesh
+    WITHOUT a "view" axis that leading axis is replicated; on a 2-D
+    ``("part", "view")``-style mesh it is SHARDED over "view": each device
+    projects/gathers/rasterizes only its V/n_view views, the table
+    all-gather stays on "part" only (per-device payload V/n_view tables,
+    not V), and the collective schedule grows exactly one cheap "view"-axis
+    loss pmean rather than a second gather.  Inside the shard body the
+    local view axis is folded into the partition axis right after the table
+    all-gather, so tile assignment and the kernel launch (one
+    (Vl*Pl*Tl,) grid) are shared verbatim with the single-view path; the
+    loss psum carries (Vl,) vectors instead of scalars.  V must divide by
+    the "view" axis size; the view=1 (or axis-absent) case degenerates to
+    the replicated pre-2-D behaviour bit-for-bit.
 
     Beyond-paper options (EXPERIMENTS.md §Perf, GS hillclimb):
 
@@ -223,30 +289,46 @@ def make_gs_forward(mesh, grid: TileGrid, *, K: int, impl: str = "auto",
         must exceed the true strip occupancy or overflow splats are dropped
         (set >= 3x the mean occupancy; exactness tested at budget 1.0).
     """
-    pod, data, model = _axes(mesh)
+    ax = _axes(mesh)
+    pod, data, model, view = ax
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
-    n_model = sizes[model]
+    n_model = sizes.get(model, 1)
+    n_view = sizes.get(view, 1)
+    if views is None and n_view > 1:
+        raise ValueError(
+            f"mesh has a 'view' axis of size {n_view} but views=None; pass "
+            f"views=V (a multiple of {n_view}) to shard the view minibatch")
+    vloc = None
+    if views is not None:
+        if views % n_view:
+            raise ValueError(f"views={views} must divide by the 'view' axis "
+                             f"size {n_view}")
+        vloc = views // n_view           # per-device view count
     T = grid.n_tiles
     assert T % n_model == 0, (T, n_model)
     Tl = T // n_model
-    tile0 = (pod, model) if pod else model
+    tile0 = _tile_axes(ax)
     if k_tiers is not None:
         k_tiers = tuple(int(k) for k in k_tiers)
         K = k_tiers[-1]                  # assignment depth = largest tier
     if assign_block is None:
         # auto block: the view fold multiplies the assign sweep's leading
-        # axis by V, so shrink the gaussian block to keep per-device peak
-        # temporaries roughly view-count independent (mirrors render_batch's
-        # auto block).  An explicit assign_block is honored verbatim.
-        assign_block = max(1024, 4096 // views) if views else 4096
+        # axis by the LOCAL view count, so shrink the gaussian block to keep
+        # per-device peak temporaries roughly view-count independent
+        # (mirrors render_batch's auto block).  An explicit assign_block is
+        # honored verbatim.
+        assign_block = max(1024, 4096 // vloc) if views else 4096
 
     g_spec = Gaussians(
         means=P(pod, data, None), log_scales=P(pod, data, None),
         quats=P(pod, data, None), opacity_logit=P(pod, data),
         colors=P(pod, data, None), active=P(pod, data), owner=P(pod, data),
     )
-    cam_spec = Camera(view=P(), fx=P(), fy=P(), width=P(), height=P())
-    vlead = (None,) if views else ()
+    vlead = (view,) if views else ()
+    cam_spec = Camera(view=P(*vlead, None, None) if views else P(),
+                      fx=P(*vlead) if views else P(),
+                      fy=P(*vlead) if views else P(),
+                      width=P(), height=P())
     in_specs = (g_spec, cam_spec, P(*vlead, tile0, None, None, None),
                 P(*vlead, tile0, None, None))
     tiles_spec = P(*vlead, tile0, None, None, None)
@@ -262,16 +344,18 @@ def make_gs_forward(mesh, grid: TileGrid, *, K: int, impl: str = "auto",
     nax = 2 if views else 1
 
     def shard_fn(g: Gaussians, cam: Camera, gt, mask):
-        # ---- stage 1 (gaussian-parallel over "data"): project locally
+        # ---- stage 1 (gaussian-parallel over "part"): project locally.
+        # With a "view" mesh axis, cam/gt/mask arrive already view-sharded:
+        # this body only ever sees its Vl = V/n_view local views.
         if views:
-            # (V, Pl, Nl, ...): per-view projection of the same local shard
+            # (Vl, Pl, Nl, ...): per-view projection of the same local shard
             splats = jax.vmap(lambda c: project(g, c),
                               in_axes=(CAM_VAXES,))(cam)
         else:
             splats = project(g, cam)                # (Pl, Nl, ...)
 
         # ---- Grendel handoff: all-gather the SMALL projected table over
-        # "data".  bwd(all_gather) = psum_scatter -> grads return sharded.
+        # "part".  bwd(all_gather) = psum_scatter -> grads return sharded.
         if gather_mode == "split":
             radius_v = jnp.where(splats.valid, splats.radius, 0.0)
             geo_l = jnp.stack(
@@ -305,8 +389,9 @@ def make_gs_forward(mesh, grid: TileGrid, *, K: int, impl: str = "auto",
             valid_g = aux[..., 2] > 0.5
 
         if views:
-            # fold the view axis into the partition axis: (V, Pl, ...) ->
-            # (V*Pl, ...) — stage 2 and the kernel launch are V-agnostic
+            # fold the LOCAL view axis into the partition axis:
+            # (Vl, Pl, ...) -> (Vl*Pl, ...) — stage 2 and the kernel launch
+            # are view-count agnostic
             fold = lambda x: x.reshape((-1,) + x.shape[2:])
             mean_g, radius_g, depth_g = (fold(mean_g), fold(radius_g),
                                          fold(depth_g))
@@ -316,10 +401,14 @@ def make_gs_forward(mesh, grid: TileGrid, *, K: int, impl: str = "auto",
             else:
                 feat = fold(feat)
 
-        # ---- stage 2 (pixel-parallel over "model"): my tile strip only
-        mi = lax.axis_index(model)
-        lo = lax.dynamic_slice_in_dim(lo_full, mi * Tl, Tl, 0)
-        hi = lax.dynamic_slice_in_dim(hi_full, mi * Tl, Tl, 0)
+        # ---- stage 2 (pixel-parallel over "model"): my tile strip only;
+        # without a "model" axis the "strip" is the full tile grid
+        if model is not None:
+            mi = lax.axis_index(model)
+            lo = lax.dynamic_slice_in_dim(lo_full, mi * Tl, Tl, 0)
+            hi = lax.dynamic_slice_in_dim(hi_full, mi * Tl, Tl, 0)
+        else:
+            lo, hi = lo_full, hi_full
 
         N = mean_g.shape[1]
         if strip_budget < 1.0:
@@ -401,19 +490,26 @@ def make_gs_forward(mesh, grid: TileGrid, *, K: int, impl: str = "auto",
                                     tile_w=grid.tile_w, impl=impl)
             overflow_l = jnp.zeros((), jnp.int32)   # dense path never drops
 
-        # ---- masked loss partials -> psum (scalar-only cross-pod traffic)
-        axes = (pod, data, model) if pod else (data, model)
+        # ---- masked loss partials -> psum (scalar-only cross-pod traffic).
+        # The partial psum runs over the present (pod, part, model) axes —
+        # it must NOT cross "view" shards, whose partials belong to
+        # different views; the view axis contributes one scalar pmean at
+        # the very end instead.
+        axes = tuple(a for a in (pod, data, model) if a)
         if views:
-            # per-view partials ((V,) vectors through the psum), then the
+            # per-view partials ((Vl,) vectors through the psum), then the
             # mean of per-view losses — the same equal-view weighting as
             # train.py's minibatch step, regardless of how many masked
-            # pixels each view has
-            pred_v = tiles[:, :3].reshape((views, -1, 3) + tiles.shape[2:])
+            # pixels each view has.  mean over local views + pmean over the
+            # "view" axis == the global V-view mean (equal local counts).
+            pred_v = tiles[:, :3].reshape((vloc, -1, 3) + tiles.shape[2:])
             l1n, l1d, sn, sd = jax.vmap(_loss_partials)(pred_v, gt, mask)
             l1n, l1d, sn, sd = (lax.psum(x, axes) for x in (l1n, l1d, sn, sd))
             loss = ((1 - lambda_dssim) * l1n / jnp.maximum(l1d, 1.0)
                     + lambda_dssim
                     * (1.0 - sn / jnp.maximum(sd, 1.0)) / 2.0).mean()
+            if view is not None:
+                loss = lax.pmean(loss, view)
         else:
             l1n, l1d, sn, sd = _loss_partials(tiles[:, :3], gt, mask)
             l1n, l1d, sn, sd = (lax.psum(x, axes) for x in (l1n, l1d, sn, sd))
@@ -423,13 +519,15 @@ def make_gs_forward(mesh, grid: TileGrid, *, K: int, impl: str = "auto",
             outs = (loss,)
             if return_tiles:
                 if views:
-                    tiles = tiles.reshape((views, -1) + tiles.shape[1:])
+                    tiles = tiles.reshape((vloc, -1) + tiles.shape[1:])
                 outs += (tiles,)
             if return_overflow:
-                # each (pod, model) strip is computed redundantly along the
-                # "data" axis, so sum over the strip-distinct axes only
-                ov_axes = (pod, model) if pod else (model,)
-                outs += (lax.psum(overflow_l, ov_axes),)
+                # each (pod, model, view) strip/view-slice is computed
+                # redundantly along the "part" axis only, so sum over the
+                # strip-distinct axes
+                ov_axes = tuple(a for a in (pod, model, view) if a)
+                ov = lax.psum(overflow_l, ov_axes) if ov_axes else overflow_l
+                outs += (ov,)
             return outs
         return loss
 
@@ -442,10 +540,14 @@ def make_gs_forward(mesh, grid: TileGrid, *, K: int, impl: str = "auto",
 # ---------------------------------------------------------------------------
 
 
+#: sentinel: "no explicit k_tiers argument — resolve from the train cfg"
+_FROM_CFG = object()
+
+
 def make_gs_train_step(mesh, cfg: GSTrainCfg, grid: TileGrid, extent: float,
                        *, impl: str = "auto", views: Optional[int] = None,
                        assign_block: Optional[int] = None,
-                       k_tiers: Optional[tuple] = None,
+                       k_tiers=_FROM_CFG,
                        tier_caps: Optional[tuple] = None):
     """jit'd (gaussians, opt, batch) -> (gaussians, opt, loss).
 
@@ -455,15 +557,25 @@ def make_gs_train_step(mesh, cfg: GSTrainCfg, grid: TileGrid, extent: float,
 
     views=V runs the minibatch-of-views step: batch["gt_tiles"] is
     (V, P*T, 3, th, tw), batch["cam"] carries (V, 4, 4) views, and the loss
-    (hence the gradient) averages over the view batch.
+    (hence the gradient) averages over the view batch.  On a mesh with a
+    "view" axis the batch's leading V dim is sharded over it (see
+    make_gs_forward / gs_shardings).
 
-    k_tiers/tier_caps switch the forward's rasterization to occupancy
-    tiers (see make_gs_forward); cfg.K is then only the dense fallback's
-    assignment depth.
+    Rasterization defaults to OCCUPANCY TIERS: ``k_tiers`` left unset pulls
+    ``cfg.resolved_k_tiers()`` (the trainer-wide default schedule; set
+    ``cfg.dense_k=`` to escape back to dense-K rasterization).  An explicit
+    ``k_tiers=None`` forces dense, an explicit tuple pins the ladder.
+    ``tier_caps=None`` uses the always-exact strip-sized caps — correct but
+    unmeasured; production drives this factory through a
+    ``core.tiling.TierSchedule`` (probe -> train -> densify -> re-probe)
+    and passes ``(schedule.k_tiers, schedule.tier_caps)``.  cfg.K (or
+    cfg.dense_k) is the dense path's assignment depth.
     """
+    if k_tiers is _FROM_CFG:
+        k_tiers = cfg.resolved_k_tiers()
     lrs = group_lrs(cfg, extent)
     g_sh, opt_sh, b_sh = gs_shardings(mesh, views=views)
-    fwd = make_gs_forward(mesh, grid, K=cfg.K, impl=impl,
+    fwd = make_gs_forward(mesh, grid, K=cfg.assign_K, impl=impl,
                           lambda_dssim=cfg.lambda_dssim,
                           gather_mode=cfg.gather_mode,
                           strip_budget=cfg.strip_budget, views=views,
@@ -509,7 +621,13 @@ def make_gs_train_step(mesh, cfg: GSTrainCfg, grid: TileGrid, extent: float,
 
 
 def gs_state_specs(n_parts: int, n_gaussians: int):
-    """Gaussian + opt state ShapeDtypeStructs for the (P, N) batched layout."""
+    """Gaussian + opt state ShapeDtypeStructs for the (P, N) batched layout.
+
+    Shapes are GLOBAL (pre-sharding): pair with ``gs_shardings`` to get the
+    device layout — leading P sharded over "pod", N over "part"/"data",
+    replicated along "model" and "view" (every device needs the full local
+    gaussian shard to project its own views/strips).
+    """
     Pn, N = n_parts, n_gaussians
     f32 = jnp.float32
     g = Gaussians(
@@ -534,6 +652,14 @@ def gs_state_specs(n_parts: int, n_gaussians: int):
 
 def gs_batch_specs(n_parts: int, grid: TileGrid,
                    views: Optional[int] = None):
+    """Batch ShapeDtypeStructs for the flat-tile (P*T, ...) layout.
+
+    Shapes are GLOBAL: with ``views=V`` the leading V axis is what a mesh's
+    "view" axis shards (V must divide it) and the flat (P*T,) tile axis is
+    what ("pod", "model") shard; without views the V axis is absent.
+    cam.view is (V, 4, 4) ("view"-sharded alongside gt/mask), width/height
+    stay replicated scalars.
+    """
     T = grid.n_tiles
     f32 = jnp.float32
     vlead = (views,) if views else ()

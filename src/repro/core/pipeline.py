@@ -28,8 +28,9 @@ from repro.core.cameras import Camera, orbital_rig, select
 from repro.core.gaussians import Gaussians, from_points
 from repro.core.masking import background_mask, dilate_mask
 from repro.core.partition import PartitionData, partition_points
-from repro.core.render import render_batch, view_occupancy
-from repro.core.tiling import TileGrid, auto_tier_caps
+from repro.core.render import (occupancy_probe_jit, render_batch,
+                              view_occupancy)
+from repro.core.tiling import TierSchedule, TileGrid, auto_tier_caps
 from repro.core.train import GSTrainCfg, fit_partition
 from repro.data.isosurface import point_cloud_for
 
@@ -99,18 +100,12 @@ def _render_batch_jit(grid: TileGrid, K: int, impl: str, bg: float,
                                                tier_caps=tier_caps))
 
 
-@functools.lru_cache(maxsize=64)
-def _occupancy_jit(grid: TileGrid, K: int, coarse: Optional[int]):
-    """Cached jitted per-view occupancy prepass (tier-cap auto-sizing)."""
-    return jax.jit(lambda gg, cc: view_occupancy(gg, cc, grid, K=K,
-                                                 coarse=coarse))
-
-
 def render_views(g: Gaussians, cams: Camera, grid: TileGrid, *, K: int,
                  impl: str = "auto", bg: float = 1.0, batch: int = 8,
                  coarse: Optional[int] = None,
                  k_tiers: Optional[tuple] = None,
-                 tier_caps: Optional[tuple] = None):
+                 tier_caps: Optional[tuple] = None,
+                 schedule: Optional[TierSchedule] = None):
     """-> (V, H, W, 3) rgb + (V, H, W) coverage.
 
     View-batched: renders ``batch`` views per dispatch through
@@ -130,16 +125,34 @@ def render_views(g: Gaussians, cams: Camera, grid: TileGrid, *, K: int,
     Explicit ``tier_caps`` are never altered; if they drop tiles, a
     RuntimeWarning reports the overflow instead of silently returning
     background where geometry was.
+
+    ``schedule=`` plugs a ``core.tiling.TierSchedule`` into the same loop
+    (mutually exclusive with k_tiers/tier_caps): its active
+    (k_tiers, tier_caps) drive the render — probed here on the first chunk
+    when it has no caps yet — and overflow growth is written BACK via
+    ``schedule.note_overflow``, so a caller alternating training and
+    rendering keeps one consistent, telemetry-updated schedule.
     """
+    if schedule is not None:
+        if k_tiers is not None or tier_caps is not None:
+            raise ValueError("pass either schedule= or explicit "
+                             "k_tiers/tier_caps, not both")
+        if schedule.tier_caps is None:
+            vi0 = jnp.clip(jnp.arange(max(1, min(batch, cams.view.shape[0]))),
+                           0, cams.view.shape[0] - 1)
+            schedule.probe(occupancy_probe_jit(grid, schedule.kmax, coarse)(
+                g, select(cams, vi0)))
+        k_tiers, tier_caps = schedule.k_tiers, schedule.tier_caps
     V = cams.view.shape[0]
     batch = max(1, min(batch, V))
-    auto_caps = k_tiers is not None and tier_caps is None
+    auto_caps = k_tiers is not None and (tier_caps is None
+                                         or schedule is not None)
     if k_tiers is not None:
         k_tiers = tuple(int(k) for k in k_tiers)
         K = k_tiers[-1]      # dead in tiered mode: pin the jit cache key
         if tier_caps is None:
             vi0 = jnp.clip(jnp.arange(batch), 0, V - 1)
-            occ0 = _occupancy_jit(grid, k_tiers[-1], coarse)(
+            occ0 = occupancy_probe_jit(grid, k_tiers[-1], coarse)(
                 g, select(cams, vi0))
             tier_caps = auto_tier_caps(occ0, k_tiers, slack=1.25)
         tier_caps = tuple(int(c) for c in tier_caps)
@@ -155,8 +168,13 @@ def render_views(g: Gaussians, cams: Camera, grid: TileGrid, *, K: int,
                 # this chunk outgrew the first-chunk caps: double and retry
                 # (terminates: caps are clamped at the tile count, where
                 # binning provably cannot overflow)
-                tier_caps = tuple(min(grid.n_tiles, max(8, 2 * c))
-                                  for c in tier_caps)
+                if schedule is not None:
+                    if not schedule.note_overflow(ov, grid.n_tiles):
+                        break    # caps already at the clamp: warn below
+                    tier_caps = schedule.tier_caps
+                else:
+                    tier_caps = tuple(min(grid.n_tiles, max(8, 2 * c))
+                                      for c in tier_caps)
                 rfn = _render_batch_jit(grid, K, impl, bg, coarse, k_tiers,
                                         tier_caps)
                 out = rfn(g, select(cams, vi))

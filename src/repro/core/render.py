@@ -20,6 +20,7 @@ Two rasterizer dispatch modes:
 
 from __future__ import annotations
 
+import functools
 from functools import partial
 from typing import NamedTuple, Optional, Sequence, Tuple
 
@@ -284,6 +285,16 @@ def render_batch(g: Gaussians, cams: Camera, grid: TileGrid, *, K: int = 64,
                                         impl=impl)
     img = jax.vmap(lambda t: untile_image(t, grid))(tiles)
     return _composite(img, bg)._replace(overflow=plan.overflow)
+
+
+@functools.lru_cache(maxsize=64)
+def occupancy_probe_jit(grid: TileGrid, K: int, coarse: Optional[int] = None):
+    """Cached jitted ``view_occupancy`` closure — the standard occupancy
+    probe for tier-cap sizing (``TierSchedule.probe`` input).  Shared by
+    pipeline.render_views and train.fit_partition so the same (grid, K,
+    coarse) probe compiles once."""
+    return jax.jit(lambda gg, cc: view_occupancy(gg, cc, grid, K=K,
+                                                 coarse=coarse))
 
 
 def view_occupancy(g: Gaussians, cams: Camera, grid: TileGrid, *, K: int,

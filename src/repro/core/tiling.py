@@ -497,6 +497,119 @@ def auto_tier_caps(occupancy, k_tiers: Sequence[int], *, slack: float = 1.0,
     return tuple(caps)
 
 
+class TierSchedule:
+    """Telemetry-driven (k_tiers, tier_caps) picker for tiered-by-default
+    training.
+
+    The tiered rasterizer needs two STATIC inputs — a K ladder and per-tier
+    tile capacities — but occupancy is a moving target during training
+    (densify adds splats, prune removes them).  TierSchedule closes that
+    loop from the telemetry the pipeline already surfaces
+    (``tile_occupancy`` of an assignment sweep; ``RenderOut.overflow`` /
+    the distributed forward's overflow counter):
+
+      probe(occupancy)   feed CONCRETE per-tile occupancy measured at the
+          ladder's Kmax (``render.view_occupancy`` is the standard probe);
+          caps are re-sized via ``auto_tier_caps``.  Unoccupied upper
+          tiers get cap 0 — a zero-cost launch — which is what keeps the
+          telemetry honest: if occupancy later grows into them, their
+          tiles overflow LOUDLY (note_overflow grows the caps) instead of
+          being silently truncated.  Host-side only — raises under
+          tracing, exactly like auto_tier_caps.  ``trim=True`` opts into
+          additionally trimming the ladder to the occupied prefix (sparse
+          phases stop paying large-K assignment) — but a trimmed Kmax also
+          CAPS the occupancy the training step can measure, so growth past
+          it is invisible between probes; only enable it for runs that
+          re-probe on a schedule (e.g. every densify event), never with a
+          single init-time probe.
+      train              pass ``(schedule.k_tiers, schedule.tier_caps)`` to
+          the step factory; jit caches key on them, so the step recompiles
+          only when the schedule actually changes (caps are rounded so
+          nearby probes hash identically).
+      note_overflow(ov, n_tiles)   a step that reports dropped tiles calls
+          this: caps grow geometrically (clamped at ``n_tiles``, where
+          binning provably cannot drop).  Returns True when caps changed —
+          the signal to rebuild the step.
+      densify / prune    occupancy shifted: probe again.
+
+    The full lifecycle (probe -> train -> densify -> re-probe) is
+    documented in docs/distributed-training.md.  The coarse pre-cull's
+    budget counter (``assign_tiles(return_overflow=True)``) is a separate
+    knob: it guards candidate lists, not tier capacities.
+    """
+
+    def __init__(self, k_tiers: Sequence[int] = (8, 32, 128), *,
+                 slack: float = 1.25, round_to: int = 8,
+                 growth: float = 2.0, trim: bool = False):
+        ladder = tuple(int(k) for k in k_tiers)
+        if not ladder or any(b <= a for a, b in zip(ladder, ladder[1:])):
+            raise ValueError(f"k_tiers must be a non-empty strictly "
+                             f"increasing ladder: {ladder}")
+        self.ladder = ladder             # full ladder (probe depth = max)
+        self.slack = float(slack)
+        self.round_to = int(round_to)
+        self.growth = float(growth)
+        self.trim = bool(trim)           # see class docstring before enabling
+        self.k_tiers: Tuple[int, ...] = ladder   # active tiers
+        self.tier_caps: Optional[Tuple[int, ...]] = None  # None until probe
+
+    @property
+    def kmax(self) -> int:
+        """Assignment depth probes must use (occupancy is a lower bound for
+        tiles that saturate it, so probing shallower would under-cap)."""
+        return self.ladder[-1]
+
+    def probe(self, occupancy):
+        """Re-pick (k_tiers, tier_caps) from concrete (..., T) occupancy.
+
+        Returns the new ``(k_tiers, tier_caps)``.  Call after every
+        densify/prune event — and at init — with occupancy measured at
+        ``self.kmax``.
+        """
+        if isinstance(occupancy, jax.core.Tracer):
+            raise TypeError("TierSchedule.probe needs concrete occupancy "
+                            "(host-side); probe outside jit")
+        occ = np.asarray(occupancy)
+        max_occ = int(occ.max()) if occ.size else 0
+        # default: keep the FULL ladder — unoccupied upper tiers cost
+        # nothing (cap 0 -> no launch) and keep overflow telemetry live.
+        # trim=True: smallest ladder prefix covering max occupancy; a probe
+        # that saturated Kmax keeps the full ladder (true occupancy may be
+        # deeper than we could measure)
+        active = self.ladder
+        if self.trim:
+            for i, k in enumerate(self.ladder):
+                if max_occ <= k and k < self.ladder[-1]:
+                    active = self.ladder[: i + 1]
+                    break
+        self.k_tiers = active
+        self.tier_caps = auto_tier_caps(occ, active, slack=self.slack,
+                                        round_to=self.round_to)
+        return self.k_tiers, self.tier_caps
+
+    def note_overflow(self, overflow, n_tiles: int) -> bool:
+        """React to a step's dropped-tile counter: grow every cap by
+        ``growth`` (clamped at ``n_tiles``, the flat tile count of the
+        binning domain, where overflow is impossible).  Returns True when
+        the caps changed — rebuild the step before the next iteration.
+        No-op (False) when the counter is 0 or no probe has run yet."""
+        ov = int(np.asarray(overflow).sum())
+        if ov <= 0 or self.tier_caps is None:
+            return False
+        grown = tuple(
+            min(int(n_tiles), max(self.round_to,
+                                  int(np.ceil(c * self.growth))))
+            for c in self.tier_caps)
+        if grown == self.tier_caps:
+            return False
+        self.tier_caps = grown
+        return True
+
+    def __repr__(self):
+        return (f"TierSchedule(k_tiers={self.k_tiers}, "
+                f"tier_caps={self.tier_caps}, ladder={self.ladder})")
+
+
 def splat_features(splats: Splats2D):
     """Per-splat kernel features: (N, FEAT_DIM) rows [mx, my, conicA, conicB,
     conicC, r, g, b, alpha, 0-pad]; invalid splats get alpha=0.

@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import NamedTuple, Optional
+from typing import NamedTuple, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -24,12 +24,31 @@ from jax import lax
 from repro.core.cameras import Camera, select
 from repro.core.gaussians import Gaussians
 from repro.core.masking import gs_loss
-from repro.core.render import render_batch
-from repro.core.tiling import TileGrid
+from repro.core.render import occupancy_probe_jit, render_batch
+from repro.core.tiling import TierSchedule, TileGrid
 
 
 @dataclasses.dataclass(frozen=True)
 class GSTrainCfg:
+    """Trainer config.  Mesh-axis / tier-schedule contract:
+
+    The trainer rasterizes with OCCUPANCY TIERS by default: ``k_tiers``
+    resolves to a K ladder (``"auto"`` derives one from ``K``; an explicit
+    tuple pins it; ``None`` — or setting ``dense_k=`` — escapes back to the
+    dense fixed-K rasterizer, exactly the pre-tiered behaviour).  ``K`` /
+    ``dense_k`` is the dense path's per-tile list depth; in tiered mode the
+    assignment depth is the ladder's Kmax and K is ignored.  Tier CAPS are
+    not config: they are telemetry, owned by a ``core.tiling.TierSchedule``
+    that ``fit_partition`` (and the distributed driver) re-probes after
+    every densify/prune; ``tier_slack`` is that schedule's cap headroom.
+
+    On the distributed ("part", "view") mesh (core/distributed.py):
+    gaussians + optimizer state are sharded over "part" and replicated over
+    "view"; the ``view_batch`` view minibatch is sharded over "view"
+    (``view_batch`` must divide by the axis size); ``gather_mode`` /
+    ``strip_budget`` shape the "part"-axis table gather and the
+    "model"-axis strip work respectively.
+    """
     # per-group LRs (3D-GS reference); lr_means is additionally scaled by the
     # scene extent, as in the reference implementation
     lr_means: float = 1.6e-4
@@ -48,6 +67,14 @@ class GSTrainCfg:
     impl: str = "auto"
     view_batch: int = 1         # views per minibatch step (loss = view mean)
     coarse: Optional[int] = None  # superblock pre-cull factor (tiling.py)
+    # rasterization schedule: occupancy-tiered by DEFAULT
+    #   "auto"  ladder derived from K (e.g. K=64 -> (8, 32, 64))
+    #   tuple   explicit ladder, e.g. (16, 64, 256)
+    #   None    dense rasterization at K
+    k_tiers: Union[str, Tuple[int, ...], None] = "auto"
+    dense_k: Optional[int] = None   # escape hatch: dense-K at this depth
+    #                                 (disables tiering entirely)
+    tier_slack: float = 1.25        # TierSchedule cap headroom over probes
     # densification
     densify_grad_thresh: float = 5e-6
     percent_dense: float = 0.01     # split/clone size boundary (x extent)
@@ -58,6 +85,34 @@ class GSTrainCfg:
     # distributed-step options (core/distributed.py; §Perf GS hillclimb)
     gather_mode: str = "f32"        # "f32" (paper baseline) | "split" (bf16)
     strip_budget: float = 1.0       # <1: per-strip candidate prefilter
+
+    def resolved_k_tiers(self) -> Optional[Tuple[int, ...]]:
+        """The active K ladder, or None for dense rasterization.
+
+        ``dense_k`` (the escape hatch) wins over everything; ``"auto"``
+        builds a K-capped ladder so the tiered default never assigns deeper
+        (= never costs more in the worst case) than the dense K it
+        replaces."""
+        if self.dense_k is not None or self.k_tiers is None:
+            return None
+        if self.k_tiers == "auto":
+            ladder = []
+            for k in (self.K // 8, self.K // 2, self.K):
+                k = int(k)
+                if k >= 1 and (not ladder or k > ladder[-1]):
+                    ladder.append(k)
+            return tuple(ladder)
+        return tuple(int(k) for k in self.k_tiers)
+
+    @property
+    def assign_K(self) -> int:
+        """Dense-path assignment depth (``dense_k`` overrides ``K``)."""
+        return self.dense_k if self.dense_k is not None else self.K
+
+    def tier_schedule(self) -> Optional[TierSchedule]:
+        """A fresh TierSchedule for this cfg, or None when training dense."""
+        kt = self.resolved_k_tiers()
+        return None if kt is None else TierSchedule(kt, slack=self.tier_slack)
 
 
 class GSOptState(NamedTuple):
@@ -101,26 +156,55 @@ def _as_view_batch(cam: Camera, gt, mask):
     return cam, gt, mask
 
 
-def make_train_step(cfg: GSTrainCfg, grid: TileGrid, extent: float):
+#: sentinel: "no explicit k_tiers argument — resolve from the train cfg"
+_FROM_CFG = object()
+
+
+def make_train_step(cfg: GSTrainCfg, grid: TileGrid, extent: float, *,
+                    k_tiers=_FROM_CFG, tier_caps: Optional[tuple] = None,
+                    return_overflow: bool = False):
     """Minibatch-of-views train step: cam/gt/mask may carry a leading view
     axis (loss is averaged over the batch); plain single-view inputs still
-    work (treated as V=1)."""
+    work (treated as V=1).
+
+    Rasterization defaults to OCCUPANCY TIERS (``k_tiers`` unset pulls
+    ``cfg.resolved_k_tiers()``; ``cfg.dense_k=`` escapes to dense-K).  An
+    explicit ``k_tiers=None`` forces dense; a tuple pins the ladder.
+    ``tier_caps`` must be static under jit — None falls back to the
+    always-exact (but unmeasured) full-grid caps; ``fit_partition`` passes
+    measured caps from its ``TierSchedule`` instead.  With
+    ``return_overflow=True`` the step returns ``(g, opt, loss, overflow)``
+    where overflow is the tiered dropped-tile counter summed over the view
+    batch (always 0 on the dense path) — the telemetry
+    ``TierSchedule.note_overflow`` consumes."""
     lrs = group_lrs(cfg, extent)
+    if k_tiers is _FROM_CFG:
+        k_tiers = cfg.resolved_k_tiers()
+    if k_tiers is not None:
+        k_tiers = tuple(int(k) for k in k_tiers)
+        if tier_caps is None:
+            # always-exact fallback: every tier can hold the whole grid
+            tier_caps = (grid.n_tiles,) * len(k_tiers)
+        tier_caps = tuple(int(c) for c in tier_caps)
 
     def loss_fn(tr, g: Gaussians, cam: Camera, gt, mask):
         gg = g.with_trainable(tr)
         cam, gt, mask = _as_view_batch(cam, gt, mask)
-        out = render_batch(gg, cam, grid, K=cfg.K, impl=cfg.impl, bg=cfg.bg,
-                           coarse=cfg.coarse)
+        out = render_batch(gg, cam, grid, K=cfg.assign_K, impl=cfg.impl,
+                           bg=cfg.bg, coarse=cfg.coarse,
+                           k_tiers=k_tiers, tier_caps=tier_caps)
         per_view = partial(gs_loss, lambda_dssim=cfg.lambda_dssim)
         if mask is None:
             losses = jax.vmap(lambda p, t: per_view(p, t, None))(out.rgb, gt)
         else:
             losses = jax.vmap(per_view)(out.rgb, gt, mask)
-        return losses.mean()
+        overflow = (jnp.zeros((), jnp.int32) if out.overflow is None
+                    else out.overflow.sum().astype(jnp.int32))
+        return losses.mean(), overflow
 
     def step(g: Gaussians, opt: GSOptState, cam: Camera, gt, mask=None):
-        loss, grads = jax.value_and_grad(loss_fn)(g.trainable(), g, cam, gt, mask)
+        (loss, overflow), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            g.trainable(), g, cam, gt, mask)
         step_i = opt.step + 1
         bc1 = 1.0 - cfg.b1 ** step_i.astype(jnp.float32)
         bc2 = 1.0 - cfg.b2 ** step_i.astype(jnp.float32)
@@ -143,7 +227,8 @@ def make_train_step(cfg: GSTrainCfg, grid: TileGrid, extent: float):
             grad_accum=opt.grad_accum + gnorm,
             grad_count=opt.grad_count + (gnorm > 0),
         )
-        return g.with_trainable(new_tr), new_opt, loss
+        out = (g.with_trainable(new_tr), new_opt, loss)
+        return out + (overflow,) if return_overflow else out
 
     return step
 
@@ -238,33 +323,72 @@ def fit_partition(g: Gaussians, cams: Camera, gts, masks, cfg: GSTrainCfg,
                   *, steps: int, extent: float, key=None,
                   densify_every: int = 0, densify_from: int = 100,
                   log_every: int = 0, grid: Optional[TileGrid] = None,
-                  view_batch: Optional[int] = None):
+                  view_batch: Optional[int] = None,
+                  schedule: Optional[TierSchedule] = None):
     """Train one partition for ``steps`` steps cycling over its camera set.
 
     gts: (V, H, W, 3); masks: (V, H, W) bool or None.  Returns
     (g, opt, losses).  Each step consumes a minibatch of ``view_batch``
     consecutive views (default cfg.view_batch; loss is the view mean)
     rendered through one batched dispatch.
+
+    Tier-schedule lifecycle (tiered-by-default; ``cfg.dense_k=`` opts out):
+    a ``TierSchedule`` (``schedule=`` or a fresh one from the cfg) is
+    PROBED on the first minibatch's occupancy, the step trains with its
+    static (k_tiers, tier_caps), each densify/prune RE-PROBES (occupancy
+    shifted), and any step that reports tiered overflow grows the caps —
+    so every cap change is a bounded, telemetry-driven recompile and
+    dropped tiles never silently persist.
     """
     if grid is None:
         grid = TileGrid(cams.width, cams.height, cfg.tile_h, cfg.tile_w)
     if key is None:
         key = jax.random.PRNGKey(0)
-    step = jax.jit(make_train_step(cfg, grid, extent))
+    sched = schedule if schedule is not None else cfg.tier_schedule()
     densify = jax.jit(partial(densify_and_prune, cfg=cfg, extent=extent))
     opt = init_opt(g)
     n_views = gts.shape[0]
     vb = max(1, min(view_batch or cfg.view_batch, n_views))
+
+    probe_vi = jnp.arange(min(n_views, max(vb, 2))) % n_views
+
+    def reprobe(gg):
+        occ = occupancy_probe_jit(grid, sched.kmax, cfg.coarse)(
+            gg, select(cams, probe_vi))
+        sched.probe(occ)
+
+    step_cache = {}
+
+    def get_step():
+        spec = (sched.k_tiers, sched.tier_caps) if sched else None
+        if spec not in step_cache:
+            step_cache[spec] = jax.jit(make_train_step(
+                cfg, grid, extent,
+                k_tiers=sched.k_tiers if sched else None,
+                tier_caps=sched.tier_caps if sched else None,
+                return_overflow=sched is not None))
+        return step_cache[spec]
+
+    if sched is not None:
+        reprobe(g)
     losses = []
     for i in range(steps):
         vi = (i * vb + jnp.arange(vb)) % n_views
         cam = select(cams, vi)
         mask = None if masks is None else masks[vi]
-        g, opt, loss = step(g, opt, cam, gts[vi], mask)
+        out = get_step()(g, opt, cam, gts[vi], mask)
+        g, opt, loss = out[:3]
         losses.append(float(loss))
+        if sched is not None:
+            # a non-zero counter grows the caps for the NEXT steps (this
+            # step dropped a few tiles — rendered as background in the
+            # loss — a one-step blip, not a persistent silent truncation)
+            sched.note_overflow(out[3], grid.n_tiles)
         if densify_every and i >= densify_from and (i + 1) % densify_every == 0:
             key, sub = jax.random.split(key)
             g, opt = densify(g, opt, sub)
+            if sched is not None:
+                reprobe(g)      # occupancy shifted: re-pick tiers/caps
         if log_every and (i + 1) % log_every == 0:
             print(f"  step {i+1:5d}  loss {losses[-1]:.4f} "
                   f"active {int(g.active.sum())}")

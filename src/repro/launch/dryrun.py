@@ -176,7 +176,11 @@ def lower_gs_cell(cell: str, mesh, *, opt: bool = False):
                          strip_budget=min(1.0, 4.0 / n_model))
     else:
         cfg = GSTrainCfg(K=64, tile_h=8, tile_w=128)
-    step = make_gs_train_step(mesh, cfg, grid, extent=1.0, impl="ref")
+    # k_tiers=None: lower the DENSE step — the analytic flop model and the
+    # recorded meta K below describe dense-K rasterization, and the tiered
+    # dispatch's work depends on runtime occupancy the dry run cannot see
+    step = make_gs_train_step(mesh, cfg, grid, extent=1.0, impl="ref",
+                              k_tiers=None)
     g, opt = gs_state_specs(n_parts, n_per_part)
     batch = gs_batch_specs(n_parts, grid)
     lowered = step.lower(g, opt, batch)

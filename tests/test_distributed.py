@@ -286,3 +286,172 @@ def test_view_batched_distributed_matches_per_view(tmp_path):
     assert "VLOSS-MEAN" in out.stdout
     assert "VOPT-MATCH" in out.stdout
     assert "VSTEP-OK" in out.stdout
+
+
+MESH2D_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import sys
+sys.path.insert(0, r"%(src)s")
+import jax, jax.numpy as jnp
+import numpy as np
+
+from repro.core.cameras import orbital_rig, select
+from repro.core.distributed import (gs_shardings, make_gs_forward,
+                                    make_gs_train_step)
+from repro.core.gaussians import from_points
+from repro.core.masking import tile_l1_dssim_loss
+from repro.core.render import render_tiles
+from repro.core.tiling import TileGrid
+from repro.core.train import GSTrainCfg, GSOptState, group_lrs
+from repro.data.isosurface import point_cloud_for
+
+Pn, N, res, K, V = 2, 256, 32, 16, 2
+grid = TileGrid(res, res, 8, 16)
+T = grid.n_tiles
+pts, cols = point_cloud_for("sphere_shell", 2 * N)
+pts, cols = pts[: 2 * N], cols[: 2 * N]
+cams = orbital_rig(V, (0.5, 0.5, 0.5), 1.6, width=res, height=res)
+cam_b = select(cams, jnp.arange(V))
+g_all = from_points(jnp.asarray(pts), jnp.asarray(cols), opacity=0.8)
+part = lambda i: jax.tree.map(lambda x: x[i * N:(i + 1) * N], g_all)
+g_b = jax.tree.map(lambda *xs: jnp.stack(xs), part(0), part(1))
+
+ref = []
+for v in range(V):
+    per_p = [render_tiles(part(i), select(cams, v), grid, K=K, impl="ref")[0]
+             for i in range(Pn)]
+    ref.append(jnp.concatenate(per_p))
+ref = jnp.stack(ref)                                 # (V, P*T, 4, th, tw)
+gt = jnp.clip(ref[:, :, :3] + 0.05, 0, 1)
+mask = jnp.ones((V, Pn * T, grid.tile_h, grid.tile_w), bool)
+
+mesh2d = jax.make_mesh((2, 2), ("part", "view"))
+mesh1d = jax.make_mesh((2,), ("part",))
+cfg = GSTrainCfg(K=K, lr_colors=5e-2)
+
+# ---- 2-D forward: view-sharded tiles/loss match the per-view reference,
+# tiered on, overflow 0 ----
+fwd = make_gs_forward(mesh2d, grid, K=K, impl="ref", return_tiles=True,
+                      views=V, k_tiers=(4, 8, K), return_overflow=True)
+g_sh, opt_sh, b_sh = gs_shardings(mesh2d, views=V)
+g_dev = jax.device_put(g_b, g_sh)
+loss, tiles, ov = jax.jit(fwd)(g_dev,
+                               jax.device_put(cam_b, b_sh["cam"]),
+                               jax.device_put(gt, b_sh["gt_tiles"]),
+                               jax.device_put(mask, b_sh["mask_tiles"]))
+np.testing.assert_allclose(np.asarray(tiles), np.asarray(ref),
+                           rtol=1e-6, atol=1e-6)
+want = np.mean([float(tile_l1_dssim_loss(ref[v][:, :3], gt[v], mask[v],
+                                         win_size=7)) for v in range(V)])
+np.testing.assert_allclose(float(loss), want, rtol=1e-4, atol=1e-5)
+assert int(ov) == 0, int(ov)
+print("M2D-FWD-MATCH")
+
+# ---- single-device reference STEP: same tile loss + Adam math, by hand ----
+def ref_step(kt):
+    lrs = group_lrs(cfg, 1.0)
+    def loss_fn(tr):
+        g = g_b.with_trainable(tr)
+        ls = []
+        for v in range(V):
+            per_p = [render_tiles(jax.tree.map(lambda x: x[i], g),
+                                  select(cams, v), grid, K=K, impl="ref",
+                                  k_tiers=kt)[0] for i in range(Pn)]
+            t = jnp.concatenate(per_p)
+            ls.append(tile_l1_dssim_loss(t[:, :3], gt[v], mask[v],
+                                         win_size=7))
+        return jnp.stack(ls).mean()
+    tr = {k: getattr(g_b, k) for k in
+          ("means", "log_scales", "quats", "opacity_logit", "colors")}
+    loss, grads = jax.value_and_grad(loss_fn)(tr)
+    out = {}
+    for k in tr:
+        gr = grads[k].astype(jnp.float32)
+        m = (1 - cfg.b1) * gr
+        v_ = (1 - cfg.b2) * gr * gr
+        d = (m / (1 - cfg.b1)) / (jnp.sqrt(v_ / (1 - cfg.b2)) + cfg.eps)
+        out[k] = tr[k] - lrs[k] * d
+    return {k: np.asarray(x) for k, x in out.items()}, float(loss)
+
+def dist_step(mesh, kt):
+    step = make_gs_train_step(mesh, cfg, grid, extent=1.0, impl="ref",
+                              views=V, k_tiers=kt)
+    gsh, osh, bsh = gs_shardings(mesh, views=V)
+    tr = {k: getattr(g_b, k) for k in
+          ("means", "log_scales", "quats", "opacity_logit", "colors")}
+    opt = GSOptState(
+        m=jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32), tr),
+        v=jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32), tr),
+        step=jnp.int32(0),
+        grad_accum=jnp.zeros((Pn, N)), grad_count=jnp.zeros((Pn, N)))
+    batch = {"gt_tiles": jax.device_put(gt, bsh["gt_tiles"]),
+             "mask_tiles": jax.device_put(mask, bsh["mask_tiles"]),
+             "cam": jax.device_put(cam_b, bsh["cam"])}
+    g1, _, l = step(jax.device_put(g_b, gsh), jax.device_put(opt, osh),
+                    batch)
+    return {k: np.asarray(x) for k, x in g1.trainable().items()}, float(l)
+
+# the key invariant: sharding the view axis is an execution strategy, not a
+# model change — 2-D mesh step == 1-D mesh step == single-device step,
+# dense AND tiered
+for kt in (None, (4, 8, K)):
+    r, rl = ref_step(kt)
+    p1, l1 = dist_step(mesh1d, kt)
+    p2, l2 = dist_step(mesh2d, kt)
+    for k in r:
+        np.testing.assert_allclose(p1[k], r[k], rtol=1e-6, atol=1e-6,
+                                   err_msg=f"1-D mesh {k} kt={kt}")
+        np.testing.assert_allclose(p2[k], r[k], rtol=1e-6, atol=1e-6,
+                                   err_msg=f"2-D mesh {k} kt={kt}")
+    np.testing.assert_allclose([l1, l2], rl, rtol=1e-5, atol=1e-6)
+print("M2D-STEP-MATCH")
+
+# tiered-by-DEFAULT cfg (k_tiers resolved from GSTrainCfg, caps fall back
+# to the always-exact strip size) must equal the dense escape hatch
+p_auto, _ = dist_step(mesh2d, cfg.resolved_k_tiers())
+cfg_dense = GSTrainCfg(K=K, lr_colors=5e-2, dense_k=K)
+assert cfg_dense.resolved_k_tiers() is None
+step_d = make_gs_train_step(mesh2d, cfg_dense, grid, extent=1.0,
+                            impl="ref", views=V)
+gsh, osh, bsh = gs_shardings(mesh2d, views=V)
+tr = {k: getattr(g_b, k) for k in
+      ("means", "log_scales", "quats", "opacity_logit", "colors")}
+opt = GSOptState(
+    m=jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32), tr),
+    v=jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32), tr),
+    step=jnp.int32(0),
+    grad_accum=jnp.zeros((Pn, N)), grad_count=jnp.zeros((Pn, N)))
+batch = {"gt_tiles": jax.device_put(gt, bsh["gt_tiles"]),
+         "mask_tiles": jax.device_put(mask, bsh["mask_tiles"]),
+         "cam": jax.device_put(cam_b, bsh["cam"])}
+g_d, _, _ = step_d(jax.device_put(g_b, gsh), jax.device_put(opt, osh),
+                   batch)
+for k, x in g_d.trainable().items():
+    np.testing.assert_allclose(p_auto[k], np.asarray(x),
+                               rtol=1e-6, atol=1e-6, err_msg=k)
+print("M2D-DEFAULT-TIERED")
+
+# odd views must be rejected loudly, not silently truncated
+try:
+    make_gs_forward(mesh2d, grid, K=K, impl="ref", views=3)
+except ValueError as e:
+    assert "view" in str(e)
+    print("M2D-DIVISIBILITY")
+"""
+
+
+@pytest.mark.slow
+def test_2d_mesh_step_matches_1d_and_single_device(tmp_path):
+    """The ("part", "view") 2-D mesh: view-sharded forward tiles/loss match
+    the per-view reference, and the train step (params after one Adam
+    update) matches the 1-D mesh and a hand-built single-device step at
+    1e-6 — dense and tiered, overflow 0, tiered-by-default cfg included."""
+    code = MESH2D_SCRIPT % {"src": SRC}
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=900)
+    assert out.returncode == 0, (out.stdout[-2000:], out.stderr[-3000:])
+    assert "M2D-FWD-MATCH" in out.stdout
+    assert "M2D-STEP-MATCH" in out.stdout
+    assert "M2D-DEFAULT-TIERED" in out.stdout
+    assert "M2D-DIVISIBILITY" in out.stdout

@@ -20,7 +20,7 @@ from repro.core.cameras import orbital_rig, select
 from repro.core.gaussians import from_points
 from repro.core.pipeline import render_views
 from repro.core.render import render, render_batch
-from repro.core.tiling import (NEG, TileGrid, auto_tier_caps,
+from repro.core.tiling import (NEG, TierSchedule, TileGrid, auto_tier_caps,
                                bin_tiles_by_occupancy, tile_occupancy,
                                tile_tiers)
 from repro.data.isosurface import point_cloud_for
@@ -194,6 +194,129 @@ def test_tiered_gradient_parity_batched():
     gt = jax.grad(lambda m: loss(m, kt))(g.means)
     np.testing.assert_allclose(np.asarray(gt), np.asarray(gd),
                                rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# TierSchedule: telemetry-driven (k_tiers, tier_caps) lifecycle
+# ---------------------------------------------------------------------------
+
+
+def test_tier_schedule_probe_covers_and_keeps_telemetry_live():
+    rng = np.random.default_rng(1)
+    occ = jnp.asarray(rng.integers(0, 13, 200), jnp.int32)   # max occ <= 12
+    sched = TierSchedule((4, 16, 64))
+    kt, caps = sched.probe(occ)
+    # default keeps the FULL ladder with cap-0 (no-launch) upper tiers, so
+    # the step still assigns at Kmax and occupancy growth stays measurable
+    assert kt == (4, 16, 64)
+    assert caps[-1] == 0
+    assert sched.kmax == 64
+    plan = bin_tiles_by_occupancy(occ, kt, caps)
+    assert int(plan.overflow) == 0        # probed caps cover the histogram
+    # growth into an unoccupied tier FIRES the overflow counter (the signal
+    # note_overflow consumes) instead of truncating silently
+    occ_grown = occ.at[:8].set(60)
+    assert int(bin_tiles_by_occupancy(occ_grown, kt, caps).overflow) > 0
+
+
+def test_tier_schedule_opt_in_trim():
+    """trim=True (for re-probing runs) drops unoccupied top tiers so sparse
+    phases stop paying large-K assignment."""
+    occ = jnp.asarray([0, 3, 12, 12], jnp.int32)
+    sched = TierSchedule((4, 16, 64), trim=True)
+    kt, caps = sched.probe(occ)
+    assert kt == (4, 16)                  # 64-tier dropped: nothing needs it
+    assert sched.kmax == 64               # probes still assign at ladder max
+    assert int(bin_tiles_by_occupancy(occ, kt, caps).overflow) == 0
+    # a probe that saturates Kmax keeps the full ladder (occupancy is only
+    # a lower bound there)
+    kt2, _ = sched.probe(jnp.asarray([64, 64], jnp.int32))
+    assert kt2 == (4, 16, 64)
+
+
+def test_tier_schedule_reprobe_grows_caps_after_densify_overflow():
+    """The re-probe contract: a densify that pushes tiles past the current
+    top-tier cap must (a) be visible as overflow under the OLD caps and
+    (b) disappear after a re-probe, whose caps grew."""
+    rng = np.random.default_rng(2)
+    sched = TierSchedule((4, 16, 64), slack=1.0)
+    occ_before = jnp.asarray(
+        np.concatenate([rng.integers(1, 17, 90),    # tiers 0/1
+                        rng.integers(17, 65, 10)]), jnp.int32)  # few heavy
+    kt0, caps0 = sched.probe(occ_before)
+    assert int(bin_tiles_by_occupancy(occ_before, kt0, caps0).overflow) == 0
+    # "densify": many more tiles land in the top tier than caps0 allows
+    occ_after = jnp.asarray(
+        np.concatenate([rng.integers(1, 17, 40),
+                        rng.integers(17, 65, 60)]), jnp.int32)
+    assert int(bin_tiles_by_occupancy(occ_after, kt0, caps0).overflow) > 0
+    kt1, caps1 = sched.probe(occ_after)
+    assert caps1[-1] > caps0[-1]          # top-tier cap grew
+    assert int(bin_tiles_by_occupancy(occ_after, kt1, caps1).overflow) == 0
+
+
+def test_tier_schedule_note_overflow_grows_and_clamps():
+    sched = TierSchedule((4, 16), round_to=8, growth=2.0)
+    assert not sched.note_overflow(5, 100)      # no probe yet: no-op
+    sched.probe(jnp.asarray([3, 3, 10, 10, 10], jnp.int32))
+    caps0 = sched.tier_caps
+    assert not sched.note_overflow(0, 100)      # zero counter: no-op
+    assert sched.note_overflow(jnp.int32(2), 100)
+    assert all(c1 >= c0 for c1, c0 in zip(sched.tier_caps, caps0))
+    for _ in range(10):                          # growth is clamped at M...
+        sched.note_overflow(1, 100)
+    assert all(c <= 100 for c in sched.tier_caps)
+    assert not sched.note_overflow(1, 100)       # ...where it's a no-op
+
+
+def test_tier_schedule_rejects_bad_ladder_and_tracers():
+    with pytest.raises(ValueError):
+        TierSchedule((16, 16))
+    with pytest.raises(ValueError):
+        TierSchedule(())
+    with pytest.raises(TypeError, match="concrete"):
+        jax.jit(lambda o: TierSchedule((4, 16)).probe(o))(
+            jnp.zeros((4,), jnp.int32))
+
+
+def test_trainer_tiered_default_matches_dense_escape_hatch():
+    """GSTrainCfg now trains tiered by default; the dense_k= escape hatch
+    must reproduce the exact same training trajectory (caps cover -> tiered
+    is exact, so the default flip is a pure execution-strategy change)."""
+    from repro.core.train import GSTrainCfg, fit_partition
+    g, cams, grid = scene(n=300, res=32, n_views=3)
+    gts = jnp.full((3, 32, 32, 3), 0.5)
+    cfg_t = GSTrainCfg(K=32, view_batch=2, impl="ref")
+    cfg_d = GSTrainCfg(K=32, view_batch=2, impl="ref", dense_k=32)
+    assert cfg_t.resolved_k_tiers() == (4, 16, 32)
+    assert cfg_d.resolved_k_tiers() is None
+    g_t, _, l_t = fit_partition(g, cams, gts, None, cfg_t, steps=3,
+                                extent=1.0, grid=grid)
+    g_d, _, l_d = fit_partition(g, cams, gts, None, cfg_d, steps=3,
+                                extent=1.0, grid=grid)
+    np.testing.assert_allclose(l_t, l_d, rtol=1e-6, atol=1e-6)
+    for k, v in g_t.trainable().items():
+        np.testing.assert_allclose(np.asarray(v),
+                                   np.asarray(getattr(g_d, k)),
+                                   rtol=1e-6, atol=1e-6, err_msg=k)
+
+
+def test_fit_partition_reprobes_schedule_across_densify():
+    """End-to-end lifecycle: fit_partition probes the supplied schedule and
+    re-probes after densify events (schedule state is observable because
+    schedule= is caller-owned)."""
+    from repro.core.train import GSTrainCfg, fit_partition
+    g, cams, grid = scene(n=200, res=32, n_views=2)
+    gts = jnp.full((2, 32, 32, 3), 0.2)
+    cfg = GSTrainCfg(K=16, densify_grad_thresh=0.0, max_new=64, impl="ref")
+    sched = cfg.tier_schedule()
+    assert sched.tier_caps is None
+    g1, _, losses = fit_partition(g, cams, gts, None, cfg, steps=4,
+                                  extent=1.0, grid=grid, densify_every=2,
+                                  densify_from=0, schedule=sched)
+    assert sched.tier_caps is not None          # probed (and re-probed)
+    assert all(np.isfinite(losses))
+    assert int(g1.active.sum()) >= int(g.active.sum())  # densify ran
 
 
 # ---------------------------------------------------------------------------

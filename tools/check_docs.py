@@ -3,9 +3,13 @@
 1. Intra-repo link check: every relative markdown link in README.md and
    docs/**/*.md must resolve to an existing file (anchors are stripped;
    http(s)/mailto links are skipped).
-2. Code-block execution: every ```python fenced block in README.md is
-   executed (in its own namespace, cwd = repo root, src/ on sys.path).  A
-   quickstart snippet that drifts from the API fails the build.
+2. Code-block execution: every ```python fenced block in README.md AND
+   docs/**/*.md is executed.  Each file's blocks are concatenated in order
+   and run in ONE fresh subprocess (cwd = repo root, src/ on sys.path), so
+   later blocks may build on earlier ones, and a block may set env vars
+   (e.g. XLA_FLAGS for a host-device mesh) before importing jax — the
+   distributed-training guide relies on this.  A snippet that drifts from
+   the API fails the build.
 
     PYTHONPATH=src python tools/check_docs.py
 
@@ -14,13 +18,19 @@ Exit code 0 = docs are runnable and link-clean.
 
 from __future__ import annotations
 
+import os
 import re
+import subprocess
 import sys
 from pathlib import Path
 
 ROOT = Path(__file__).resolve().parent.parent
 LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 FENCE_RE = re.compile(r"```python\n(.*?)```", re.DOTALL)
+
+#: per-file wall-clock budget for snippet execution; the distributed guide
+#: compiles a 4-device shard_map program on CPU, which dominates
+BLOCK_TIMEOUT_S = 900
 
 
 def doc_files():
@@ -49,20 +59,44 @@ def check_links() -> list[str]:
 
 def run_code_blocks() -> list[str]:
     errors = []
-    sys.path.insert(0, str(ROOT / "src"))
-    readme = ROOT / "README.md"
-    blocks = FENCE_RE.findall(readme.read_text())
-    if not blocks:
+    any_blocks = False
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    for md in doc_files():
+        rel = md.relative_to(ROOT)
+        blocks = FENCE_RE.findall(md.read_text())
+        if not blocks:
+            continue
+        any_blocks = True
+        # one subprocess per FILE: blocks run in order and share state, and
+        # env tweaks in an early block (XLA_FLAGS) apply to later imports
+        script = "\n\n".join(
+            f"# --- {rel} block {i + 1}/{len(blocks)}\n"
+            f"print('[check_docs] {rel} block {i + 1}/{len(blocks)}', "
+            f"flush=True)\n{b}"
+            for i, b in enumerate(blocks))
+        print(f"[check_docs] executing {rel}: {len(blocks)} python block(s), "
+              f"{len(script.splitlines())} lines")
+        try:
+            proc = subprocess.run([sys.executable, "-c", script],
+                                  cwd=ROOT, env=env, capture_output=True,
+                                  text=True, timeout=BLOCK_TIMEOUT_S)
+        except subprocess.TimeoutExpired:
+            errors.append(f"{rel}: python blocks exceeded "
+                          f"{BLOCK_TIMEOUT_S}s")
+            continue
+        sys.stdout.write(proc.stdout)
+        if proc.returncode != 0:
+            errors.append(f"{rel}: python blocks failed (exit "
+                          f"{proc.returncode}):\n{proc.stderr[-2000:]}")
+    if not any_blocks:
+        errors.append("no ```python blocks found in README.md/docs (the "
+                      "quickstart snippets are part of the docs contract)")
+    readme_blocks = FENCE_RE.findall((ROOT / "README.md").read_text())
+    if not readme_blocks:
         errors.append("README.md: no ```python blocks found (the quickstart "
                       "snippet is part of the docs contract)")
-    for i, block in enumerate(blocks):
-        print(f"[check_docs] executing README.md python block {i + 1}/"
-              f"{len(blocks)} ({len(block.splitlines())} lines)")
-        try:
-            exec(compile(block, f"README.md#block{i + 1}", "exec"), {})
-        except Exception as e:  # pragma: no cover - the gate itself
-            errors.append(f"README.md python block {i + 1} raised "
-                          f"{type(e).__name__}: {e}")
     return errors
 
 
