@@ -60,18 +60,19 @@ mask = jnp.ones((V, Pn * grid.n_tiles, grid.tile_h, grid.tile_w), bool)
 
 mesh = jax.make_mesh((p, v), ("part", "view"))
 cfg = GSTrainCfg(K=32)                      # tiered by default
+g_sh, opt_sh, b_sh = gs_shardings(mesh, views=V)
 # production shape: probe measured tier caps first (the tier_caps=None
 # fallback is always-exact but strip-sized — not what a real run pays).
-# The distributed binning domain is the FOLDED (Vl*T,) tile axis, so size
-# caps over the flattened all-view occupancy (covers any view sharding).
-from repro.core.render import occupancy_probe_jit
+# probe_gs_schedule is the driver's shared in-mesh probe: occupancy over
+# each device's folded (Vl*T,) binning domain, pmax-reduced so every host
+# lands on the same cap ladder (it replaced this benchmark's old ad-hoc
+# host-side occupancy reshape).
+from repro.core.distributed import probe_gs_schedule
 sched = cfg.tier_schedule()
-occ = occupancy_probe_jit(grid, sched.kmax, None)(
-    jax.tree.map(lambda x: x[0], g), cam_b)
-sched.probe(jnp.reshape(occ, (1, -1)))
+probe_gs_schedule(sched, mesh, grid, jax.device_put(g, g_sh),
+                  jax.device_put(cam_b, b_sh["cam"]), views=V)
 step = make_gs_train_step(mesh, cfg, grid, extent=1.0, impl="ref", views=V,
                           k_tiers=sched.k_tiers, tier_caps=sched.tier_caps)
-g_sh, opt_sh, b_sh = gs_shardings(mesh, views=V)
 tr = g.trainable()
 opt = GSOptState(
     m=jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32), tr),

@@ -42,23 +42,27 @@ their "part" shards automatically.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from functools import partial
 from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 from jax.experimental.shard_map import shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core.cameras import CAM_VAXES, Camera
+from repro.core.cameras import CAM_VAXES, Camera, select
 from repro.core.gaussians import Gaussians
 from repro.core.metrics import ssim_map
 from repro.core.projection import project
-from repro.core.tiling import (FEAT_DIM, TileGrid, bin_tiles_by_occupancy,
-                               splat_features, tile_bounds,
-                               topk_by_score_then_index)
-from repro.core.train import GSTrainCfg, GSOptState, group_lrs
+from repro.core.tiling import (FEAT_DIM, TierSchedule, TileGrid,
+                               bin_tiles_by_occupancy, splat_features,
+                               tile_bounds, tile_image, tile_occupancy,
+                               tile_tiers, topk_by_score_then_index)
+from repro.core.train import (GSTrainCfg, GSOptState, densify_and_prune,
+                              group_lrs, init_opt)
 from repro.kernels import rasterize_tiles
 from repro.kernels.ops import rasterize_tiles_tiered
 
@@ -236,8 +240,14 @@ def make_gs_forward(mesh, grid: TileGrid, *, K: int, impl: str = "auto",
                     strip_budget: float = 1.0, views: Optional[int] = None,
                     k_tiers: Optional[tuple] = None,
                     tier_caps: Optional[tuple] = None,
-                    return_overflow: bool = False):
+                    return_overflow: bool = False, win_size: int = 7):
     """shard_map'd distributed forward: (gaussians, cam, gt, mask) -> loss.
+
+    ``win_size`` is the per-tile D-SSIM window (default 7: tiles are as
+    small as 8 pixels tall, see masking.tile_l1_dssim_loss; a grid whose
+    single tile covers the whole image with win_size=11 reproduces the
+    single-device full-image gs_loss exactly — the driver parity tests
+    pin this).
 
     gt_tiles (P*T, 3, th, tw) / mask_tiles (P*T, th, tw) arrive sharded over
     ("pod", "model") on the flat tile axis.
@@ -503,7 +513,8 @@ def make_gs_forward(mesh, grid: TileGrid, *, K: int, impl: str = "auto",
             # pixels each view has.  mean over local views + pmean over the
             # "view" axis == the global V-view mean (equal local counts).
             pred_v = tiles[:, :3].reshape((vloc, -1, 3) + tiles.shape[2:])
-            l1n, l1d, sn, sd = jax.vmap(_loss_partials)(pred_v, gt, mask)
+            l1n, l1d, sn, sd = jax.vmap(
+                partial(_loss_partials, win_size=win_size))(pred_v, gt, mask)
             l1n, l1d, sn, sd = (lax.psum(x, axes) for x in (l1n, l1d, sn, sd))
             loss = ((1 - lambda_dssim) * l1n / jnp.maximum(l1d, 1.0)
                     + lambda_dssim
@@ -511,7 +522,8 @@ def make_gs_forward(mesh, grid: TileGrid, *, K: int, impl: str = "auto",
             if view is not None:
                 loss = lax.pmean(loss, view)
         else:
-            l1n, l1d, sn, sd = _loss_partials(tiles[:, :3], gt, mask)
+            l1n, l1d, sn, sd = _loss_partials(tiles[:, :3], gt, mask,
+                                              win_size=win_size)
             l1n, l1d, sn, sd = (lax.psum(x, axes) for x in (l1n, l1d, sn, sd))
             loss = ((1 - lambda_dssim) * l1n / jnp.maximum(l1d, 1.0)
                     + lambda_dssim * (1.0 - sn / jnp.maximum(sd, 1.0)) / 2.0)
@@ -536,6 +548,164 @@ def make_gs_forward(mesh, grid: TileGrid, *, K: int, impl: str = "auto",
 
 
 # ---------------------------------------------------------------------------
+# Distributed occupancy probe (tier-schedule telemetry)
+# ---------------------------------------------------------------------------
+
+
+def make_gs_probe(mesh, grid: TileGrid, *, k_tiers, views: Optional[int] = None,
+                  assign_block: Optional[int] = None):
+    """shard_map'd tier-schedule probe: (gaussians, cam) ->
+    (tier_counts (n_tiers,) int32, max_occ () int32), REPLICATED.
+
+    The distributed tiered forward bins each device's FOLDED
+    ``(Vl * Pl * Tl,)`` flat tile axis (local views x local partitions x
+    strip tiles), so tier caps must cover the worst such folded domain
+    across the whole mesh — not the worst single view.  This probe runs the
+    same project -> table all-gather -> view fold -> strip-local assignment
+    pipeline as ``make_gs_forward`` at the ladder's Kmax, measures per-tile
+    occupancy over the folded domain, counts tiles per desired tier
+    (``core.tiling.tile_tiers`` over the FULL ladder), and pmax-reduces
+    (counts, max occupancy) over every mesh axis.  The outputs are
+    therefore identical on every device AND every host, which is what lets
+    each process of a multi-host run feed them to
+    ``TierSchedule.probe_counts`` independently and still compile the
+    identical program — no out-of-band schedule broadcast needed.
+
+    ``k_tiers`` must be the schedule's FULL ladder (``TierSchedule.ladder``:
+    assignment runs at ladder[-1]; probing a trimmed ladder would under-
+    measure).  The probe ignores ``strip_budget``/``gather_mode`` — it uses
+    the exact f32 path, whose occupancy upper-bounds every budgeted
+    variant, so caps sized here cover them too.
+    """
+    ax = _axes(mesh)
+    pod, data, model, view = ax
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n_model = sizes.get(model, 1)
+    n_view = sizes.get(view, 1)
+    if views is None and n_view > 1:
+        raise ValueError(
+            f"mesh has a 'view' axis of size {n_view} but views=None; pass "
+            f"views=V (a multiple of {n_view}) to probe the view-sharded "
+            f"domain")
+    if views is not None and views % n_view:
+        raise ValueError(f"views={views} must divide by the 'view' axis "
+                         f"size {n_view}")
+    vloc = views // n_view if views else None
+    ladder = tuple(int(k) for k in k_tiers)
+    K = ladder[-1]
+    T = grid.n_tiles
+    assert T % n_model == 0, (T, n_model)
+    Tl = T // n_model
+    if assign_block is None:
+        assign_block = max(1024, 4096 // vloc) if views else 4096
+
+    g_spec = Gaussians(
+        means=P(pod, data, None), log_scales=P(pod, data, None),
+        quats=P(pod, data, None), opacity_logit=P(pod, data),
+        colors=P(pod, data, None), active=P(pod, data), owner=P(pod, data),
+    )
+    vlead = (view,) if views else ()
+    cam_spec = Camera(view=P(*vlead, None, None) if views else P(),
+                      fx=P(*vlead) if views else P(),
+                      fy=P(*vlead) if views else P(),
+                      width=P(), height=P())
+    lo_full, hi_full = tile_bounds(grid)
+    nax = 2 if views else 1
+    reduce_axes = tuple(a for a in (pod, data, model, view) if a)
+
+    def shard_fn(g: Gaussians, cam: Camera):
+        if views:
+            splats = jax.vmap(lambda c: project(g, c),
+                              in_axes=(CAM_VAXES,))(cam)
+        else:
+            splats = project(g, cam)
+        aux_l = jnp.stack(
+            [splats.mean2d[..., 0], splats.mean2d[..., 1],
+             jnp.where(splats.valid, splats.radius, 0.0),
+             splats.depth], axis=-1)                     # (Pl, Nl, 4)
+        aux = lax.all_gather(aux_l, data, axis=nax, tiled=True)
+        if views:
+            aux = aux.reshape((-1,) + aux.shape[2:])     # fold Vl into Pl
+        mean_g = aux[..., 0:2]
+        radius_g = aux[..., 2]
+        depth_g = aux[..., 3]
+        valid_g = radius_g > 0
+
+        if model is not None:
+            mi = lax.axis_index(model)
+            lo = lax.dynamic_slice_in_dim(lo_full, mi * Tl, Tl, 0)
+            hi = lax.dynamic_slice_in_dim(hi_full, mi * Tl, Tl, 0)
+        else:
+            lo, hi = lo_full, hi_full
+
+        _, score = _assign_tiles_local(mean_g, radius_g, depth_g, valid_g,
+                                       lo, hi, K=K, block=assign_block)
+        occ = tile_occupancy(score).reshape(-1)          # (Vl*Pl*Tl,)
+        tiers = tile_tiers(occ, ladder)
+        counts = jnp.stack(
+            [(tiers == i).sum() for i in range(len(ladder))]
+        ).astype(jnp.int32)
+        if reduce_axes:
+            counts = lax.pmax(counts, reduce_axes)
+            max_occ = lax.pmax(occ.max(), reduce_axes)
+        else:
+            max_occ = occ.max()
+        return counts, max_occ
+
+    return shard_map(shard_fn, mesh=mesh, in_specs=(g_spec, cam_spec),
+                     out_specs=(P(), P()), check_rep=False)
+
+
+def folded_tile_count(mesh, grid: TileGrid, n_parts: int,
+                      views: Optional[int] = None) -> int:
+    """Per-device flat tile count of the distributed binning domain,
+    ``Vl * Pl * Tl`` — the cap clamp / ``note_overflow`` ``n_tiles``
+    argument (binning over a domain of this size provably cannot drop)."""
+    ax = _axes(mesh)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    vloc = views // sizes.get(ax.view, 1) if views else 1
+    return (vloc * (n_parts // sizes.get(ax.pod, 1))
+            * (grid.n_tiles // sizes.get(ax.model, 1)))
+
+
+@functools.lru_cache(maxsize=32)
+def _gs_probe_jit(mesh, grid: TileGrid, ladder: tuple,
+                  views: Optional[int]):
+    return jax.jit(make_gs_probe(mesh, grid, k_tiers=ladder, views=views))
+
+
+def probe_gs_schedule(sched: TierSchedule, mesh, grid: TileGrid,
+                      g: Gaussians, cam, *, views: Optional[int] = None):
+    """Probe ``sched`` against the mesh: run the (cached, jitted)
+    ``make_gs_probe`` telemetry reduction and update the schedule host-side
+    via ``probe_counts``.  Returns the new ``(k_tiers, tier_caps)`` —
+    identical on every host by construction (pmax'd telemetry).
+
+    ``cam`` is one view-batch Camera (shaped for ``views``) or a sequence
+    of them; with several, the per-tier counts are max-merged host-side so
+    the caps cover the WORST probed batch of the step's exact folded
+    domain.
+
+    This is the shared probe for everything driving the distributed tiered
+    step: ``fit_partitions`` calls it at init and after every densify
+    (with two probe batches when the view batch is a single view), and
+    benchmarks/table4_multinode.py sizes its swept steps with it.
+    """
+    cam_batches = [cam] if isinstance(cam, Camera) else list(cam)
+    probe_fn = _gs_probe_jit(mesh, grid, tuple(sched.ladder), views)
+    counts, max_occ = None, 0
+    for cb in cam_batches:
+        c, m = probe_fn(g, cb)
+        c = np.asarray(c)
+        counts = c if counts is None else np.maximum(counts, c)
+        max_occ = max(max_occ, int(m))
+    n_parts = g.means.shape[0]
+    return sched.probe_counts(
+        counts, max_occ,
+        n_tiles=folded_tile_count(mesh, grid, n_parts, views))
+
+
+# ---------------------------------------------------------------------------
 # Distributed train step
 # ---------------------------------------------------------------------------
 
@@ -548,7 +718,8 @@ def make_gs_train_step(mesh, cfg: GSTrainCfg, grid: TileGrid, extent: float,
                        *, impl: str = "auto", views: Optional[int] = None,
                        assign_block: Optional[int] = None,
                        k_tiers=_FROM_CFG,
-                       tier_caps: Optional[tuple] = None):
+                       tier_caps: Optional[tuple] = None,
+                       return_overflow: bool = False, win_size: int = 7):
     """jit'd (gaussians, opt, batch) -> (gaussians, opt, loss).
 
     Per-partition losses are averaged globally, but gradients never mix
@@ -570,6 +741,13 @@ def make_gs_train_step(mesh, cfg: GSTrainCfg, grid: TileGrid, extent: float,
     ``core.tiling.TierSchedule`` (probe -> train -> densify -> re-probe)
     and passes ``(schedule.k_tiers, schedule.tier_caps)``.  cfg.K (or
     cfg.dense_k) is the dense path's assignment depth.
+
+    ``return_overflow=True`` makes the step return
+    ``(gaussians, opt, loss, overflow)`` where overflow is the globally
+    psum'd tiered dropped-tile counter (always 0 on the dense path) — the
+    telemetry ``TierSchedule.note_overflow`` consumes, mirroring
+    train.make_train_step.  ``win_size`` is the per-tile D-SSIM window
+    (see make_gs_forward).
     """
     if k_tiers is _FROM_CFG:
         k_tiers = cfg.resolved_k_tiers()
@@ -580,13 +758,15 @@ def make_gs_train_step(mesh, cfg: GSTrainCfg, grid: TileGrid, extent: float,
                           gather_mode=cfg.gather_mode,
                           strip_budget=cfg.strip_budget, views=views,
                           assign_block=assign_block,
-                          k_tiers=k_tiers, tier_caps=tier_caps)
+                          k_tiers=k_tiers, tier_caps=tier_caps,
+                          return_overflow=return_overflow, win_size=win_size)
 
     def loss_fn(tr, g, cam, gt, mask):
-        return fwd(g.with_trainable(tr), cam, gt, mask)
+        out = fwd(g.with_trainable(tr), cam, gt, mask)
+        return out if return_overflow else (out, jnp.zeros((), jnp.int32))
 
     def step(g: Gaussians, opt: GSOptState, batch):
-        loss, grads = jax.value_and_grad(loss_fn)(
+        (loss, overflow), grads = jax.value_and_grad(loss_fn, has_aux=True)(
             g.trainable(), g, batch["cam"], batch["gt_tiles"],
             batch["mask_tiles"])
         s = opt.step + 1
@@ -605,12 +785,15 @@ def make_gs_train_step(mesh, cfg: GSTrainCfg, grid: TileGrid, extent: float,
         new_opt = GSOptState(new_m, new_v, s,
                              opt.grad_accum + gnorm,
                              opt.grad_count + (gnorm > 0))
-        return g.with_trainable(new_tr), new_opt, loss
+        out = (g.with_trainable(new_tr), new_opt, loss)
+        return out + (overflow,) if return_overflow else out
 
+    rep = NamedSharding(mesh, P())
+    out_sh = (g_sh, opt_sh, rep) + ((rep,) if return_overflow else ())
     return jax.jit(
         step,
         in_shardings=(g_sh, opt_sh, b_sh),
-        out_shardings=(g_sh, opt_sh, NamedSharding(mesh, P())),
+        out_shardings=out_sh,
         donate_argnums=(0, 1),
     )
 
@@ -676,3 +859,181 @@ def gs_batch_specs(n_parts: int, grid: TileGrid,
             height=jax.ShapeDtypeStruct((), jnp.int32),
         ),
     }
+
+
+# ---------------------------------------------------------------------------
+# Distributed schedule driver (host loop)
+# ---------------------------------------------------------------------------
+
+
+def _tile_view_batches(gts, masks, grid: TileGrid):
+    """Per-partition images -> the distributed flat-tile batch layout.
+
+    gts (P, V, H, W, 3), masks (P, V, H, W) bool or None ->
+    (gt_tiles (V, P*T, 3, th, tw), mask_tiles (V, P*T, th, tw)) as host
+    numpy arrays (sliced per minibatch by the driver).  masks=None means
+    "every IMAGE pixel counts" — grid padding rows/columns (a resolution
+    that isn't a tile multiple) are still masked OFF, matching the
+    single-device full-image loss, which never sees pad pixels."""
+    Pn, V = gts.shape[:2]
+    tiler = jax.jit(jax.vmap(jax.vmap(partial(tile_image, grid=grid))))
+    gt_t = np.asarray(tiler(jnp.asarray(gts)))           # (P, V, T, 3, th, tw)
+    gt_t = gt_t.transpose(1, 0, 2, 3, 4, 5).reshape(
+        (V, Pn * grid.n_tiles) + gt_t.shape[3:])
+    if masks is None:
+        masks = jnp.ones((Pn, V) + gts.shape[2:4], jnp.float32)
+    mask_t = np.asarray(
+        tiler(jnp.asarray(masks)[..., None].astype(jnp.float32)))
+    mask_t = (mask_t.transpose(1, 0, 2, 3, 4, 5)[:, :, :, 0]
+              .reshape((V, Pn * grid.n_tiles) + mask_t.shape[4:]) > 0.5)
+    return gt_t, mask_t
+
+
+def fit_partitions(g: Gaussians, cams: Camera, gts, masks, cfg: GSTrainCfg,
+                   *, mesh, steps: int, extent: float, key=None,
+                   densify_every: int = 0, densify_from: int = 100,
+                   grid: Optional[TileGrid] = None,
+                   view_batch: Optional[int] = None,
+                   schedule: Optional[TierSchedule] = None,
+                   impl: str = "auto", win_size: int = 7,
+                   ckpt=None, ckpt_every: int = 0, log_every: int = 0):
+    """Distributed tier-schedule driver: train every partition of the
+    batched (P, N) layout in ONE SPMD program on ``mesh``, running the same
+    probe -> train -> densify -> re-probe lifecycle as the single-device
+    ``train.fit_partition``.
+
+    g: (P, N, ...) batched Gaussians (host or device); gts (P, V, H, W, 3)
+    per-partition GT images; masks (P, V, H, W) bool or None.  Each step
+    consumes ``view_batch`` consecutive views (default cfg.view_batch; the
+    minibatch is sharded over the mesh's "view" axis, so it must divide by
+    that axis' size).  Returns (g, opt, losses) with the state still
+    device-sharded per ``gs_shardings``.
+
+    Tier-schedule lifecycle (tiered-by-default; ``cfg.dense_k=`` opts out):
+    the schedule is probed through ``probe_gs_schedule`` — occupancy over
+    each device's folded (Vl*T,) binning domain, pmax-reduced across the
+    mesh so every host lands on the same cap ladder — the step trains with
+    its static (k_tiers, tier_caps) and reports the psum'd overflow
+    counter, any overflow grows the caps (bounded recompile), and every
+    densify event (vmapped over partitions inside jit) re-probes.
+
+    Checkpoint/resume: with ``ckpt`` (a runtime.CheckpointManager) the
+    driver restores the newest complete (g, opt) checkpoint, loads the
+    TierSchedule state saved alongside it (``extra["schedule"]``) — so a
+    resumed run keeps its probed caps instead of re-probing from scratch —
+    fast-forwards the densify key stream, and continues from that step;
+    ``ckpt_every`` saves (g, opt) + schedule periodically and a final
+    checkpoint always lands at ``steps``.  ``losses`` covers only the
+    steps this call actually ran.
+    """
+    if grid is None:
+        grid = TileGrid(cams.width, cams.height, cfg.tile_h, cfg.tile_w)
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    Pn = g.means.shape[0]
+    V = gts.shape[1]
+    vb = max(1, min(view_batch or cfg.view_batch, V))
+    sched = schedule if schedule is not None else cfg.tier_schedule()
+    m_dev = folded_tile_count(mesh, grid, Pn, views=vb)
+
+    gt_tiles, mask_tiles = _tile_view_batches(gts, masks, grid)
+    g_sh, opt_sh, b_sh = gs_shardings(mesh, views=vb)
+    opt = init_opt(g)       # layout-polymorphic: (P, N) accumulators here
+
+    start, losses = 0, []
+    if ckpt is not None:
+        (g, opt), extra, latest = ckpt.restore_latest((g, opt))
+        if latest is not None:
+            if sched is not None and extra.get("schedule"):
+                sched.load_state(extra["schedule"])
+            start = latest
+    # fast-forward the densify key stream consumed before ``start`` so a
+    # resumed run splits the same keys as an uninterrupted one
+    for i in range(start):
+        if densify_every and i >= densify_from \
+                and (i + 1) % densify_every == 0:
+            key = jax.random.split(key, 1 + Pn)[0]
+
+    g_dev = jax.device_put(g, g_sh)
+    opt_dev = jax.device_put(opt, opt_sh)
+
+    reprobe = None
+    if sched is not None:
+        # probe over the first minibatch — and, mirroring fit_partition's
+        # min(n_views, max(vb, 2))-view probe, a SECOND minibatch when
+        # vb == 1 (a single-view probe would size caps from one view
+        # only); probe_gs_schedule max-merges the counts so the caps cover
+        # the worst probed minibatch of the step's exact folded domain
+        n_probe = 2 if vb < 2 and V > 1 else 1
+        probe_cams = [
+            jax.device_put(
+                select(cams, jnp.asarray((b * vb + np.arange(vb)) % V)),
+                b_sh["cam"])
+            for b in range(n_probe)]
+
+        def reprobe(gg):
+            probe_gs_schedule(sched, mesh, grid, gg, probe_cams, views=vb)
+
+        if sched.tier_caps is None:     # a resume restored caps: no re-probe
+            reprobe(g_dev)
+
+    opt_vax = GSOptState(m=0, v=0, step=None, grad_accum=0, grad_count=0)
+    densify = jax.jit(jax.vmap(
+        partial(densify_and_prune, cfg=cfg, extent=extent),
+        in_axes=(0, opt_vax, 0), out_axes=(0, opt_vax)))
+
+    step_cache = {}
+
+    def get_step():
+        spec = (sched.k_tiers, sched.tier_caps) if sched else None
+        if spec not in step_cache:
+            step_cache[spec] = make_gs_train_step(
+                mesh, cfg, grid, extent, impl=impl, views=vb,
+                k_tiers=sched.k_tiers if sched else None,
+                tier_caps=sched.tier_caps if sched else None,
+                return_overflow=sched is not None, win_size=win_size)
+        return step_cache[spec]
+
+    def save(step_no):
+        ckpt.save(step_no, (jax.device_get(g_dev), jax.device_get(opt_dev)),
+                  extra={"schedule":
+                         sched.state_dict() if sched else None})
+
+    for i in range(start, steps):
+        vi = (i * vb + np.arange(vb)) % V
+        batch = {
+            "gt_tiles": jax.device_put(jnp.asarray(gt_tiles[vi]),
+                                       b_sh["gt_tiles"]),
+            "mask_tiles": jax.device_put(jnp.asarray(mask_tiles[vi]),
+                                         b_sh["mask_tiles"]),
+            "cam": jax.device_put(select(cams, jnp.asarray(vi)),
+                                  b_sh["cam"]),
+        }
+        out = get_step()(g_dev, opt_dev, batch)
+        g_dev, opt_dev, loss = out[:3]
+        losses.append(float(loss))
+        if sched is not None:
+            # a non-zero (psum'd) counter grows the caps for the NEXT
+            # steps — a one-step blip, never a persistent silent truncation
+            sched.note_overflow(out[3], m_dev)
+        if densify_every and i >= densify_from \
+                and (i + 1) % densify_every == 0:
+            ks = jax.random.split(key, 1 + Pn)
+            key = ks[0]
+            g_dev, opt_dev = densify(g_dev, opt_dev, ks[1:])
+            # the vmapped densify jit picks its own output shardings; pin
+            # the state back onto the step's (pod, part) layout before the
+            # next donating pjit call
+            g_dev = jax.device_put(g_dev, g_sh)
+            opt_dev = jax.device_put(opt_dev, opt_sh)
+            if sched is not None:
+                reprobe(g_dev)  # occupancy shifted: re-pick tiers/caps
+        if ckpt is not None and ckpt_every and (i + 1) % ckpt_every == 0 \
+                and (i + 1) < steps:
+            save(i + 1)
+        if log_every and (i + 1) % log_every == 0:
+            print(f"  step {i+1:5d}  loss {losses[-1]:.4f}  "
+                  f"schedule {sched if sched else 'dense'}")
+    if ckpt is not None and steps > start:
+        save(steps)
+    return g_dev, opt_dev, losses

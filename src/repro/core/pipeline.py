@@ -82,6 +82,35 @@ def gt_gaussians(points, colors, *, owner_id: int = 0) -> Gaussians:
                        owner_id=owner_id, opacity=0.95)
 
 
+def init_partition_gaussians(pd: PartitionData, *,
+                             capacity: Optional[int] = None,
+                             opacity: float = 0.6) -> Gaussians:
+    """Trainable splats for one partition's (owned + ghost) points.
+
+    ``capacity`` reserves free slots for densification (padding slots carry
+    the partition's own id so densified children merge-dedupe correctly).
+    Shared by run_pipeline and the distributed CLI driver
+    (launch/train.py --gs), which needs EQUAL capacities across partitions
+    for the batched (P, N) mesh layout.
+    """
+    cap = capacity or len(pd.points)
+    g0 = from_points(jnp.asarray(pd.points), jnp.asarray(pd.colors),
+                     capacity=cap, opacity=opacity)
+    return g0._replace(owner=jnp.concatenate([
+        jnp.asarray(pd.owner),
+        jnp.full((cap - len(pd.points),), pd.part_id, jnp.int32)]))
+
+
+def coverage_masks(part_cov, *, threshold: float = 1.0 / 255.0,
+                   dilation: int = 2) -> np.ndarray:
+    """(V, H, W) coverage renders -> (V, H, W) bool training masks
+    (thresholded + dilated; paper §II step 4)."""
+    return np.stack([
+        np.asarray(dilate_mask(jnp.asarray(c > threshold), dilation))
+        for c in part_cov
+    ])
+
+
 @functools.lru_cache(maxsize=64)
 def _render_batch_jit(grid: TileGrid, K: int, impl: str, bg: float,
                       coarse: Optional[int],
@@ -215,21 +244,12 @@ def run_pipeline(cfg: PipelineCfg) -> PipelineResult:
     for pd in parts:
         cap = int(len(pd.points) * ds.capacity_factor) if cfg.densify_every \
             else len(pd.points)
-        g0 = from_points(jnp.asarray(pd.points), jnp.asarray(pd.colors),
-                         capacity=cap, opacity=0.6)
-        g0 = g0._replace(owner=jnp.concatenate([
-            jnp.asarray(pd.owner),
-            jnp.full((cap - len(pd.points),), pd.part_id, jnp.int32)]))
+        g0 = init_partition_gaussians(pd, capacity=cap)
 
         # per-partition GT renders of OWN data (+ghosts) and coverage masks
         part_gt, part_cov = render_views(
             gt_gaussians(pd.points, pd.colors), cams, grid, K=cfg.K)
-        masks = None
-        if cfg.use_mask:
-            masks = np.stack([
-                np.asarray(dilate_mask(jnp.asarray(c > 1.0 / 255.0), 2))
-                for c in part_cov
-            ])
+        masks = coverage_masks(part_cov) if cfg.use_mask else None
 
         key, sub = jax.random.split(key)
         t0 = time.perf_counter()

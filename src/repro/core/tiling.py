@@ -469,6 +469,62 @@ def bin_tiles_by_occupancy(occupancy, k_tiers: Sequence[int],
                     overflow=carry.sum().astype(jnp.int32))
 
 
+#: shared "you called a host-side cap sizer under jit" guidance — tier caps
+#: are STATIC shapes, so they can only be chosen from concrete telemetry
+_TRACED_PROBE_MSG = (
+    "{what} was called with traced (abstract) telemetry — it is running "
+    "inside jit/vmap/grad/shard_map tracing.  Tier caps are STATIC kernel "
+    "shapes, so they must be sized from CONCRETE host-side values.  Move "
+    "the probe outside the traced computation: e.g. "
+    "occ = occupancy_probe_jit(grid, sched.kmax)(g, cams); sched.probe(occ) "
+    "on a single device, or reduce telemetry across a mesh with "
+    "core.distributed.make_gs_probe / probe_gs_schedule and feed the "
+    "fetched (counts, max_occ) to TierSchedule.probe_counts.  Under jit, "
+    "pass the schedule's already-static (k_tiers, tier_caps) instead.")
+
+
+def _reject_tracers(what: str, *vals):
+    if any(isinstance(v, jax.core.Tracer) for v in vals):
+        raise TypeError(_TRACED_PROBE_MSG.format(what=what))
+
+
+def _tier_counts(occupancy, k_tiers: Sequence[int]):
+    """Concrete (..., T) occupancy -> (per-tier worst-slice counts, max occ).
+
+    counts[i] = max over leading batch slices of the number of tiles whose
+    DESIRED tier (smallest covering K) is i — exactly what
+    bin_tiles_by_occupancy fills before promotion, hence what caps must
+    cover.  This is the host half of the cross-host telemetry contract:
+    core.distributed.make_gs_probe computes the same counts per device and
+    pmax-reduces them over the mesh.
+    """
+    occ = np.asarray(occupancy)
+    if occ.size == 0:
+        return [0] * len(tuple(k_tiers)), 0
+    occ = occ.reshape(-1, occ.shape[-1])
+    tiers = np.asarray(tile_tiers(jnp.asarray(occ), k_tiers))
+    counts = [int((tiers == i).sum(axis=-1).max())
+              for i in range(len(tuple(k_tiers)))]
+    return counts, int(occ.max())
+
+
+def caps_from_tier_counts(counts: Sequence[int], *, slack: float = 1.0,
+                          round_to: int = 8, limit: int) -> Tuple[int, ...]:
+    """Per-tier tile counts -> static caps: scale by ``slack``, round up to
+    ``round_to`` (so nearby probes hash to the same jit cache entry), clamp
+    at ``limit`` (the flat tile count of the binning domain, where binning
+    provably cannot overflow).  Zero counts keep cap 0 — a zero-cost launch
+    that keeps overflow telemetry live if occupancy later grows."""
+    caps = []
+    for c in counts:
+        c = int(c)
+        if c:
+            c = int(np.ceil(c * slack))
+            c = min(-(-c // round_to) * round_to, int(limit))
+        caps.append(c)
+    return tuple(caps)
+
+
 def auto_tier_caps(occupancy, k_tiers: Sequence[int], *, slack: float = 1.0,
                    round_to: int = 8) -> Tuple[int, ...]:
     """Host-side cap sizing from CONCRETE occupancy counts.
@@ -477,24 +533,13 @@ def auto_tier_caps(occupancy, k_tiers: Sequence[int], *, slack: float = 1.0,
     static per-tier caps covering the worst slice of the batch, scaled by
     ``slack`` and rounded up to a multiple of ``round_to`` so nearby scenes
     hash to the same jit cache entry.  Raises under tracing — pass explicit
-    ``tier_caps`` inside jit.
+    ``tier_caps`` inside jit (see the error text for the full recipe).
     """
-    if isinstance(occupancy, jax.core.Tracer):
-        raise TypeError(
-            "auto_tier_caps needs concrete occupancy; pass static tier_caps "
-            "when calling the tiered renderer under jit")
+    _reject_tracers("auto_tier_caps", occupancy)
     occ = np.asarray(occupancy)
-    occ = occ.reshape(-1, occ.shape[-1])
-    tiers = np.asarray(tile_tiers(jnp.asarray(occ), k_tiers))
-    M = occ.shape[-1]
-    caps = []
-    for i in range(len(tuple(k_tiers))):
-        c = int((tiers == i).sum(axis=-1).max())
-        if c:
-            c = int(np.ceil(c * slack))
-            c = min(-(-c // round_to) * round_to, M)
-        caps.append(c)
-    return tuple(caps)
+    counts, _ = _tier_counts(occ, k_tiers)
+    return caps_from_tier_counts(counts, slack=slack, round_to=round_to,
+                                 limit=occ.shape[-1] if occ.size else 0)
 
 
 class TierSchedule:
@@ -564,18 +609,44 @@ class TierSchedule:
 
         Returns the new ``(k_tiers, tier_caps)``.  Call after every
         densify/prune event — and at init — with occupancy measured at
-        ``self.kmax``.
+        ``self.kmax``.  Raises with a how-to-fix recipe when called under
+        JAX tracing (caps are static shapes; see ``probe_counts`` for the
+        distributed/multi-host entry point).
         """
-        if isinstance(occupancy, jax.core.Tracer):
-            raise TypeError("TierSchedule.probe needs concrete occupancy "
-                            "(host-side); probe outside jit")
+        _reject_tracers("TierSchedule.probe", occupancy)
         occ = np.asarray(occupancy)
-        max_occ = int(occ.max()) if occ.size else 0
+        counts, max_occ = _tier_counts(occ, self.ladder)
+        return self.probe_counts(counts, max_occ,
+                                 n_tiles=occ.shape[-1] if occ.size else 0)
+
+    def probe_counts(self, tier_counts, max_occ, *, n_tiles: int):
+        """Re-pick (k_tiers, tier_caps) from REDUCED telemetry: per-tier
+        worst-domain tile counts (over the FULL ladder) plus the max
+        occupancy, with ``n_tiles`` the flat tile count of one binning
+        domain (the cap clamp, where binning provably cannot drop).
+
+        This is the cross-host probe entry point: every device of a mesh
+        computes (counts, max_occ) over its own folded (Vl*T,) strip and a
+        pmax reduction (core.distributed.make_gs_probe) makes the result
+        identical on every host — so each host independently lands on the
+        SAME cap ladder and compiles the identical program.  ``probe``
+        delegates here after counting host-side.
+        """
+        _reject_tracers("TierSchedule.probe_counts", tier_counts, max_occ)
+        counts = [int(c) for c in np.asarray(tier_counts).reshape(-1)]
+        if len(counts) != len(self.ladder):
+            raise ValueError(
+                f"probe_counts got {len(counts)} tier counts for the "
+                f"{len(self.ladder)}-tier ladder {self.ladder}; counts must "
+                f"be measured over the schedule's FULL ladder")
+        max_occ = int(max_occ)
         # default: keep the FULL ladder — unoccupied upper tiers cost
         # nothing (cap 0 -> no launch) and keep overflow telemetry live.
         # trim=True: smallest ladder prefix covering max occupancy; a probe
         # that saturated Kmax keeps the full ladder (true occupancy may be
-        # deeper than we could measure)
+        # deeper than we could measure).  Counts are tier-for-tier valid on
+        # the trimmed prefix: trimming only happens when max_occ fits it,
+        # so the dropped upper tiers were empty.
         active = self.ladder
         if self.trim:
             for i, k in enumerate(self.ladder):
@@ -583,8 +654,9 @@ class TierSchedule:
                     active = self.ladder[: i + 1]
                     break
         self.k_tiers = active
-        self.tier_caps = auto_tier_caps(occ, active, slack=self.slack,
-                                        round_to=self.round_to)
+        self.tier_caps = caps_from_tier_counts(
+            counts[: len(active)], slack=self.slack, round_to=self.round_to,
+            limit=n_tiles)
         return self.k_tiers, self.tier_caps
 
     def note_overflow(self, overflow, n_tiles: int) -> bool:
@@ -604,6 +676,45 @@ class TierSchedule:
             return False
         self.tier_caps = grown
         return True
+
+    # -- (de)serialization: checkpoint the schedule alongside params so a
+    # resumed run keeps its probed caps instead of re-probing from scratch
+
+    def state_dict(self) -> dict:
+        """JSON-able snapshot of the full schedule state (ladder, knobs,
+        active tiers, caps).  Stored in CheckpointManager ``extra`` by
+        ``fit_partition`` / ``core.distributed.fit_partitions``."""
+        return {
+            "ladder": list(self.ladder),
+            "slack": self.slack,
+            "round_to": self.round_to,
+            "growth": self.growth,
+            "trim": self.trim,
+            "k_tiers": list(self.k_tiers),
+            "tier_caps": None if self.tier_caps is None
+            else list(self.tier_caps),
+        }
+
+    def load_state(self, state: dict) -> "TierSchedule":
+        """Restore a ``state_dict`` snapshot IN PLACE (the checkpoint wins
+        over constructor arguments) and return self."""
+        ladder = tuple(int(k) for k in state["ladder"])
+        if not ladder or any(b <= a for a, b in zip(ladder, ladder[1:])):
+            raise ValueError(f"checkpointed ladder is invalid: {ladder}")
+        self.ladder = ladder
+        self.slack = float(state["slack"])
+        self.round_to = int(state["round_to"])
+        self.growth = float(state["growth"])
+        self.trim = bool(state["trim"])
+        self.k_tiers = tuple(int(k) for k in state["k_tiers"])
+        caps = state["tier_caps"]
+        self.tier_caps = None if caps is None else tuple(int(c) for c in caps)
+        return self
+
+    @classmethod
+    def from_state(cls, state: dict) -> "TierSchedule":
+        """Rebuild a schedule from a ``state_dict`` snapshot."""
+        return cls(state["ladder"]).load_state(state)
 
     def __repr__(self):
         return (f"TierSchedule(k_tiers={self.k_tiers}, "
@@ -659,3 +770,18 @@ def untile_image(tiles, grid: TileGrid):
     img = tiles.reshape(grid.ny, grid.nx, 4, th, tw)
     img = img.transpose(0, 3, 1, 4, 2).reshape(grid.ny * th, grid.nx * tw, 4)
     return img[: grid.height, : grid.width]
+
+
+def tile_image(img, grid: TileGrid):
+    """(H, W, C) image -> (T, C, th, tw) tile layout (inverse of
+    untile_image; pixels past the image edge — the grid's padding rows /
+    columns — are zero-filled).  This is how host images become the
+    ``gt_tiles`` batches the distributed step consumes; masks tile the same
+    way via a singleton channel."""
+    th, tw = grid.tile_h, grid.tile_w
+    Hp, Wp = grid.ny * th, grid.nx * tw
+    img = jnp.pad(img, ((0, Hp - img.shape[0]), (0, Wp - img.shape[1]),
+                        (0, 0)))
+    t = img.reshape(grid.ny, th, grid.nx, tw, img.shape[-1])
+    return t.transpose(0, 2, 4, 1, 3).reshape(
+        grid.n_tiles, img.shape[-1], th, tw)

@@ -124,11 +124,15 @@ class GSOptState(NamedTuple):
 
 
 def init_opt(g: Gaussians) -> GSOptState:
+    """Fresh optimizer state; layout-polymorphic — the densify-stat
+    accumulators take the gaussian-index shape, so the single-partition
+    (N, ...) layout gets (N,) and the distributed batched (P, N, ...)
+    layout gets (P, N)."""
     tr = g.trainable()
     zeros = lambda: jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), tr)
-    n = g.capacity
+    acc = g.means.shape[:-1]
     return GSOptState(zeros(), zeros(), jnp.zeros((), jnp.int32),
-                      jnp.zeros((n,), jnp.float32), jnp.zeros((n,), jnp.float32))
+                      jnp.zeros(acc, jnp.float32), jnp.zeros(acc, jnp.float32))
 
 
 def group_lrs(cfg: GSTrainCfg, extent: float) -> dict:
@@ -324,7 +328,9 @@ def fit_partition(g: Gaussians, cams: Camera, gts, masks, cfg: GSTrainCfg,
                   densify_every: int = 0, densify_from: int = 100,
                   log_every: int = 0, grid: Optional[TileGrid] = None,
                   view_batch: Optional[int] = None,
-                  schedule: Optional[TierSchedule] = None):
+                  schedule: Optional[TierSchedule] = None,
+                  ckpt=None, ckpt_every: int = 0,
+                  partition: Optional[int] = None):
     """Train one partition for ``steps`` steps cycling over its camera set.
 
     gts: (V, H, W, 3); masks: (V, H, W) bool or None.  Returns
@@ -334,11 +340,22 @@ def fit_partition(g: Gaussians, cams: Camera, gts, masks, cfg: GSTrainCfg,
 
     Tier-schedule lifecycle (tiered-by-default; ``cfg.dense_k=`` opts out):
     a ``TierSchedule`` (``schedule=`` or a fresh one from the cfg) is
-    PROBED on the first minibatch's occupancy, the step trains with its
-    static (k_tiers, tier_caps), each densify/prune RE-PROBES (occupancy
-    shifted), and any step that reports tiered overflow grows the caps —
-    so every cap change is a bounded, telemetry-driven recompile and
-    dropped tiles never silently persist.
+    PROBED on the first minibatch's occupancy — unless it already carries
+    caps (a resumed/pre-probed schedule trains as-is) — the step trains
+    with its static (k_tiers, tier_caps), each densify/prune RE-PROBES
+    (occupancy shifted), and any step that reports tiered overflow grows
+    the caps — so every cap change is a bounded, telemetry-driven recompile
+    and dropped tiles never silently persist.
+
+    Checkpoint/resume: with ``ckpt`` (a runtime.CheckpointManager) the
+    newest complete checkpoint is restored — (g, opt) plus the
+    TierSchedule state stored alongside them, so the resumed run keeps its
+    probed caps instead of re-probing from scratch — the densify key
+    stream is fast-forwarded, and training continues from that step;
+    ``ckpt_every`` saves periodically (under ``partition_<k>/`` when
+    ``partition`` is given).  ``losses`` covers only the steps this call
+    actually ran.  core.distributed.fit_partitions is the mesh-parallel
+    mirror of this loop.
     """
     if grid is None:
         grid = TileGrid(cams.width, cams.height, cfg.tile_h, cfg.tile_w)
@@ -349,6 +366,21 @@ def fit_partition(g: Gaussians, cams: Camera, gts, masks, cfg: GSTrainCfg,
     opt = init_opt(g)
     n_views = gts.shape[0]
     vb = max(1, min(view_batch or cfg.view_batch, n_views))
+
+    start = 0
+    if ckpt is not None:
+        (g, opt), extra, latest = ckpt.restore_latest((g, opt),
+                                                      partition=partition)
+        if latest is not None:
+            if sched is not None and extra.get("schedule"):
+                sched.load_state(extra["schedule"])
+            start = latest
+    # fast-forward the densify key stream consumed before ``start`` so a
+    # resumed run splits the same keys as an uninterrupted one
+    for i in range(start):
+        if densify_every and i >= densify_from \
+                and (i + 1) % densify_every == 0:
+            key = jax.random.split(key)[0]
 
     probe_vi = jnp.arange(min(n_views, max(vb, 2))) % n_views
 
@@ -369,10 +401,10 @@ def fit_partition(g: Gaussians, cams: Camera, gts, masks, cfg: GSTrainCfg,
                 return_overflow=sched is not None))
         return step_cache[spec]
 
-    if sched is not None:
+    if sched is not None and sched.tier_caps is None:
         reprobe(g)
     losses = []
-    for i in range(steps):
+    for i in range(start, steps):
         vi = (i * vb + jnp.arange(vb)) % n_views
         cam = select(cams, vi)
         mask = None if masks is None else masks[vi]
@@ -389,6 +421,10 @@ def fit_partition(g: Gaussians, cams: Camera, gts, masks, cfg: GSTrainCfg,
             g, opt = densify(g, opt, sub)
             if sched is not None:
                 reprobe(g)      # occupancy shifted: re-pick tiers/caps
+        if ckpt is not None and ckpt_every and (i + 1) % ckpt_every == 0:
+            ckpt.save(i + 1, (g, opt), partition=partition,
+                      extra={"schedule":
+                             sched.state_dict() if sched else None})
         if log_every and (i + 1) % log_every == 0:
             print(f"  step {i+1:5d}  loss {losses[-1]:.4f} "
                   f"active {int(g.active.sum())}")

@@ -11,19 +11,34 @@ init, checkpoint/restart (resumes automatically from the latest complete
 checkpoint), heartbeats, retry, gradient compression (LM), and the paper's
 partition pipeline (GS).  On CPU this runs reduced configs; on a pod the
 same driver runs the full ones (--full).
+
+The GS mode is the paper's end-to-end workflow on the distributed
+tier-schedule driver (core/distributed.py::fit_partitions): partition (+
+ghost cells) -> per-partition GT renders + coverage masks -> TIERED
+distributed training of every partition in one SPMD program on the
+("part", "view") mesh (probe -> train -> densify -> re-probe; TierSchedule
+state checkpointed alongside params, so a restart resumes without
+re-probing) -> merge -> global render + metrics.  ``--host-devices N``
+forces N host-backed CPU devices (set before jax import), so the whole
+multi-device lifecycle runs on a laptop or in CI:
+
+    python -m repro.launch.train --gs --smoke --host-devices 4 --steps 6
+
+jax is imported lazily (inside the run functions) so the flag can take
+effect; keep module-level imports jax-free.
 """
 
 from __future__ import annotations
 
 import argparse
+import math
+import os
 import time
-
-import jax
-import jax.numpy as jnp
-import numpy as np
 
 
 def run_lm(args):
+    import jax
+
     from repro.configs import get_smoke, get_spec
     from repro.data.tokens import SyntheticTokens
     from repro.models import (TrainCfg, init_opt_state, init_params,
@@ -42,11 +57,9 @@ def run_lm(args):
 
     ckpt = CheckpointManager(args.ckpt_dir, keep=2)
     hb = Heartbeat(args.ckpt_dir, "worker0")
-    start = 0
-    latest = ckpt.latest_step()
+    (params, opt), _, latest = ckpt.restore_latest((params, opt))
+    start = latest or 0
     if latest is not None:
-        (params, opt), extra = ckpt.restore(latest, (params, opt))
-        start = latest
         print(f"[train] resumed from step {start}")
 
     data = SyntheticTokens(vocab=spec.vocab, seq=args.seq,
@@ -68,28 +81,150 @@ def run_lm(args):
 
 
 def run_gs(args):
-    from repro.core.pipeline import PipelineCfg, run_pipeline
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs.gs_datasets import get_gs_dataset
+    from repro.core import merge as merge_mod
+    from repro.core import metrics
+    from repro.core.cameras import orbital_rig
+    from repro.core.distributed import fit_partitions
+    from repro.core.partition import partition_points
+    from repro.core.pipeline import (build_scene, coverage_masks,
+                                     gt_gaussians, init_partition_gaussians,
+                                     render_views)
+    from repro.core.tiling import TileGrid
     from repro.core.train import GSTrainCfg
     from repro.runtime import CheckpointManager
 
-    cfg = PipelineCfg(
-        dataset=args.dataset, tier="full" if args.full else "cpu",
-        n_parts=args.parts, resolution=args.resolution, steps=args.steps,
-        n_views=args.views, densify_every=args.densify_every,
-        use_ghost=not args.no_ghost, use_mask=not args.no_mask,
-        train=GSTrainCfg(), seed=args.seed,
-    )
+    if args.smoke:
+        # tiny full-lifecycle config: 2 partitions, small scene, densify
+        # mid-run so the probe -> train -> densify -> re-probe loop (and a
+        # checkpointed schedule) is exercised end to end on forced host
+        # devices.  --steps/--ckpt-dir stay caller-controlled so CI can run
+        # the resume path with a second invocation.
+        args.dataset = "sphere_shell"
+        args.parts = 2
+        args.resolution = min(args.resolution, 32)
+        args.views = args.views or 4
+        args.view_batch = args.view_batch or 2
+        if args.densify_every == 0:
+            args.densify_every, args.densify_from = 2, 1
+        if args.ckpt_every == 0:
+            args.ckpt_every = 2
+
+    cfg = GSTrainCfg(view_batch=args.view_batch or 1)
+    ds = get_gs_dataset(args.dataset, "full" if args.full else "cpu")
+    n_views = args.views or ds.n_views
+    points, colors, extent = build_scene(ds, args.seed)
+    center = 0.5 * (points.max(0) + points.min(0))
+    radius = 1.6 * extent / 2 + 1e-3
+    W = H = args.resolution
+    grid = TileGrid(W, H, cfg.tile_h, cfg.tile_w)
+    cams = orbital_rig(n_views, center, radius, width=W, height=H)
+
+    # partition (+ ghost halo) -> equal-capacity batched (P, N) layout
+    ghost_w = ds.ghost_frac * extent if not args.no_ghost else 0.0
+    parts, _ = partition_points(points, colors, args.parts,
+                                ghost_width=ghost_w)
+
+    n_dev = len(jax.devices())
+    if args.mesh:
+        p, v = (int(x) for x in args.mesh.lower().split("x"))
+        if p * v != n_dev:
+            raise SystemExit(f"--mesh {args.mesh} needs {p * v} devices, "
+                             f"have {n_dev} (try --host-devices {p * v})")
+    else:
+        # widest "view" axis the EFFECTIVE minibatch supports (the driver
+        # clamps view_batch to the view count); the rest go to "part"
+        v = math.gcd(max(1, min(cfg.view_batch, n_views)), n_dev)
+        p = n_dev // v
+    mesh = jax.make_mesh((p, v), ("part", "view"))
+
+    base = max(len(pd.points) for pd in parts)
+    cap = int(base * ds.capacity_factor) if args.densify_every else base
+    cap = -(-cap // p) * p          # "part"-shardable capacity
+    g = jax.tree.map(lambda *xs: jnp.stack(xs),
+                     *[init_partition_gaussians(pd, capacity=cap)
+                       for pd in parts])
+
+    # per-partition GT renders of own (+ghost) data and coverage masks.
+    # Training GT is rendered at bg=0: the distributed tile loss compares
+    # RAW premultiplied color tiles (no background composite), so a
+    # white-composited target would carry a bias the prediction can never
+    # produce (the driver parity tests pin the same convention); the
+    # white-background renders stay eval-only below.
+    gts, masks = [], []
+    for pd in parts:
+        part_gt, part_cov = render_views(
+            gt_gaussians(pd.points, pd.colors), cams, grid, K=cfg.K,
+            bg=0.0)
+        gts.append(part_gt)
+        if not args.no_mask:
+            masks.append(coverage_masks(part_cov))
+    gts = jnp.asarray(np.stack(gts))
+    masks = None if args.no_mask else jnp.asarray(np.stack(masks))
+
+    kt = cfg.resolved_k_tiers()
     print(f"[train-gs] dataset={args.dataset} parts={args.parts} "
-          f"res={args.resolution} ghost={cfg.use_ghost} mask={cfg.use_mask}")
-    res = run_pipeline(cfg)
+          f"res={args.resolution} views={n_views} mesh={p}x{v} "
+          f"({n_dev} devices) ghost={not args.no_ghost} "
+          f"mask={not args.no_mask} raster="
+          f"{'tiered ' + str(kt) if kt else 'dense K=' + str(cfg.assign_K)}")
+
     ckpt = CheckpointManager(args.ckpt_dir, keep=2)
-    for p, g in enumerate(res.parts):
-        ckpt.save(args.steps, g, partition=p,
-                  extra={"dataset": args.dataset, "psnr": res.psnr})
-    print(f"[train-gs] PSNR {res.psnr:.2f}  SSIM {res.ssim:.4f}  "
-          f"grad_sim {res.grad_sim:.4f}  gaussians {res.n_gaussians:,}")
-    print(f"[train-gs] per-partition train time "
-          f"{[round(t,1) for t in res.train_seconds]}s")
+    latest = ckpt.latest_restorable_step()
+    if latest is not None:
+        print(f"[train-gs] resuming from checkpoint step {latest} "
+              f"(schedule restored, no re-probe)")
+    sched = cfg.tier_schedule()
+    t0 = time.perf_counter()
+    g1, _, losses = fit_partitions(
+        g, cams, gts, masks, cfg, mesh=mesh, steps=args.steps,
+        extent=extent, key=jax.random.PRNGKey(args.seed),
+        densify_every=args.densify_every, densify_from=args.densify_from,
+        grid=grid, schedule=sched, ckpt=ckpt, ckpt_every=args.ckpt_every,
+        log_every=args.log_every)
+    train_s = time.perf_counter() - t0
+    # a restored checkpoint may already be PAST --steps; label everything
+    # downstream (log line, per-partition checkpoints) with the step the
+    # parameters actually correspond to
+    done = max(args.steps, latest or 0)
+    if losses:
+        print(f"[train-gs] trained steps {latest or 0}->{done} "
+              f"({len(losses)} ran, {train_s:.1f}s)  "
+              f"final loss {losses[-1]:.4f}")
+    else:
+        print(f"[train-gs] checkpoint already at step {done}; "
+              f"skipping to merge")
+    if sched is not None:
+        print(f"[train-gs] schedule: {sched}")
+
+    # per-partition checkpoints (paper's O(1/n) failure recovery), then the
+    # global reconstruction: merge -> render -> metrics
+    host = jax.device_get(g1)
+    part_list = [jax.tree.map(lambda x: x[i], host)
+                 for i in range(args.parts)]
+    pckpt = CheckpointManager(os.path.join(args.ckpt_dir, "partitions"),
+                              keep=2)
+    for pid, gp in enumerate(part_list):
+        pckpt.save(done, gp, partition=pid,
+                   extra={"dataset": args.dataset})
+
+    merged = merge_mod.merge_partitions(part_list,
+                                        [pd.part_id for pd in parts])
+    gt_imgs, _ = render_views(gt_gaussians(points, colors), cams, grid,
+                              K=cfg.K)
+    renders, _ = render_views(merged, cams, grid, K=cfg.K)
+    ps = float(np.mean([metrics.psnr(jnp.asarray(renders[i]),
+                                     jnp.asarray(gt_imgs[i]))
+                        for i in range(n_views)]))
+    ss = float(np.mean([metrics.ssim(jnp.asarray(renders[i]),
+                                     jnp.asarray(gt_imgs[i]))
+                        for i in range(n_views)]))
+    print(f"[train-gs] PSNR {ps:.2f}  SSIM {ss:.4f}  "
+          f"gaussians {int(np.asarray(merged.active).sum()):,}")
 
 
 def main():
@@ -98,7 +233,9 @@ def main():
     # LM
     ap.add_argument("--arch", default="minicpm-2b")
     ap.add_argument("--smoke", action="store_true",
-                    help="reduced same-family config (CPU)")
+                    help="LM: reduced same-family config (CPU); GS: tiny "
+                         "full-lifecycle run (2 parts, small scene, densify "
+                         "+ checkpoint on)")
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--kv-chunk", type=int, default=128)
@@ -111,7 +248,14 @@ def main():
     ap.add_argument("--parts", type=int, default=2)
     ap.add_argument("--resolution", type=int, default=64)
     ap.add_argument("--views", type=int, default=None)
+    ap.add_argument("--view-batch", type=int, default=None,
+                    help="views per minibatch step (sharded over the mesh's "
+                         "'view' axis; must divide by its size)")
+    ap.add_argument("--mesh", default=None,
+                    help="PARTxVIEW device mesh shape, e.g. 2x2 (default: "
+                         "widest 'view' axis the view batch supports)")
     ap.add_argument("--densify-every", type=int, default=0)
+    ap.add_argument("--densify-from", type=int, default=100)
     ap.add_argument("--no-ghost", action="store_true")
     ap.add_argument("--no-mask", action="store_true")
     # common
@@ -120,7 +264,15 @@ def main():
     ap.add_argument("--ckpt-dir", default="checkpoints")
     ap.add_argument("--ckpt-every", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--host-devices", type=int, default=0,
+                    help="force N host-backed CPU devices (applied BEFORE "
+                         "jax import; lets the distributed GS driver run "
+                         "its real multi-device mesh on one machine/CI)")
     args = ap.parse_args()
+    if args.host_devices:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.host_devices} "
+            + os.environ.get("XLA_FLAGS", ""))
     (run_gs if args.gs else run_lm)(args)
 
 

@@ -100,23 +100,65 @@ class CheckpointManager:
 
     # ------------------------------------------------------------------
 
-    def all_steps(self):
+    def all_steps(self, partition: Optional[int] = None):
+        """Complete checkpoint steps, ascending.  ``partition=None`` counts
+        a step complete when the root OR any partition subtree committed
+        (retention semantics); ``partition=k`` counts only steps where THAT
+        partition's own subtree committed — per-partition saves are
+        independent, so one partition's progress must not advertise a step
+        its peers never wrote."""
         out = []
         for name in sorted(os.listdir(self.root)):
             if not name.startswith("step_") or name.endswith(".tmp"):
                 continue
             d = os.path.join(self.root, name)
-            complete = os.path.exists(os.path.join(d, "_COMPLETE")) or any(
-                os.path.exists(os.path.join(d, p, "_COMPLETE"))
-                for p in os.listdir(d) if p.startswith("partition_")
-            )
+            if partition is not None:
+                complete = os.path.exists(os.path.join(
+                    d, f"partition_{partition}", "_COMPLETE"))
+            else:
+                complete = os.path.exists(os.path.join(d, "_COMPLETE")) \
+                    or any(
+                        os.path.exists(os.path.join(d, p, "_COMPLETE"))
+                        for p in os.listdir(d) if p.startswith("partition_")
+                    )
             if complete:
                 out.append(int(name[5:]))
         return out
 
-    def latest_step(self) -> Optional[int]:
-        steps = self.all_steps()
+    def latest_step(self, partition: Optional[int] = None) -> Optional[int]:
+        steps = self.all_steps(partition)
         return steps[-1] if steps else None
+
+    def latest_restorable_step(self,
+                               partition: Optional[int] = None
+                               ) -> Optional[int]:
+        """Newest step whose EXACT target tree committed: the root tree for
+        ``partition=None``, that partition's subtree otherwise.  This is
+        stricter than ``latest_step(None)``, which (for retention) counts a
+        step complete when ANY partition committed — restoring the root
+        tree from such a step would fail."""
+        for s in reversed(self.all_steps(partition)):
+            if os.path.exists(os.path.join(self._step_dir(s, partition),
+                                           "_COMPLETE")):
+                return s
+        return None
+
+    def restore_latest(self, like: Any, *, partition: Optional[int] = None,
+                       shardings: Any = None):
+        """Restore the newest RESTORABLE checkpoint: (tree, extra, step).
+
+        None restorable (for THIS tree/partition) -> ``(like, {}, None)``
+        — callers can unpack unconditionally and branch on ``step is
+        None`` (the resume idiom of train.fit_partition /
+        core.distributed.fit_partitions).  A directory holding only
+        per-partition saves is NOT restorable as a root tree (and vice
+        versa): such steps are skipped rather than crashing mid-restore."""
+        step = self.latest_restorable_step(partition)
+        if step is None:
+            return like, {}, None
+        tree, extra = self.restore(step, like, partition=partition,
+                                   shardings=shardings)
+        return tree, extra, step
 
     def restore(self, step: int, like: Any, *,
                 partition: Optional[int] = None, shardings: Any = None):

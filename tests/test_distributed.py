@@ -14,6 +14,28 @@ import pytest
 
 SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
 
+
+def test_tile_view_batches_masks_none_excludes_grid_padding():
+    """masks=None means "every IMAGE pixel" — grid padding (resolution not
+    a tile multiple) must be masked OFF, matching the single-device
+    full-image loss, which never sees pad pixels."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.distributed import _tile_view_batches
+    from repro.core.tiling import TileGrid
+
+    grid = TileGrid(20, 12, 8, 16)      # pads to 16 x 32
+    gts = np.random.default_rng(0).random((1, 2, 12, 20, 3)).astype("f4")
+    gt_t, mask_t = _tile_view_batches(jnp.asarray(gts), None, grid)
+    assert gt_t.shape == (2, grid.n_tiles, 3, 8, 16)
+    assert mask_t.shape == (2, grid.n_tiles, 8, 16)
+    assert int(mask_t.sum()) == 2 * 12 * 20      # image pixels only
+    # explicit all-ones masks land on the identical tiling
+    ones = jnp.ones((1, 2, 12, 20), bool)
+    _, mask_t2 = _tile_view_batches(jnp.asarray(gts), ones, grid)
+    np.testing.assert_array_equal(mask_t, mask_t2)
+
 SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -455,3 +477,156 @@ def test_2d_mesh_step_matches_1d_and_single_device(tmp_path):
     assert "M2D-STEP-MATCH" in out.stdout
     assert "M2D-DEFAULT-TIERED" in out.stdout
     assert "M2D-DIVISIBILITY" in out.stdout
+
+
+DRIVER_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import sys
+sys.path.insert(0, r"%(src)s")
+import jax, jax.numpy as jnp
+import numpy as np
+
+from repro.core.cameras import orbital_rig
+from repro.core.distributed import fit_partitions
+from repro.core.gaussians import from_points
+from repro.core.pipeline import render_views
+from repro.core.tiling import TileGrid
+from repro.core.train import GSTrainCfg, fit_partition
+from repro.data.isosurface import point_cloud_for
+from repro.runtime import CheckpointManager
+
+N, res, V = 256, 32, 4
+pts, cols = point_cloud_for("sphere_shell", N)
+pts, cols = pts[:N], cols[:N]
+cams = orbital_rig(V, (0.5, 0.5, 0.5), 1.6, width=res, height=res)
+mesh = jax.make_mesh((2, 2), ("part", "view"))
+grid = TileGrid(res, res, 8, 16)
+
+# GT rendered at bg=0: the distributed tile loss compares RAW premultiplied
+# color tiles (no background composite), so the single-device reference
+# must train with bg=0 too
+g_gt = from_points(jnp.asarray(pts), jnp.asarray(cols), opacity=0.95)
+gts = jnp.asarray(render_views(g_gt, cams, grid, K=16, bg=0.0)[0])
+masks = jnp.ones((V, res, res), bool)
+g0 = from_points(jnp.asarray(pts), jnp.asarray(cols), capacity=N + 128,
+                 opacity=0.7)
+g_b = jax.tree.map(lambda x: x[None], g0)           # (P=1, N) batched
+
+def check(tag, single, dist):
+    gs_1, _, l1 = single
+    gs_2, _, l2 = dist
+    np.testing.assert_allclose(l1, l2, rtol=1e-5, atol=1e-6, err_msg=tag)
+    for k, v in gs_1.trainable().items():
+        np.testing.assert_allclose(
+            np.asarray(v), np.asarray(getattr(gs_2, k))[0],
+            rtol=1e-6, atol=1e-6, err_msg=f"{tag}:{k}")
+    assert int(np.asarray(gs_1.active).sum()) \
+        == int(np.asarray(gs_2.active).sum()), tag
+    print(tag, [round(l, 5) for l in l2])
+
+# ---- TierSchedule lifecycle parity: probe -> train -> densify -> re-probe
+# on the 2-D mesh == fit_partition's single-device loop, step for step.
+# lambda_dssim=0 isolates the masked-L1 term, which is tile-layout
+# invariant (the D-SSIM term is per-tile windowed by construction on the
+# distributed path — pinned separately below on a one-tile grid).  A
+# trajectory match at 1e-6 through two densify events also proves the
+# probed caps never overflowed (a dropped tile would shift the loss).
+cfg = GSTrainCfg(K=16, lambda_dssim=0.0, bg=0.0, view_batch=2,
+                 lr_colors=5e-2, max_new=64, densify_grad_thresh=1e-9)
+kw = dict(steps=6, extent=1.0, densify_every=3, densify_from=0, grid=grid)
+check("TIERED-LIFECYCLE-PARITY",
+      fit_partition(g0, cams, gts, masks, cfg, key=jax.random.PRNGKey(1),
+                    **kw),
+      fit_partitions(g_b, cams, gts[None], masks[None], cfg, mesh=mesh,
+                     key=jax.random.PRNGKey(1), **kw))
+
+# ---- dense escape hatch: same driver loop, no schedule ----
+cfg_d = GSTrainCfg(K=16, dense_k=16, lambda_dssim=0.0, bg=0.0,
+                   view_batch=2, lr_colors=5e-2)
+assert cfg_d.tier_schedule() is None
+kw = dict(steps=3, extent=1.0, grid=grid)
+check("DENSE-PARITY",
+      fit_partition(g0, cams, gts, masks, cfg_d, key=jax.random.PRNGKey(3),
+                    **kw),
+      fit_partitions(g_b, cams, gts[None], masks[None], cfg_d, mesh=mesh,
+                     key=jax.random.PRNGKey(3), **kw))
+
+# ---- full loss (L1 + D-SSIM): a single tile covering the image makes the
+# per-tile windowed D-SSIM identical to gs_loss's full-image win-11 SSIM,
+# so the complete loss trajectory must match too ----
+grid1 = TileGrid(res, res, res, res)
+cfg1 = GSTrainCfg(K=16, lambda_dssim=0.2, bg=0.0, view_batch=2,
+                  tile_h=res, tile_w=res, lr_colors=5e-2)
+kw = dict(steps=3, extent=1.0, grid=grid1)
+check("FULL-LOSS-PARITY",
+      fit_partition(g0, cams, gts, masks, cfg1, key=jax.random.PRNGKey(2),
+                    **kw),
+      fit_partitions(g_b, cams, gts[None], masks[None], cfg1, mesh=mesh,
+                     key=jax.random.PRNGKey(2), win_size=11, **kw))
+
+# ---- checkpoint/resume: an interrupted driver run resumes with the saved
+# schedule (no re-probe) and reproduces the uninterrupted loss curve ----
+import tempfile
+cfg = GSTrainCfg(K=16, lambda_dssim=0.0, bg=0.0, view_batch=2,
+                 lr_colors=5e-2, max_new=64, densify_grad_thresh=1e-9)
+kw = dict(mesh=mesh, extent=1.0, densify_every=3, densify_from=0, grid=grid)
+ck_a = CheckpointManager(tempfile.mkdtemp(), keep=0)
+_, _, full = fit_partitions(g_b, cams, gts[None], masks[None], cfg,
+                            key=jax.random.PRNGKey(1), steps=6,
+                            ckpt=ck_a, ckpt_every=3, **kw)
+ck_b = CheckpointManager(tempfile.mkdtemp(), keep=0)
+sched_b = cfg.tier_schedule()
+fit_partitions(g_b, cams, gts[None], masks[None], cfg,
+               key=jax.random.PRNGKey(1), steps=3, ckpt=ck_b,
+               ckpt_every=3, schedule=sched_b, **kw)
+saved_caps = sched_b.tier_caps
+sched_c = cfg.tier_schedule()
+g_r, _, resumed = fit_partitions(
+    g_b, cams, gts[None], masks[None], cfg, key=jax.random.PRNGKey(1),
+    steps=6, ckpt=ck_b, ckpt_every=3, schedule=sched_c, **kw)
+assert len(resumed) == 3, resumed
+np.testing.assert_allclose(resumed, full[3:], rtol=1e-6, atol=1e-7)
+print("DRIVER-RESUME-MATCH", [round(l, 5) for l in resumed])
+"""
+
+
+@pytest.mark.slow
+def test_distributed_driver_matches_fit_partition(tmp_path):
+    """The distributed tier-schedule driver (core.distributed.fit_partitions)
+    on the 4-device ("part", "view") mesh reproduces the single-device
+    fit_partition trajectory at 1e-6 — tiered (full probe/densify/re-probe
+    lifecycle) and dense, L1-only and full loss (one-tile grid, win-11
+    D-SSIM == full-image gs_loss) — and resumes from a mid-run checkpoint
+    onto the uninterrupted loss curve without re-probing."""
+    code = DRIVER_SCRIPT % {"src": SRC}
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=900)
+    assert out.returncode == 0, (out.stdout[-2000:], out.stderr[-3000:])
+    assert "TIERED-LIFECYCLE-PARITY" in out.stdout
+    assert "DENSE-PARITY" in out.stdout
+    assert "FULL-LOSS-PARITY" in out.stdout
+    assert "DRIVER-RESUME-MATCH" in out.stdout
+
+
+@pytest.mark.slow
+def test_gs_cli_driver_smoke_and_resume(tmp_path):
+    """`python -m repro.launch.train --gs --smoke` on 4 forced host devices
+    runs the full partition -> tiered distributed training -> checkpoint ->
+    merge -> render lifecycle, and a second invocation resumes from the
+    saved checkpoint (restored TierSchedule, no re-probe)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    base = [sys.executable, "-m", "repro.launch.train", "--gs", "--smoke",
+            "--host-devices", "4", "--ckpt-dir", str(tmp_path)]
+    out = subprocess.run(base + ["--steps", "2"], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, (out.stdout[-2000:], out.stderr[-3000:])
+    assert "raster=tiered" in out.stdout
+    assert "PSNR" in out.stdout
+    out2 = subprocess.run(base + ["--steps", "3"], env=env,
+                          capture_output=True, text=True, timeout=900)
+    assert out2.returncode == 0, (out2.stdout[-2000:], out2.stderr[-3000:])
+    assert "resuming from checkpoint step 2" in out2.stdout
+    assert "PSNR" in out2.stdout

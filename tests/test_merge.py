@@ -1,0 +1,148 @@
+"""Merge-path coverage: merge_partitions / merge_padded / dedupe_mask vs a
+brute-force oracle (paper §II step 6).
+
+The contract: at merge time a partition contributes exactly its ACTIVE,
+OWNED gaussians (ghosts carry their source partition id and are the
+neighbour's responsibility), so every source gaussian appears exactly once
+in the merged scene — including densified children (which inherit the
+parent's owner) and through the padded jit-friendly variant.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.gaussians import Gaussians, from_points
+from repro.core.merge import dedupe_mask, merge_padded, merge_partitions
+
+
+def make_part(key, n, part_id, *, ghost_ids=(), inactive=()):
+    """A partition buffer: owner == part_id except ``ghost_ids`` rows, which
+    carry a neighbour's id; ``inactive`` rows are masked off."""
+    ks = jax.random.split(key, 3)
+    owner = np.full((n,), part_id, np.int32)
+    for i, src in ghost_ids:
+        owner[i] = src
+    active = np.ones((n,), bool)
+    for i in inactive:
+        active[i] = False
+    return Gaussians(
+        means=jax.random.normal(ks[0], (n, 3)),
+        log_scales=jax.random.normal(ks[1], (n, 3)) * 0.1,
+        quats=jnp.tile(jnp.array([1.0, 0, 0, 0]), (n, 1)),
+        opacity_logit=jax.random.normal(ks[2], (n,)),
+        colors=jnp.zeros((n, 3)),
+        active=jnp.asarray(active),
+        owner=jnp.asarray(owner),
+    )
+
+
+def oracle_merge(parts, part_ids):
+    """Brute-force row-by-row reference: walk every partition in order and
+    keep each row iff active and owned."""
+    rows = {k: [] for k in Gaussians._fields}
+    for pid, g in zip(part_ids, parts):
+        for i in range(g.capacity):
+            if bool(g.active[i]) and int(g.owner[i]) == pid:
+                for k in Gaussians._fields:
+                    rows[k].append(np.asarray(getattr(g, k)[i]))
+    return {k: (np.stack(v) if v else np.zeros((0,))) for k, v in rows.items()}
+
+
+@pytest.fixture
+def three_parts():
+    key = jax.random.PRNGKey(0)
+    k0, k1, k2 = jax.random.split(key, 3)
+    # p0: plain; p1: carries two ghosts sourced from p0 and p2 plus a dead
+    # slot; p2: a ghost from p1 that is ALSO inactive (must drop for both
+    # reasons)
+    p0 = make_part(k0, 5, 0)
+    p1 = make_part(k1, 6, 1, ghost_ids=[(0, 0), (3, 2)], inactive=(4,))
+    p2 = make_part(k2, 4, 2, ghost_ids=[(1, 1), (1, 1)], inactive=(1,))
+    return [p0, p1, p2], [0, 1, 2]
+
+
+def test_dedupe_mask_is_active_and_owned(three_parts):
+    parts, ids = three_parts
+    for g, pid in zip(parts, ids):
+        want = np.asarray(g.active) & (np.asarray(g.owner) == pid)
+        np.testing.assert_array_equal(np.asarray(dedupe_mask(g, pid)), want)
+
+
+def test_merge_partitions_matches_bruteforce_oracle(three_parts):
+    parts, ids = three_parts
+    merged = merge_partitions(parts, ids)
+    want = oracle_merge(parts, ids)
+    assert merged.capacity == len(want["means"])
+    for k in Gaussians._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(merged, k)),
+                                      want[k], err_msg=k)
+    # every merged gaussian is owned by its contributor: no ghost survives
+    assert bool(merged.active.all())
+
+
+def test_merge_partitions_ghost_dedupe_exactly_once():
+    """The SAME physical gaussian replicated into a neighbour as a ghost
+    appears exactly once in the merged scene."""
+    pts = np.array([[0.1, 0.2, 0.3], [0.7, 0.8, 0.9]], np.float32)
+    cols = np.full((2, 3), 0.5, np.float32)
+    # partition 0 owns both points; partition 1 holds a ghost COPY of row 1
+    p0 = from_points(jnp.asarray(pts), jnp.asarray(cols), owner_id=0)
+    p1 = from_points(jnp.asarray(pts[1:]), jnp.asarray(cols[1:]), owner_id=0)
+    merged = merge_partitions([p0, p1], [0, 1])
+    assert merged.capacity == 2
+    np.testing.assert_allclose(np.asarray(merged.means), pts)
+
+
+def test_merge_padded_matches_unpadded_on_live_rows(three_parts):
+    parts, ids = three_parts
+    compact = merge_partitions(parts, ids)
+    padded = merge_padded(parts, ids)
+    assert padded.capacity == sum(g.capacity for g in parts)
+    live = np.asarray(padded.active)
+    assert live.sum() == compact.capacity
+    for k in Gaussians._fields:
+        if k == "active":
+            continue
+        np.testing.assert_array_equal(
+            np.asarray(getattr(padded, k))[live],
+            np.asarray(getattr(compact, k)), err_msg=k)
+    # explicit capacity pads with INACTIVE zero rows
+    padded2 = merge_padded(parts, ids, capacity=32)
+    assert padded2.capacity == 32
+    assert np.asarray(padded2.active)[15:].sum() == 0
+    np.testing.assert_array_equal(
+        np.asarray(padded2.means)[np.asarray(padded2.active)],
+        np.asarray(getattr(padded, "means"))[live])
+    # a capacity below the concatenated size is a loud error, not a crop
+    with pytest.raises(AssertionError):
+        merge_padded(parts, ids, capacity=8)
+
+
+def test_merge_empty_partition_contributes_nothing(three_parts):
+    parts, ids = three_parts
+    # an all-ghost partition (nothing owned) and an all-dead partition
+    all_ghost = make_part(jax.random.PRNGKey(7), 3, 3,
+                          ghost_ids=[(0, 0), (1, 1), (2, 2)])
+    all_dead = make_part(jax.random.PRNGKey(8), 3, 4,
+                         inactive=(0, 1, 2))
+    merged = merge_partitions(parts + [all_ghost, all_dead], ids + [3, 4])
+    base = merge_partitions(parts, ids)
+    assert merged.capacity == base.capacity
+    for k in Gaussians._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(merged, k)),
+                                      np.asarray(getattr(base, k)),
+                                      err_msg=k)
+    # padded variant keeps the dead slots but none of them are active
+    padded = merge_padded(parts + [all_ghost, all_dead], ids + [3, 4])
+    assert int(np.asarray(padded.active).sum()) == base.capacity
+
+
+def test_merge_default_part_ids_are_positional(three_parts):
+    parts, ids = three_parts
+    a = merge_partitions(parts)            # ids default to 0..P-1
+    b = merge_partitions(parts, ids)
+    for k in Gaussians._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(a, k)),
+                                      np.asarray(getattr(b, k)))

@@ -79,6 +79,33 @@ def test_per_partition_checkpoints(tmp_path):
         assert int(got["x"][0]) == p
 
 
+def test_restore_latest_is_partition_aware(tmp_path):
+    """Partitions checkpoint independently: a lagging partition must resume
+    from ITS OWN newest step, not crash on a step a faster peer advertised
+    (all_steps(partition=None) keeps the any-partition retention view)."""
+    mgr = CheckpointManager(str(tmp_path), keep=0)
+    like = {"x": jnp.zeros((2,))}
+    mgr.save(10, {"x": jnp.ones((2,))}, partition=0)
+    mgr.save(10, {"x": jnp.ones((2,)) * 2}, partition=1)
+    mgr.save(20, {"x": jnp.ones((2,)) * 3}, partition=0)
+    got, _, step = mgr.restore_latest(like, partition=1)   # p1 lags at 10
+    assert step == 10 and float(got["x"][0]) == 2
+    got, _, step = mgr.restore_latest(like, partition=0)
+    assert step == 20 and float(got["x"][0]) == 3
+    _, _, step = mgr.restore_latest(like, partition=2)     # never saved
+    assert step is None
+    assert mgr.latest_step() == 20          # retention still sees every step
+    assert mgr.all_steps(partition=1) == [10]
+    # a dir holding ONLY per-partition saves is not restorable as a root
+    # tree: restore_latest must skip those steps (start fresh), not crash
+    # on restore()'s root _COMPLETE assert
+    got, _, step = mgr.restore_latest(like)
+    assert step is None and got is like
+    mgr.save(15, {"x": jnp.ones((2,)) * 7})                # root save
+    got, _, step = mgr.restore_latest(like)                # 20 is p0-only:
+    assert step == 15 and float(got["x"][0]) == 7          # skipped
+
+
 def test_bounded_staleness_merge(tmp_path):
     mgr = CheckpointManager(str(tmp_path), keep=0)
     like = {"x": jnp.zeros((2,))}
@@ -120,6 +147,97 @@ def test_heartbeat_staleness(tmp_path):
     rec["time"] -= 120
     open(p, "w").write(json.dumps(rec))
     assert hb0.stale(timeout=60) == ["w1"]
+
+
+def _tiny_fit_setup():
+    import jax.numpy as jnp
+    from repro.core.cameras import orbital_rig
+    from repro.core.gaussians import from_points
+    from repro.core.tiling import TileGrid
+    from repro.core.train import GSTrainCfg
+    from repro.data.isosurface import point_cloud_for
+
+    N, res, V = 128, 32, 2
+    pts, cols = point_cloud_for("sphere_shell", N)
+    pts, cols = pts[:N], cols[:N]
+    cams = orbital_rig(V, (0.5, 0.5, 0.5), 1.6, width=res, height=res)
+    grid = TileGrid(res, res, 8, 16)
+    cfg = GSTrainCfg(K=8, lr_colors=5e-2, max_new=32,
+                     densify_grad_thresh=1e-9)
+    g0 = from_points(jnp.asarray(pts), jnp.asarray(cols), capacity=N + 64,
+                     opacity=0.7)
+    gts = jnp.full((V, res, res, 3), 0.5)
+    return g0, cams, gts, cfg, grid
+
+
+def test_restore_latest_convenience(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    like = {"x": jnp.zeros((3,))}
+    got, extra, step = mgr.restore_latest(like)
+    assert step is None and extra == {} and got is like
+    mgr.save(4, {"x": jnp.ones((3,))}, extra={"k": 1})
+    got, extra, step = mgr.restore_latest(like)
+    assert step == 4 and extra == {"k": 1}
+    assert float(got["x"][0]) == 1.0
+
+
+def test_fit_partition_checkpoint_roundtrip_resumes_schedule(tmp_path,
+                                                            monkeypatch):
+    """Mid-lifecycle save/restore of (params, opt, TierSchedule): the
+    resumed run keeps the checkpointed caps (NO init re-probe — counted via
+    a monkeypatched probe), and its loss curve equals the uninterrupted
+    run's tail."""
+    from repro.core import train as train_mod
+    from repro.core.train import fit_partition
+
+    g0, cams, gts, cfg, grid = _tiny_fit_setup()
+    kw = dict(steps=6, extent=1.0, densify_every=2, densify_from=0,
+              grid=grid, ckpt_every=3)
+
+    # uninterrupted reference run (saves at steps 3 and 6)
+    s_full = cfg.tier_schedule()
+    _, _, losses_full = fit_partition(
+        g0, cams, gts, None, cfg, key=jax.random.PRNGKey(0),
+        schedule=s_full, ckpt=CheckpointManager(str(tmp_path / "full")),
+        **kw)
+    assert len(losses_full) == 6
+
+    # interrupted run: stop at step 3...
+    mgr = CheckpointManager(str(tmp_path / "ab"))
+    s_a = cfg.tier_schedule()
+    fit_partition(g0, cams, gts, None, cfg, key=jax.random.PRNGKey(0),
+                  schedule=s_a, ckpt=mgr, **{**kw, "steps": 3})
+    assert mgr.latest_step() == 3
+
+    # ...the saved schedule state round-trips exactly...
+    from repro.core.tiling import TierSchedule
+    from repro.core.train import init_opt
+    _, extra = mgr.restore(3, (g0, init_opt(g0)))
+    s_saved = TierSchedule.from_state(extra["schedule"])
+    assert s_saved.k_tiers == s_a.k_tiers
+    assert s_saved.tier_caps == s_a.tier_caps
+
+    # ...and the resumed run probes ONLY after densify events (the initial
+    # probe is skipped because the restored schedule already has caps)
+    probes = {"n": 0}
+    real_probe = train_mod.occupancy_probe_jit
+
+    def counting_probe(*a, **k):
+        probes["n"] += 1
+        return real_probe(*a, **k)
+
+    monkeypatch.setattr(train_mod, "occupancy_probe_jit", counting_probe)
+    s_b = cfg.tier_schedule()
+    _, _, losses_resumed = fit_partition(
+        g0, cams, gts, None, cfg, key=jax.random.PRNGKey(0),
+        schedule=s_b, ckpt=mgr, **kw)
+    assert s_b.tier_caps is not None
+    # resume covers steps 3..6: densify events at i=3 and i=5 -> exactly 2
+    # re-probes, zero init probes
+    assert probes["n"] == 2, probes
+    assert len(losses_resumed) == 3
+    np.testing.assert_allclose(losses_resumed, losses_full[3:],
+                               rtol=1e-6, atol=1e-7)
 
 
 ELASTIC_SCRIPT = r"""

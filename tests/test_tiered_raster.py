@@ -85,9 +85,16 @@ def test_binning_rejects_bad_schedules():
 
 
 def test_auto_tier_caps_under_jit_raises_with_guidance():
-    with pytest.raises(TypeError, match="static tier_caps"):
+    """Cap sizing under tracing must fail LOUDLY with the fix recipe (caps
+    are static shapes), naming both the single-device probe idiom and the
+    distributed probe_counts path — not a bare TypeError."""
+    with pytest.raises(TypeError) as e:
         jax.jit(lambda o: auto_tier_caps(o, (8, 16)))(
             jnp.zeros((4,), jnp.int32))
+    msg = str(e.value)
+    assert "auto_tier_caps" in msg
+    assert "STATIC" in msg and "outside the traced computation" in msg
+    assert "occupancy_probe_jit" in msg and "probe_counts" in msg
 
 
 # ---------------------------------------------------------------------------
@@ -274,9 +281,68 @@ def test_tier_schedule_rejects_bad_ladder_and_tracers():
         TierSchedule((16, 16))
     with pytest.raises(ValueError):
         TierSchedule(())
-    with pytest.raises(TypeError, match="concrete"):
+    # the probe under tracing is the classic foot-gun (e.g. calling it
+    # inside a jitted train loop): the error must name the caller and ship
+    # the documented recipe, under jit AND under vmap/grad alike
+    with pytest.raises(TypeError) as e:
         jax.jit(lambda o: TierSchedule((4, 16)).probe(o))(
             jnp.zeros((4,), jnp.int32))
+    msg = str(e.value)
+    assert "TierSchedule.probe" in msg
+    assert "outside the traced computation" in msg
+    assert "probe_counts" in msg          # the distributed-mesh recipe
+    with pytest.raises(TypeError, match="TierSchedule.probe"):
+        jax.vmap(lambda o: jnp.float32(
+            TierSchedule((4, 16)).probe(o)[1][0]))(
+            jnp.zeros((2, 4), jnp.int32))
+    with pytest.raises(TypeError, match="probe_counts"):
+        jax.jit(lambda c: TierSchedule((4, 16)).probe_counts(
+            c, 3, n_tiles=8))(jnp.zeros((2,), jnp.int32))
+
+
+def test_tier_schedule_probe_counts_matches_probe():
+    """probe_counts is the reduced-telemetry twin of probe: feeding it the
+    per-tier worst-slice counts + max occupancy (what the distributed
+    pmax reduction produces) must land on the same (k_tiers, tier_caps)."""
+    from repro.core.tiling import _tier_counts
+    occ = jnp.asarray([[0, 3, 10, 70, 3], [5, 5, 5, 5, 9]], jnp.int32)
+    for trim in (False, True):
+        a = TierSchedule((4, 16, 64), trim=trim)
+        b = TierSchedule((4, 16, 64), trim=trim)
+        a.probe(occ)
+        counts, mx = _tier_counts(occ, b.ladder)
+        b.probe_counts(counts, mx, n_tiles=occ.shape[-1])
+        assert a.k_tiers == b.k_tiers
+        assert a.tier_caps == b.tier_caps
+    with pytest.raises(ValueError, match="FULL ladder"):
+        TierSchedule((4, 16, 64)).probe_counts([1, 2], 3, n_tiles=8)
+
+
+def test_tier_schedule_state_roundtrip():
+    """state_dict/load_state/from_state: the checkpointed schedule resumes
+    with identical ladder/knobs/active tiers/caps — including through a
+    JSON round-trip (CheckpointManager stores it in the manifest)."""
+    import json
+    sched = TierSchedule((4, 16, 64), slack=1.5, round_to=4, growth=3.0)
+    sched.probe(jnp.asarray([[0, 3, 10, 70], [5, 5, 5, 5]], jnp.int32))
+    sched.note_overflow(2, 100)
+    state = json.loads(json.dumps(sched.state_dict()))
+    back = TierSchedule.from_state(state)
+    assert back.ladder == sched.ladder
+    assert back.k_tiers == sched.k_tiers
+    assert back.tier_caps == sched.tier_caps
+    assert (back.slack, back.round_to, back.growth, back.trim) \
+        == (sched.slack, sched.round_to, sched.growth, sched.trim)
+    # un-probed schedules round-trip too (caps None)
+    fresh = TierSchedule.from_state(TierSchedule((8, 32)).state_dict())
+    assert fresh.tier_caps is None and fresh.k_tiers == (8, 32)
+    # load_state into an existing (differently-constructed) schedule: the
+    # checkpoint wins
+    other = TierSchedule((2, 4), slack=9.9)
+    other.load_state(state)
+    assert other.ladder == sched.ladder and other.tier_caps == sched.tier_caps
+    with pytest.raises(ValueError, match="ladder"):
+        TierSchedule.from_state({**state, "ladder": [16, 16]})
 
 
 def test_trainer_tiered_default_matches_dense_escape_hatch():
