@@ -1,0 +1,199 @@
+"""Tile-assignment benchmark: dense top-K sweep vs sort-based scatter.
+
+The ROADMAP "assignment-dominated" item: tiered rasterization won the
+render phase ~2.5x but end-to-end training time is dominated by
+``assign_tiles``'s dense O(T*N) per-tile sweep.  The sorted path
+(``assign_tiles_sorted``) expands each splat into its overlapped tiles
+under a static per-splat budget B and pays O(N*B log(N*B)) — independent
+of the tile count — which is the production-trainer scaling (Grendel /
+RetinaGS duplicate-and-sort).  This benchmark measures the crossover:
+
+  assignment phase   jitted assign-only closures over a precomputed
+      projection, dense vs sorted, swept over N (table size), sparsity
+      (splat radius -> per-splat tile overlap), and tile count T.  Parity
+      is asserted bit-identically (with overflow 0) before timing — a fast
+      wrong assignment is not a speedup.
+
+  end-to-end train step   ``make_train_step`` wall-clock with
+      cfg.assign_impl = "dense" vs "sorted" on the sparse scene — the
+      number the ROADMAP item asks for (recorded into the JSON the CI
+      bench gate tracks).
+
+Acceptance: the sorted path beats the dense sweep on the sparse high-N
+config (largest N at the largest T in the sweep); exits 1 below
+``--gate-floor``.  Saves JSON under experiments/benchmarks/assign.json.
+
+    PYTHONPATH=src python -m benchmarks.bench_assign [--smoke] [--reps 3]
+        [--gate-floor 1.0]
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import save_result
+from repro.core.cameras import orbital_rig, select
+from repro.core.gaussians import from_points
+from repro.core.projection import project
+from repro.core.tiling import TileGrid, assign_tiles, assign_tiles_sorted
+from repro.core.train import GSTrainCfg, make_train_step, init_opt
+
+
+def _steady(fn, *, reps: int) -> float:
+    jax.block_until_ready(fn())            # warmup: compile + first run
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _scene(n_points: int, *, res: int, scale: float, seed: int = 0):
+    """Uniform point cloud over the frame; ``scale`` is the splat radius in
+    units of the mean point spacing (0.4 = sparse isosurface-like overlap,
+    3.0 = heavy-overlap worst case)."""
+    rng = np.random.default_rng(seed)
+    pts = rng.uniform(0.0, 1.0, (n_points, 3))
+    cols = rng.uniform(0.0, 1.0, (n_points, 3))
+    spacing = 1.0 / max(n_points, 1) ** (1.0 / 3.0)
+    g = from_points(jnp.asarray(pts, jnp.float32), jnp.asarray(cols),
+                    init_scale=scale * spacing, opacity=0.9)
+    cams = orbital_rig(2, (0.5, 0.5, 0.5), 2.6, width=res, height=res)
+    return g, select(cams, 0)
+
+
+def _bench_config(name, *, n_points, res, scale, budget, K, reps):
+    """Time dense vs sorted assignment on one (N, T, sparsity) config."""
+    grid = TileGrid(res, res, 8, 16)
+    g, cam = _scene(n_points, res=res, scale=scale)
+    splats = project(g, cam)
+
+    fn_dense = jax.jit(lambda s: assign_tiles(s, grid, K=K))
+    fn_sorted = jax.jit(lambda s: assign_tiles_sorted(s, grid, K=K,
+                                                      tile_budget=budget))
+    # parity first, bit-identically (overflow must be 0 for the comparison
+    # to be apples-to-apples — grow the config's budget otherwise)
+    i_d, s_d = fn_dense(splats)
+    i_s, s_s, ov = assign_tiles_sorted(splats, grid, K=K, tile_budget=budget,
+                                       return_overflow=True)
+    assert int(ov) == 0, f"{name}: budget {budget} overflowed ({int(ov)})"
+    np.testing.assert_array_equal(np.asarray(s_d), np.asarray(s_s))
+    np.testing.assert_array_equal(np.asarray(i_d), np.asarray(i_s))
+
+    t_d = _steady(lambda: fn_dense(splats), reps=reps)
+    t_s = _steady(lambda: fn_sorted(splats), reps=reps)
+    occ = np.asarray((np.asarray(s_d) > -1e29).sum(-1))
+    print(f"  {name:18s} N={n_points:6d} T={grid.n_tiles:5d} B={budget:3d} "
+          f"dense {t_d*1e3:8.2f} ms  sorted {t_s*1e3:8.2f} ms  "
+          f"({t_d/t_s:5.2f}x)  med-occ "
+          f"{int(np.median(occ[occ > 0])) if (occ > 0).any() else 0}")
+    return {"n_points": n_points, "res": res, "n_tiles": grid.n_tiles,
+            "scale": scale, "tile_budget": budget, "K": K,
+            "t_dense_s": t_d, "t_sorted_s": t_s, "speedup": t_d / t_s}
+
+
+def _bench_train_step(*, n_points, res, steps, reps, K):
+    """End-to-end train-step wall-clock, dense vs sorted assignment (the
+    tiered rasterizer default in both; only the assignment impl differs).
+    The sorted cfg pins an explicit budget VERIFIED to cover the scene
+    (overflow 0) — a fast wrong assignment is not a speedup here either."""
+    grid = TileGrid(res, res, 8, 16)
+    g, cam = _scene(n_points, res=res, scale=0.4)
+    splats = project(g, cam)
+    from repro.core.tiling import splat_tile_counts
+    budget = int(np.asarray(splat_tile_counts(splats, grid)).max())
+    _, _, ov = assign_tiles_sorted(splats, grid, K=K, tile_budget=budget,
+                                   return_overflow=True)
+    assert int(ov) == 0, f"train-step budget {budget} overflowed ({int(ov)})"
+    gt = jnp.zeros((res, res, 3), jnp.float32)
+    out = {}
+    for impl in ("dense", "sorted"):
+        cfg = GSTrainCfg(K=K, assign_impl=impl, assign_budget=budget)
+        step = jax.jit(make_train_step(cfg, grid, extent=1.0))
+        opt = init_opt(g)
+
+        def run(g=g, opt=opt, step=step):
+            gg, oo = g, opt
+            for _ in range(steps):
+                gg, oo, loss = step(gg, oo, cam, gt)
+            return loss
+
+        out[impl] = _steady(run, reps=reps)
+    print(f"  train-step ({steps} steps) N={n_points} T={grid.n_tiles}: "
+          f"dense {out['dense']*1e3:8.1f} ms  sorted "
+          f"{out['sorted']*1e3:8.1f} ms  "
+          f"({out['dense']/out['sorted']:.2f}x)")
+    return {"n_points": n_points, "res": res, "n_tiles": grid.n_tiles,
+            "steps": steps, "K": K, "tile_budget": budget,
+            "t_dense_s": out["dense"], "t_sorted_s": out["sorted"],
+            "speedup": out["dense"] / out["sorted"]}
+
+
+def run(*, reps: int = 3, quick: bool = False, gate_floor: float = 1.0):
+    K = 32
+    if quick:
+        # CI smoke tier: small sweep, the largest config still shows the
+        # scaling (T=512 tiles x 24k splats)
+        configs = [
+            ("sparse-small", dict(n_points=6000, res=128, scale=0.4,
+                                  budget=16)),
+            ("sparse-high-N", dict(n_points=24000, res=256, scale=0.4,
+                                   budget=16)),
+            ("dense-overlap", dict(n_points=6000, res=128, scale=3.0,
+                                   budget=64)),
+        ]
+        train_cfg = dict(n_points=6000, res=128, steps=2)
+    else:
+        configs = [
+            ("sparse-small", dict(n_points=20000, res=128, scale=0.4,
+                                  budget=16)),
+            ("sparse-mid-T", dict(n_points=20000, res=256, scale=0.4,
+                                  budget=16)),
+            ("sparse-high-N", dict(n_points=80000, res=512, scale=0.4,
+                                   budget=16)),
+            ("dense-overlap", dict(n_points=20000, res=256, scale=3.0,
+                                   budget=144)),
+        ]
+        train_cfg = dict(n_points=48000, res=512, steps=2)
+
+    print(f"\n[assign] dense O(T*N) sweep vs sorted O(N*B log) scatter, "
+          f"K={K}, reps={reps}")
+    results = {"K": K, "reps": reps, "configs": {}}
+    for name, c in configs:
+        results["configs"][name] = _bench_config(name, K=K, reps=reps, **c)
+    results["train_step"] = _bench_train_step(K=K, reps=reps, **train_cfg)
+
+    headline = results["configs"]["sparse-high-N"]["speedup"]
+    ok = headline >= gate_floor
+    print(f"  acceptance: sorted >= {gate_floor:.2f}x dense on "
+          f"sparse-high-N: {headline:.2f}x {'PASS' if ok else 'FAIL'}")
+    results.update({"gate_floor": gate_floor, "gate_pass": ok,
+                    "headline_speedup": headline})
+    save_result("assign", results)
+    if not ok:
+        raise SystemExit(
+            f"assign acceptance FAILED: sorted {headline:.2f}x < "
+            f"{gate_floor}x dense on the sparse high-N config")
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny settings for CI smoke runs")
+    ap.add_argument("--gate-floor", type=float, default=1.0,
+                    help="min sorted/dense speedup on the sparse high-N "
+                         "config before exiting 1")
+    args = ap.parse_args()
+    run(reps=args.reps, quick=args.smoke, gate_floor=args.gate_floor)
+
+
+if __name__ == "__main__":
+    main()

@@ -57,10 +57,13 @@ from repro.core.cameras import CAM_VAXES, Camera, select
 from repro.core.gaussians import Gaussians
 from repro.core.metrics import ssim_map
 from repro.core.projection import project
-from repro.core.tiling import (FEAT_DIM, TierSchedule, TileGrid,
-                               bin_tiles_by_occupancy, splat_features,
-                               tile_bounds, tile_image, tile_occupancy,
-                               tile_tiers, topk_by_score_then_index)
+from repro.core.render import resolve_assignment
+from repro.core.tiling import (DEFAULT_ASSIGN_IMPL, FEAT_DIM, TierSchedule,
+                               TileGrid, bin_tiles_by_occupancy,
+                               resolve_assign_impl, sorted_assign_window,
+                               splat_features, tile_bounds, tile_image,
+                               tile_occupancy, tile_tiers,
+                               topk_by_score_then_index)
 from repro.core.train import (GSTrainCfg, GSOptState, densify_and_prune,
                               group_lrs, init_opt)
 from repro.kernels import rasterize_tiles
@@ -163,13 +166,38 @@ def gs_shardings(mesh, *, views: Optional[int] = None):
 
 
 def _assign_tiles_local(mean2d, radius, depth, valid, lo, hi, *, K: int,
-                        block: int):
+                        block: int, impl: str = "dense",
+                        grid: Optional[TileGrid] = None, t0=None,
+                        tile_budget: Optional[int] = None):
     """Top-K front-most splats for THIS shard's tile strip.
 
     mean2d (Pl, N, 2), radius/depth/valid (Pl, N); lo/hi (Tl, 2) strip bounds.
     -> idx (Pl, Tl, K) int32, score (Pl, Tl, K).
+
+    ``impl="sorted"`` switches to the duplicate-and-sort scatter
+    (core.tiling.sorted_assign_window, vmapped over the partition axis):
+    ``grid`` is then the FULL image grid and ``t0`` the (traced) flat-tile
+    offset of this shard's strip (None = the strip is the whole grid — the
+    "model"-axis-free production mesh).  "auto" resolves on the GLOBAL
+    grid's tile count, exactly like the single-device dispatcher, so both
+    layouts pick the same algorithm.  Both impls share the two-key
+    (score desc, splat index asc) order, so they are bit-identical whenever
+    the sorted path's ``tile_budget`` covers the scene — the dense sweep
+    stays as the escape hatch / oracle.
     """
     Pl, N = mean2d.shape[:2]
+    if grid is not None:
+        impl = resolve_assign_impl(impl, grid.n_tiles, tile_budget)
+    if impl == "sorted":
+        Tl = lo.shape[0]
+
+        def one(m, r, d, v):
+            idx, score, _ = sorted_assign_window(
+                m[:, 0], m[:, 1], r, v, d, grid, K=K, t0=t0, n_local=Tl,
+                tile_budget=tile_budget)
+            return idx, score
+
+        return jax.vmap(one)(mean2d, radius, depth, valid)
     block = min(block, max(N, K))
     nb = (N + block - 1) // block
     Np = nb * block
@@ -240,8 +268,22 @@ def make_gs_forward(mesh, grid: TileGrid, *, K: int, impl: str = "auto",
                     strip_budget: float = 1.0, views: Optional[int] = None,
                     k_tiers: Optional[tuple] = None,
                     tier_caps: Optional[tuple] = None,
-                    return_overflow: bool = False, win_size: int = 7):
+                    return_overflow: bool = False, win_size: int = 7,
+                    assign_impl: str = DEFAULT_ASSIGN_IMPL,
+                    assign_budget: Optional[int] = None):
     """shard_map'd distributed forward: (gaussians, cam, gt, mask) -> loss.
+
+    ``assign_impl`` selects the strip-local tile assignment: "auto" (the
+    default — sort-based scatter on grids past the measured tile-count
+    crossover, dense sweep below; resolved on the GLOBAL grid so every
+    layout of one scene picks the same algorithm), "sorted"
+    (duplicate-and-sort scatter, O(N*B log) independent of the strip tile
+    count) or "dense" (the O(Tl*N) sweep — escape hatch / test oracle);
+    both share the two-key tie-break, so the step's math is IDENTICAL
+    whenever the sorted path's static per-splat ``assign_budget`` covers
+    the scene (test_distributed.py pins sorted == dense through the 2-D
+    mesh step).  ``assign_block`` only shapes the dense sweep's
+    temporaries.
 
     ``win_size`` is the per-tile D-SSIM window (default 7: tiles are as
     small as 8 pixels tall, see masking.tile_l1_dssim_loss; a grid whose
@@ -415,9 +457,11 @@ def make_gs_forward(mesh, grid: TileGrid, *, K: int, impl: str = "auto",
         # without a "model" axis the "strip" is the full tile grid
         if model is not None:
             mi = lax.axis_index(model)
-            lo = lax.dynamic_slice_in_dim(lo_full, mi * Tl, Tl, 0)
-            hi = lax.dynamic_slice_in_dim(hi_full, mi * Tl, Tl, 0)
+            t0 = mi * Tl                     # strip's flat-tile offset
+            lo = lax.dynamic_slice_in_dim(lo_full, t0, Tl, 0)
+            hi = lax.dynamic_slice_in_dim(hi_full, t0, Tl, 0)
         else:
+            t0 = None                        # strip == the whole grid
             lo, hi = lo_full, hi_full
 
         N = mean_g.shape[1]
@@ -444,7 +488,8 @@ def make_gs_forward(mesh, grid: TileGrid, *, K: int, impl: str = "auto",
 
         idx, score = _assign_tiles_local(
             mean_g, radius_g, depth_g, valid_g,
-            lo, hi, K=K, block=assign_block)
+            lo, hi, K=K, block=assign_block, impl=assign_impl,
+            grid=grid, t0=t0, tile_budget=assign_budget)
         idx = lax.stop_gradient(idx)
         live = lax.stop_gradient(score) > NEG / 2   # (Pl, Tl, K)
 
@@ -553,7 +598,9 @@ def make_gs_forward(mesh, grid: TileGrid, *, K: int, impl: str = "auto",
 
 
 def make_gs_probe(mesh, grid: TileGrid, *, k_tiers, views: Optional[int] = None,
-                  assign_block: Optional[int] = None):
+                  assign_block: Optional[int] = None,
+                  assign_impl: str = DEFAULT_ASSIGN_IMPL,
+                  assign_budget: Optional[int] = None):
     """shard_map'd tier-schedule probe: (gaussians, cam) ->
     (tier_counts (n_tiers,) int32, max_occ () int32), REPLICATED.
 
@@ -575,7 +622,10 @@ def make_gs_probe(mesh, grid: TileGrid, *, k_tiers, views: Optional[int] = None,
     assignment runs at ladder[-1]; probing a trimmed ladder would under-
     measure).  The probe ignores ``strip_budget``/``gather_mode`` — it uses
     the exact f32 path, whose occupancy upper-bounds every budgeted
-    variant, so caps sized here cover them too.
+    variant, so caps sized here cover them too.  It DOES honor
+    ``assign_impl``/``assign_budget``: the probe must measure occupancy
+    with the same assignment the training step runs, or a budget-truncated
+    step could be capped from un-truncated telemetry.
     """
     ax = _axes(mesh)
     pod, data, model, view = ax
@@ -633,13 +683,17 @@ def make_gs_probe(mesh, grid: TileGrid, *, k_tiers, views: Optional[int] = None,
 
         if model is not None:
             mi = lax.axis_index(model)
-            lo = lax.dynamic_slice_in_dim(lo_full, mi * Tl, Tl, 0)
-            hi = lax.dynamic_slice_in_dim(hi_full, mi * Tl, Tl, 0)
+            t0 = mi * Tl
+            lo = lax.dynamic_slice_in_dim(lo_full, t0, Tl, 0)
+            hi = lax.dynamic_slice_in_dim(hi_full, t0, Tl, 0)
         else:
+            t0 = None
             lo, hi = lo_full, hi_full
 
         _, score = _assign_tiles_local(mean_g, radius_g, depth_g, valid_g,
-                                       lo, hi, K=K, block=assign_block)
+                                       lo, hi, K=K, block=assign_block,
+                                       impl=assign_impl, grid=grid, t0=t0,
+                                       tile_budget=assign_budget)
         occ = tile_occupancy(score).reshape(-1)          # (Vl*Pl*Tl,)
         tiers = tile_tiers(occ, ladder)
         counts = jnp.stack(
@@ -670,12 +724,18 @@ def folded_tile_count(mesh, grid: TileGrid, n_parts: int,
 
 @functools.lru_cache(maxsize=32)
 def _gs_probe_jit(mesh, grid: TileGrid, ladder: tuple,
-                  views: Optional[int]):
-    return jax.jit(make_gs_probe(mesh, grid, k_tiers=ladder, views=views))
+                  views: Optional[int],
+                  assign_impl: str = DEFAULT_ASSIGN_IMPL,
+                  assign_budget: Optional[int] = None):
+    return jax.jit(make_gs_probe(mesh, grid, k_tiers=ladder, views=views,
+                                 assign_impl=assign_impl,
+                                 assign_budget=assign_budget))
 
 
 def probe_gs_schedule(sched: TierSchedule, mesh, grid: TileGrid,
-                      g: Gaussians, cam, *, views: Optional[int] = None):
+                      g: Gaussians, cam, *, views: Optional[int] = None,
+                      assign_impl: str = DEFAULT_ASSIGN_IMPL,
+                      assign_budget: Optional[int] = None):
     """Probe ``sched`` against the mesh: run the (cached, jitted)
     ``make_gs_probe`` telemetry reduction and update the schedule host-side
     via ``probe_counts``.  Returns the new ``(k_tiers, tier_caps)`` —
@@ -692,7 +752,8 @@ def probe_gs_schedule(sched: TierSchedule, mesh, grid: TileGrid,
     benchmarks/table4_multinode.py sizes its swept steps with it.
     """
     cam_batches = [cam] if isinstance(cam, Camera) else list(cam)
-    probe_fn = _gs_probe_jit(mesh, grid, tuple(sched.ladder), views)
+    probe_fn = _gs_probe_jit(mesh, grid, tuple(sched.ladder), views,
+                             assign_impl, assign_budget)
     counts, max_occ = None, 0
     for cb in cam_batches:
         c, m = probe_fn(g, cb)
@@ -719,7 +780,8 @@ def make_gs_train_step(mesh, cfg: GSTrainCfg, grid: TileGrid, extent: float,
                        assign_block: Optional[int] = None,
                        k_tiers=_FROM_CFG,
                        tier_caps: Optional[tuple] = None,
-                       return_overflow: bool = False, win_size: int = 7):
+                       return_overflow: bool = False, win_size: int = 7,
+                       assign_impl=_FROM_CFG, assign_budget=_FROM_CFG):
     """jit'd (gaussians, opt, batch) -> (gaussians, opt, loss).
 
     Per-partition losses are averaged globally, but gradients never mix
@@ -751,6 +813,10 @@ def make_gs_train_step(mesh, cfg: GSTrainCfg, grid: TileGrid, extent: float,
     """
     if k_tiers is _FROM_CFG:
         k_tiers = cfg.resolved_k_tiers()
+    if assign_impl is _FROM_CFG:
+        assign_impl = cfg.assign_impl
+    if assign_budget is _FROM_CFG:
+        assign_budget = cfg.assign_budget
     lrs = group_lrs(cfg, extent)
     g_sh, opt_sh, b_sh = gs_shardings(mesh, views=views)
     fwd = make_gs_forward(mesh, grid, K=cfg.assign_K, impl=impl,
@@ -759,7 +825,9 @@ def make_gs_train_step(mesh, cfg: GSTrainCfg, grid: TileGrid, extent: float,
                           strip_budget=cfg.strip_budget, views=views,
                           assign_block=assign_block,
                           k_tiers=k_tiers, tier_caps=tier_caps,
-                          return_overflow=return_overflow, win_size=win_size)
+                          return_overflow=return_overflow, win_size=win_size,
+                          assign_impl=assign_impl,
+                          assign_budget=assign_budget)
 
     def loss_fn(tr, g, cam, gt, mask):
         out = fwd(g.with_trainable(tr), cam, gt, mask)
@@ -957,13 +1025,28 @@ def fit_partitions(g: Gaussians, cams: Camera, gts, masks, cfg: GSTrainCfg,
     g_dev = jax.device_put(g, g_sh)
     opt_dev = jax.device_put(opt, opt_sh)
 
+    # tile-assignment resolution — the same render.resolve_assignment
+    # policy as fit_partition (probe the WHOLE rig's concrete bbox counts
+    # for a static sorted budget, or demote "auto" to dense for big-splat
+    # scenes), so both drivers land on identical (impl, budget) for the
+    # same scene; the probe is a jitted GLOBAL max, identical on every
+    # host.  Re-resolved after every densify (radii train).
+    assign = {"impl": cfg.assign_impl, "budget": cfg.assign_budget}
+
+    def probe_assign(gg):
+        impl, budget = resolve_assignment(gg, cams, grid,
+                                          assign_impl=cfg.assign_impl,
+                                          assign_budget=cfg.assign_budget)
+        assign.update(impl=impl, budget=budget)
+
     reprobe = None
     if sched is not None:
-        # probe over the first minibatch — and, mirroring fit_partition's
-        # min(n_views, max(vb, 2))-view probe, a SECOND minibatch when
-        # vb == 1 (a single-view probe would size caps from one view
-        # only); probe_gs_schedule max-merges the counts so the caps cover
-        # the worst probed minibatch of the step's exact folded domain
+        # tier-probe minibatches: the first one — and, mirroring
+        # fit_partition's min(n_views, max(vb, 2))-view probe, a SECOND
+        # minibatch when vb == 1 (a single-view probe would size caps from
+        # one view only); probe_gs_schedule max-merges the counts so the
+        # caps cover the worst probed minibatch of the step's exact folded
+        # domain
         n_probe = 2 if vb < 2 and V > 1 else 1
         probe_cams = [
             jax.device_put(
@@ -972,10 +1055,14 @@ def fit_partitions(g: Gaussians, cams: Camera, gts, masks, cfg: GSTrainCfg,
             for b in range(n_probe)]
 
         def reprobe(gg):
-            probe_gs_schedule(sched, mesh, grid, gg, probe_cams, views=vb)
+            probe_gs_schedule(sched, mesh, grid, gg, probe_cams, views=vb,
+                              assign_impl=assign["impl"],
+                              assign_budget=assign["budget"])
 
-        if sched.tier_caps is None:     # a resume restored caps: no re-probe
-            reprobe(g_dev)
+    probe_assign(g_dev)
+    if sched is not None and sched.tier_caps is None:
+        # a resume restored caps: no re-probe
+        reprobe(g_dev)
 
     opt_vax = GSOptState(m=0, v=0, step=None, grad_accum=0, grad_count=0)
     densify = jax.jit(jax.vmap(
@@ -985,13 +1072,15 @@ def fit_partitions(g: Gaussians, cams: Camera, gts, masks, cfg: GSTrainCfg,
     step_cache = {}
 
     def get_step():
-        spec = (sched.k_tiers, sched.tier_caps) if sched else None
+        spec = ((sched.k_tiers, sched.tier_caps) if sched else None,
+                assign["impl"], assign["budget"])
         if spec not in step_cache:
             step_cache[spec] = make_gs_train_step(
                 mesh, cfg, grid, extent, impl=impl, views=vb,
                 k_tiers=sched.k_tiers if sched else None,
                 tier_caps=sched.tier_caps if sched else None,
-                return_overflow=sched is not None, win_size=win_size)
+                return_overflow=sched is not None, win_size=win_size,
+                assign_impl=assign["impl"], assign_budget=assign["budget"])
         return step_cache[spec]
 
     def save(step_no):
@@ -1026,6 +1115,7 @@ def fit_partitions(g: Gaussians, cams: Camera, gts, masks, cfg: GSTrainCfg,
             # next donating pjit call
             g_dev = jax.device_put(g_dev, g_sh)
             opt_dev = jax.device_put(opt_dev, opt_sh)
+            probe_assign(g_dev)  # splat sizes shifted: re-size the budget
             if sched is not None:
                 reprobe(g_dev)  # occupancy shifted: re-pick tiers/caps
         if ckpt is not None and ckpt_every and (i + 1) % ckpt_every == 0 \

@@ -29,8 +29,9 @@ from repro.core.gaussians import Gaussians, from_points
 from repro.core.masking import background_mask, dilate_mask
 from repro.core.partition import PartitionData, partition_points
 from repro.core.render import (occupancy_probe_jit, render_batch,
-                              view_occupancy)
-from repro.core.tiling import TierSchedule, TileGrid, auto_tier_caps
+                              resolve_assignment, view_occupancy)
+from repro.core.tiling import (DEFAULT_ASSIGN_IMPL, TierSchedule, TileGrid,
+                               auto_tier_caps)
 from repro.core.train import GSTrainCfg, fit_partition
 from repro.data.isosurface import point_cloud_for
 
@@ -115,18 +116,22 @@ def coverage_masks(part_cov, *, threshold: float = 1.0 / 255.0,
 def _render_batch_jit(grid: TileGrid, K: int, impl: str, bg: float,
                       coarse: Optional[int],
                       k_tiers: Optional[tuple] = None,
-                      tier_caps: Optional[tuple] = None):
+                      tier_caps: Optional[tuple] = None,
+                      assign_impl: str = DEFAULT_ASSIGN_IMPL,
+                      assign_budget: Optional[int] = None):
     """Cached jitted render_batch: the seed's render_views rebuilt its jit
     closure per call, recompiling the renderer every time the pipeline
     rendered a new gaussian set (GT, per-partition GT, merged, boundary —
     4+2P compiles per run).  Keying on the static render config (incl. the
     tier schedule and caps — auto_tier_caps rounds caps so nearby scenes
-    share an entry) makes every same-shaped call after the first
-    dispatch-only."""
+    share an entry — and the assignment impl/budget) makes every
+    same-shaped call after the first dispatch-only."""
     return jax.jit(lambda gg, cc: render_batch(gg, cc, grid, K=K, impl=impl,
                                                bg=bg, coarse=coarse,
                                                k_tiers=k_tiers,
-                                               tier_caps=tier_caps))
+                                               tier_caps=tier_caps,
+                                               assign_impl=assign_impl,
+                                               assign_budget=assign_budget))
 
 
 def render_views(g: Gaussians, cams: Camera, grid: TileGrid, *, K: int,
@@ -134,7 +139,9 @@ def render_views(g: Gaussians, cams: Camera, grid: TileGrid, *, K: int,
                  coarse: Optional[int] = None,
                  k_tiers: Optional[tuple] = None,
                  tier_caps: Optional[tuple] = None,
-                 schedule: Optional[TierSchedule] = None):
+                 schedule: Optional[TierSchedule] = None,
+                 assign_impl: str = DEFAULT_ASSIGN_IMPL,
+                 assign_budget: Optional[int] = None):
     """-> (V, H, W, 3) rgb + (V, H, W) coverage.
 
     View-batched: renders ``batch`` views per dispatch through
@@ -161,7 +168,19 @@ def render_views(g: Gaussians, cams: Camera, grid: TileGrid, *, K: int,
     when it has no caps yet — and overflow growth is written BACK via
     ``schedule.note_overflow``, so a caller alternating training and
     rendering keeps one consistent, telemetry-updated schedule.
+
+    ``assign_impl``/``assign_budget`` pick the tile-assignment algorithm
+    ("auto": sort-based on large grids, dense below the crossover; the
+    occupancy probes run with the same impl as the render they size).
+    When the sorted path is in play and no budget is given,
+    ``render.resolve_assignment`` probes the WHOLE rig's concrete bbox
+    counts to size the static per-splat budget (with slack, so the
+    renders stay exact) — and demotes "auto" back to the dense sweep when
+    the probed per-splat overlap is too fat for duplicate-and-sort to win
+    (tiling.SORTED_BUDGET_RATIO).
     """
+    assign_impl, assign_budget = resolve_assignment(
+        g, cams, grid, assign_impl=assign_impl, assign_budget=assign_budget)
     if schedule is not None:
         if k_tiers is not None or tier_caps is not None:
             raise ValueError("pass either schedule= or explicit "
@@ -169,7 +188,8 @@ def render_views(g: Gaussians, cams: Camera, grid: TileGrid, *, K: int,
         if schedule.tier_caps is None:
             vi0 = jnp.clip(jnp.arange(max(1, min(batch, cams.view.shape[0]))),
                            0, cams.view.shape[0] - 1)
-            schedule.probe(occupancy_probe_jit(grid, schedule.kmax, coarse)(
+            schedule.probe(occupancy_probe_jit(
+                grid, schedule.kmax, coarse, assign_impl, assign_budget)(
                 g, select(cams, vi0)))
         k_tiers, tier_caps = schedule.k_tiers, schedule.tier_caps
     V = cams.view.shape[0]
@@ -181,11 +201,13 @@ def render_views(g: Gaussians, cams: Camera, grid: TileGrid, *, K: int,
         K = k_tiers[-1]      # dead in tiered mode: pin the jit cache key
         if tier_caps is None:
             vi0 = jnp.clip(jnp.arange(batch), 0, V - 1)
-            occ0 = occupancy_probe_jit(grid, k_tiers[-1], coarse)(
+            occ0 = occupancy_probe_jit(
+                grid, k_tiers[-1], coarse, assign_impl, assign_budget)(
                 g, select(cams, vi0))
             tier_caps = auto_tier_caps(occ0, k_tiers, slack=1.25)
         tier_caps = tuple(int(c) for c in tier_caps)
-    rfn = _render_batch_jit(grid, K, impl, bg, coarse, k_tiers, tier_caps)
+    rfn = _render_batch_jit(grid, K, impl, bg, coarse, k_tiers, tier_caps,
+                            assign_impl, assign_budget)
     rgbs, covs = [], []
     for s in range(0, V, batch):
         take = min(batch, V - s)
@@ -205,7 +227,7 @@ def render_views(g: Gaussians, cams: Camera, grid: TileGrid, *, K: int,
                     tier_caps = tuple(min(grid.n_tiles, max(8, 2 * c))
                                       for c in tier_caps)
                 rfn = _render_batch_jit(grid, K, impl, bg, coarse, k_tiers,
-                                        tier_caps)
+                                        tier_caps, assign_impl, assign_budget)
                 out = rfn(g, select(cams, vi))
                 ov = int(np.asarray(out.overflow).sum())
             if ov:

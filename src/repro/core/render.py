@@ -28,18 +28,23 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core.cameras import CAM_VAXES, Camera
+from repro.core.cameras import CAM_VAXES, Camera, select
 from repro.core.gaussians import Gaussians
 from repro.core.projection import project
 from repro.core.tiling import (
+    DEFAULT_ASSIGN_IMPL,
     NEG,
+    SORTED_MIN_TILES,
     TileGrid,
     assign_tiles,
     auto_tier_caps,
+    auto_tile_budget,
     bin_tiles_by_occupancy,
     gather_features_at,
     gather_tile_features,
+    resolve_assign_impl,
     splat_features,
+    splat_tile_counts,
     tile_occupancy,
     tile_origins,
     untile_image,
@@ -59,14 +64,17 @@ class RenderOut(NamedTuple):
 
 def _gather_feats(g: Gaussians, cam: Camera, grid: TileGrid, *, K: int,
                   coarse: Optional[int], coarse_budget: Optional[int],
-                  block: int = 4096):
+                  block: int = 4096,
+                  assign_impl: str = DEFAULT_ASSIGN_IMPL,
+                  assign_budget: Optional[int] = None):
     """Shared first half of the render: project -> tile-assign (indices
     stop-gradiented: discrete assignment) -> per-tile feature gather.
 
     -> (tile_feats (T, K, FEAT_DIM), idx (T, K), score (T, K))."""
     splats = project(g, cam)
     idx, score = assign_tiles(splats, grid, K=K, block=block, coarse=coarse,
-                              coarse_budget=coarse_budget)
+                              coarse_budget=coarse_budget, impl=assign_impl,
+                              tile_budget=assign_budget)
     idx = lax.stop_gradient(idx)
     score = lax.stop_gradient(score)
     return gather_tile_features(splats, idx, score), idx, score
@@ -166,16 +174,24 @@ def render_tiles(g: Gaussians, cam: Camera, grid: TileGrid, *, K: int = 64,
                  impl: str = "auto", coarse: Optional[int] = None,
                  coarse_budget: Optional[int] = None,
                  k_tiers: Optional[Sequence[int]] = None,
-                 tier_caps: Optional[Sequence[int]] = None):
+                 tier_caps: Optional[Sequence[int]] = None,
+                 assign_impl: str = DEFAULT_ASSIGN_IMPL,
+                 assign_budget: Optional[int] = None):
     """-> (tiles (T, 4, th, tw), idx (T, K'), score (T, K')).
 
     Differentiable w.r.t. gaussians (tile index lists are stop-gradiented:
     discrete assignment).  With ``k_tiers`` the assignment runs at
     K' = k_tiers[-1] and the kernel dispatch is tiered (one launch per
-    non-empty tier); ``K`` is ignored in that mode."""
+    non-empty tier); ``K`` is ignored in that mode.  ``assign_impl``
+    selects the tile-assignment algorithm ("auto" default: the sort-based
+    scatter on large grids, the dense O(T*N) sweep below the measured
+    crossover; "dense"/"sorted" pin one — see core.tiling.assign_tiles)
+    and ``assign_budget`` the sorted path's static per-splat tile budget."""
     if k_tiers is None:
         feats, idx, score = _gather_feats(g, cam, grid, K=K, coarse=coarse,
-                                          coarse_budget=coarse_budget)
+                                          coarse_budget=coarse_budget,
+                                          assign_impl=assign_impl,
+                                          assign_budget=assign_budget)
         tiles = rasterize_tiles(
             feats, tile_origins(grid),
             tile_h=grid.tile_h, tile_w=grid.tile_w, impl=impl,
@@ -183,15 +199,19 @@ def render_tiles(g: Gaussians, cam: Camera, grid: TileGrid, *, K: int = 64,
         return tiles, idx, score
     tiles, idx, score, _ = _render_tiles_tiered(
         g, cam, grid, impl=impl, coarse=coarse, coarse_budget=coarse_budget,
-        k_tiers=k_tiers, tier_caps=tier_caps)
+        k_tiers=k_tiers, tier_caps=tier_caps, assign_impl=assign_impl,
+        assign_budget=assign_budget)
     return tiles, idx, score
 
 
 def _render_tiles_tiered(g, cam, grid, *, impl, coarse, coarse_budget,
-                         k_tiers, tier_caps):
+                         k_tiers, tier_caps,
+                         assign_impl: str = DEFAULT_ASSIGN_IMPL,
+                         assign_budget: Optional[int] = None):
     splats = project(g, cam)
     idx, score = assign_tiles(splats, grid, K=tuple(k_tiers)[-1],
-                              coarse=coarse, coarse_budget=coarse_budget)
+                              coarse=coarse, coarse_budget=coarse_budget,
+                              impl=assign_impl, tile_budget=assign_budget)
     idx = lax.stop_gradient(idx)
     score = lax.stop_gradient(score)
     k_tiers, tier_caps = _resolve_tiers(k_tiers, tier_caps, score)
@@ -206,7 +226,9 @@ def render(g: Gaussians, cam: Camera, grid: TileGrid, *, K: int = 64,
            coarse: Optional[int] = None,
            coarse_budget: Optional[int] = None,
            k_tiers: Optional[Sequence[int]] = None,
-           tier_caps: Optional[Sequence[int]] = None) -> RenderOut:
+           tier_caps: Optional[Sequence[int]] = None,
+           assign_impl: str = DEFAULT_ASSIGN_IMPL,
+           assign_budget: Optional[int] = None) -> RenderOut:
     """Full-image render with background composite (paper bg is white).
 
     ``k_tiers=(16, 64, 256)``-style schedules switch to occupancy-tiered
@@ -214,14 +236,22 @@ def render(g: Gaussians, cam: Camera, grid: TileGrid, *, K: int = 64,
     depth).  ``tier_caps`` are the static per-tier tile capacities — leave
     None outside jit to auto-size from this scene, pass explicit caps under
     jit.  The returned RenderOut.overflow counts tiles dropped past the top
-    tier's cap (0 == the tiered image is exact vs dense at K')."""
+    tier's cap (0 == the tiered image is exact vs dense at K').
+
+    ``assign_impl``/``assign_budget`` pick the tile-assignment algorithm
+    ("auto": sort-based scatter on large grids, dense sweep below the
+    crossover; both bit-identical whenever the sorted path's budget covers
+    the scene; see core.tiling.assign_tiles)."""
     if k_tiers is None:
         tiles, _, _ = render_tiles(g, cam, grid, K=K, impl=impl,
-                                   coarse=coarse, coarse_budget=coarse_budget)
+                                   coarse=coarse, coarse_budget=coarse_budget,
+                                   assign_impl=assign_impl,
+                                   assign_budget=assign_budget)
         return _composite(untile_image(tiles, grid), bg)
     tiles, _, _, plan = _render_tiles_tiered(
         g, cam, grid, impl=impl, coarse=coarse, coarse_budget=coarse_budget,
-        k_tiers=k_tiers, tier_caps=tier_caps)
+        k_tiers=k_tiers, tier_caps=tier_caps, assign_impl=assign_impl,
+        assign_budget=assign_budget)
     out = _composite(untile_image(tiles, grid), bg)
     return out._replace(overflow=plan.overflow)
 
@@ -232,7 +262,9 @@ def render_batch(g: Gaussians, cams: Camera, grid: TileGrid, *, K: int = 64,
                  coarse_budget: Optional[int] = None,
                  assign_block: Optional[int] = None,
                  k_tiers: Optional[Sequence[int]] = None,
-                 tier_caps: Optional[Sequence[int]] = None) -> RenderOut:
+                 tier_caps: Optional[Sequence[int]] = None,
+                 assign_impl: str = DEFAULT_ASSIGN_IMPL,
+                 assign_budget: Optional[int] = None) -> RenderOut:
     """View-batched render: cams carries a leading V axis on view/fx/fy.
 
     Projection -> tile assignment -> feature gather are vmapped over the
@@ -251,7 +283,9 @@ def render_batch(g: Gaussians, cams: Camera, grid: TileGrid, *, K: int = 64,
     assign_block bounds the tile-assignment sweep's temporaries; under vmap
     those are V-fold, so the auto default shrinks the single-view block by
     V (floored at 1024) to keep the peak footprint roughly view-count
-    independent.
+    independent.  ``assign_impl``/``assign_budget`` select the assignment
+    algorithm per view (see ``render``); the sorted default ignores
+    ``assign_block``/``coarse``.
     """
     V = cams.view.shape[0]
     block = assign_block or max(1024, 4096 // max(V, 1))
@@ -259,7 +293,9 @@ def render_batch(g: Gaussians, cams: Camera, grid: TileGrid, *, K: int = 64,
     if k_tiers is None:
         def gather_one(cam: Camera):
             return _gather_feats(g, cam, grid, K=K, coarse=coarse,
-                                 coarse_budget=coarse_budget, block=block)[0]
+                                 coarse_budget=coarse_budget, block=block,
+                                 assign_impl=assign_impl,
+                                 assign_budget=assign_budget)[0]
 
         feats = jax.vmap(gather_one, in_axes=(CAM_VAXES,))(cams)  # (V,T,K,F)
         tiles = rasterize_tiles_batched(
@@ -274,7 +310,8 @@ def render_batch(g: Gaussians, cams: Camera, grid: TileGrid, *, K: int = 64,
     def gather_one_tiered(cam: Camera):
         splats = project(g, cam)
         idx, score = assign_tiles(splats, grid, K=Kmax, block=block,
-                                  coarse=coarse, coarse_budget=coarse_budget)
+                                  coarse=coarse, coarse_budget=coarse_budget,
+                                  impl=assign_impl, tile_budget=assign_budget)
         return (splat_features(splats), lax.stop_gradient(idx),
                 lax.stop_gradient(score))
 
@@ -288,19 +325,88 @@ def render_batch(g: Gaussians, cams: Camera, grid: TileGrid, *, K: int = 64,
 
 
 @functools.lru_cache(maxsize=64)
-def occupancy_probe_jit(grid: TileGrid, K: int, coarse: Optional[int] = None):
+def tile_count_probe_jit(grid: TileGrid):
+    """Cached jitted sorted-budget probe: (gaussians, cams) -> () int32 max
+    per-splat bbox tile count over the view batch (gaussian fields may
+    carry extra leading dims — the distributed (P, N) layout works too).
+    Host layers feed the fetched value to ``tiling.auto_tile_budget`` and
+    ``tiling.resolve_assign_impl`` to pick a static sorted-path budget —
+    or to demote "auto" back to the dense sweep for big-splat scenes.  A
+    jitted global reduction, so every host of a mesh sees the same value.
+    """
+    def probe(gg, cc):
+        one = lambda c: splat_tile_counts(project(gg, c), grid).max()
+        return jax.vmap(one, in_axes=(CAM_VAXES,))(cc).max()
+    return jax.jit(probe)
+
+
+def max_tile_count(g: Gaussians, cams: Camera, grid: TileGrid, *,
+                   chunk: int = 8) -> int:
+    """Host-side max per-splat bbox tile count over a WHOLE camera rig,
+    probed in fixed-shape chunks of ``chunk`` views (tail chunks repeat
+    the last view) so every rig size shares a handful of compiles and the
+    peak probe footprint stays bounded."""
+    V = cams.view.shape[0]
+    best = 0
+    for s in range(0, V, chunk):
+        vi = jnp.clip(jnp.arange(s, s + chunk), 0, V - 1)
+        best = max(best,
+                   int(tile_count_probe_jit(grid)(g, select(cams, vi))))
+    return best
+
+
+def resolve_assignment(g: Gaussians, cams: Camera, grid: TileGrid, *,
+                       assign_impl: str = DEFAULT_ASSIGN_IMPL,
+                       assign_budget: Optional[int] = None):
+    """Host-side resolution of the tile-assignment knobs -> a concrete
+    ``(impl, budget)`` pair ready for a jitted render/train step.
+
+    The one shared probe-and-resolve policy for every host loop
+    (pipeline.render_views, train.fit_partition,
+    distributed.fit_partitions): when the sorted path is in play
+    ("sorted" pinned, or "auto" on a >= SORTED_MIN_TILES grid) and no
+    budget was given, measure the max per-splat bbox tile count over the
+    WHOLE rig (not just the first minibatch — a later close-up view must
+    not outgrow the budget silently) and size a static budget with slack
+    via ``tiling.auto_tile_budget``; then let
+    ``tiling.resolve_assign_impl`` decide, demoting "auto" back to the
+    always-exact dense sweep when the probed/explicit budget is too fat
+    for duplicate-and-sort to win.  Callers re-resolve after every
+    densify (radii are trained parameters).  Works on sharded (P, N)
+    gaussians: the probe is a jitted global max, identical on every host.
+    """
+    candidate = (assign_impl == "sorted"
+                 or (assign_impl == "auto"
+                     and grid.n_tiles >= SORTED_MIN_TILES))
+    if assign_budget is None and candidate:
+        assign_budget = auto_tile_budget(max_tile_count(g, cams, grid),
+                                         grid.n_tiles)
+    impl = resolve_assign_impl(assign_impl, grid.n_tiles, assign_budget)
+    return impl, (assign_budget if impl == "sorted" else None)
+
+
+@functools.lru_cache(maxsize=64)
+def occupancy_probe_jit(grid: TileGrid, K: int, coarse: Optional[int] = None,
+                        assign_impl: str = DEFAULT_ASSIGN_IMPL,
+                        assign_budget: Optional[int] = None):
     """Cached jitted ``view_occupancy`` closure — the standard occupancy
     probe for tier-cap sizing (``TierSchedule.probe`` input).  Shared by
     pipeline.render_views and train.fit_partition so the same (grid, K,
-    coarse) probe compiles once."""
-    return jax.jit(lambda gg, cc: view_occupancy(gg, cc, grid, K=K,
-                                                 coarse=coarse))
+    coarse, assign_impl, assign_budget) probe compiles once.  The probe
+    must use the same assignment impl/budget as the step it sizes caps for
+    (occupancy is exact either way when nothing overflows, but budgets
+    truncate consistently only within one impl)."""
+    return jax.jit(lambda gg, cc: view_occupancy(
+        gg, cc, grid, K=K, coarse=coarse, assign_impl=assign_impl,
+        assign_budget=assign_budget))
 
 
 def view_occupancy(g: Gaussians, cams: Camera, grid: TileGrid, *, K: int,
                    coarse: Optional[int] = None,
                    coarse_budget: Optional[int] = None,
-                   assign_block: Optional[int] = None):
+                   assign_block: Optional[int] = None,
+                   assign_impl: str = DEFAULT_ASSIGN_IMPL,
+                   assign_budget: Optional[int] = None):
     """(V, T) int32 per-view tile occupancy at assignment depth K.
 
     The cheap prepass pipeline.render_views uses to auto-size static tier
@@ -314,7 +420,8 @@ def view_occupancy(g: Gaussians, cams: Camera, grid: TileGrid, *, K: int,
     def one(cam: Camera):
         splats = project(g, cam)
         _, score = assign_tiles(splats, grid, K=K, block=block,
-                                coarse=coarse, coarse_budget=coarse_budget)
+                                coarse=coarse, coarse_budget=coarse_budget,
+                                impl=assign_impl, tile_budget=assign_budget)
         return tile_occupancy(score)
 
     return jax.vmap(one, in_axes=(CAM_VAXES,))(cams)

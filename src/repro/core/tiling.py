@@ -295,32 +295,60 @@ def _assign_tiles_coarse(splats: Splats2D, grid: TileGrid, *, K: int,
 def assign_tiles(splats: Splats2D, grid: TileGrid, *, K: int = 64,
                  block: int = 4096, coarse: Optional[int] = None,
                  coarse_budget: Optional[int] = None,
-                 return_overflow: bool = False):
+                 return_overflow: bool = False, impl: str = "dense",
+                 tile_budget: Optional[int] = None):
     """Top-K front-most gaussians per tile.
 
     Returns (idx (T, K) int32 into the splat table, score (T, K); score==NEG
     marks empty slots).  With ``return_overflow=True`` a third () int32 is
-    appended: the number of candidates the coarse pre-cull dropped past its
-    budget (always 0 on the dense path) — production configs should log it
-    and treat nonzero as "grow coarse_budget".  Blockwise over gaussians:
-    carry a running top-k and merge each block with a two-key sort (score
-    desc, splat index asc) — O(T * N) work, O(T * block) memory; the index
-    tie-break makes the result independent of the merge order (see
-    topk_by_score_then_index).
+    appended: the number of candidates the assignment dropped past a static
+    budget (always 0 on the dense path without ``coarse``) — production
+    configs should log it and treat nonzero as "grow the budget".
 
-    ``coarse=sb`` enables a two-level cull: a cheap circle/rect pass against
-    sb x sb tile superblocks compacts per-superblock candidate lists of size
-    ``coarse_budget`` (auto: N when the grid has S < 8 superblocks, else
-    max(4K, ceil(4N/S)) — 4x headroom over uniform occupancy — rounded up
-    to 128), and the exact per-tile test runs only against those survivors
-    — O(S*N + T*budget) instead of O(T*N).  With budget >= true superblock
-    occupancy the result is identical to the dense path on live slots
-    (empty-slot idx values are unspecified in both paths); on overflow the
-    highest-INDEXED candidates are dropped (arbitrary w.r.t. depth — see
-    coarse_candidates), so size budgets generously.  When the resolved
-    budget reaches N the coarse pass cannot cull anything, so the dense
-    path runs directly (identical result, none of the pre-cull overhead).
+    ``impl`` selects the assignment algorithm (same contract either way —
+    the two are bit-identical whenever no budget overflows, empty slots
+    included):
+
+      "auto"    "sorted" when the grid has >= SORTED_MIN_TILES flat tiles
+                AND a ``tile_budget`` is in hand and lean enough to win
+                (see resolve_assign_impl; the measured CPU crossover is in
+                benchmarks/bench_assign.py), "dense" otherwise — what the
+                render/train layers default to via ``assign_impl``; their
+                host loops probe the budget (render.resolve_assignment).
+      "dense"   blockwise O(T * N) sweep: carry a running top-k and merge
+                each gaussian block with a two-key sort (score desc, splat
+                index asc) — O(T * block) memory; the index tie-break makes
+                the result independent of the merge order (see
+                topk_by_score_then_index).  This is the test oracle and the
+                escape hatch — always exact, never drops a candidate.
+      "sorted"  duplicate-and-sort scatter (``assign_tiles_sorted``): each
+                splat expands into its overlapped-tile candidates under a
+                static per-splat ``tile_budget``, one global three-key sort
+                groups and orders them, and a segmented scatter emits the
+                (T, K) layout — O(N * B log(N * B)), independent of T, the
+                production default (render/train wire it via
+                ``assign_impl``).  ``coarse`` is ignored (the expansion
+                already skips non-overlapped tiles).
+
+    ``coarse=sb`` (dense only) enables a two-level cull: a cheap circle/rect
+    pass against sb x sb tile superblocks compacts per-superblock candidate
+    lists of size ``coarse_budget`` (auto: N when the grid has S < 8
+    superblocks, else max(4K, ceil(4N/S)) — 4x headroom over uniform
+    occupancy — rounded up to 128), and the exact per-tile test runs only
+    against those survivors — O(S*N + T*budget) instead of O(T*N).  With
+    budget >= true superblock occupancy the result is identical to the
+    dense path on live slots (empty-slot idx values are unspecified in both
+    paths); on overflow the highest-INDEXED candidates are dropped
+    (arbitrary w.r.t. depth — see coarse_candidates), so size budgets
+    generously.  When the resolved budget reaches N the coarse pass cannot
+    cull anything, so the dense path runs directly (identical result, none
+    of the pre-cull overhead).
     """
+    if resolve_assign_impl(impl, grid.n_tiles, tile_budget) == "sorted":
+        idx, score, ov = assign_tiles_sorted(splats, grid, K=K,
+                                             tile_budget=tile_budget,
+                                             return_overflow=True)
+        return (idx, score, ov) if return_overflow else (idx, score)
     if coarse is not None and coarse > 1:
         N = splats.mean2d.shape[0]
         S = (((grid.nx + coarse - 1) // coarse)
@@ -374,6 +402,352 @@ def assign_tiles(splats: Splats2D, grid: TileGrid, *, K: int = 64,
     if return_overflow:
         return idx, score, jnp.zeros((), jnp.int32)   # dense path never drops
     return idx, score
+
+
+# ---------------------------------------------------------------------------
+# Sort-based assignment (duplicate-and-sort scatter)
+# ---------------------------------------------------------------------------
+
+
+#: default static per-splat tile budget for the sorted assignment path: a
+#: 4x4-tile bbox neighbourhood.  The sorted path's work is O(N * B), so the
+#: default stays lean; scenes with larger splats (or callers that want
+#: provable exactness, budget = T) pass an explicit ``tile_budget`` and
+#: watch the overflow counter (0 == nothing was dropped).
+DEFAULT_TILE_BUDGET = 16
+
+#: assignment impl the render/train layers default to (``assign_impl=``):
+#: "auto" picks the sort-based scatter when the grid is large enough AND a
+#: per-splat budget is known to be lean enough for it to win (see
+#: resolve_assign_impl; bench_assign measures the crossover) — the host
+#: entry points probe that budget from concrete splats, and traced
+#: building blocks without one stay on the always-exact dense sweep.
+#: "dense"/"sorted" pin one path.
+DEFAULT_ASSIGN_IMPL = "auto"
+
+#: "auto" crossover: grids with fewer flat tiles than this stay on the
+#: dense sweep (small-T CPU grids — the test tier — where the sweep's
+#: T*N work is trivial and the sort constant dominates).
+SORTED_MIN_TILES = 512
+
+#: "auto" crossover, per-splat axis: the sorted path's O(N*B) work beats
+#: the dense O(T*N) sweep only while B (the per-splat tile budget) stays
+#: under ~T / this ratio (measured on CPU: ~20x higher per-element cost
+#: for expand+sort vs the sweep's hit test).  Callers that PROBE a budget
+#: from concrete splats (render_views / fit_partition / fit_partitions)
+#: feed it to resolve_assign_impl so big-splat scenes — where every splat
+#: touches ~a hundred tiles — honestly fall back to the sweep.
+SORTED_BUDGET_RATIO = 20
+
+
+def resolve_assign_impl(impl: str, n_tiles: int,
+                        tile_budget: Optional[int] = None) -> str:
+    """Resolve an ``assign_impl`` knob ("auto" | "dense" | "sorted") to a
+    concrete algorithm for a grid with ``n_tiles`` flat tiles.  "auto" is
+    resolved from the GLOBAL grid size everywhere (the distributed strip
+    assignment resolves on the full grid, not its strip window), so one
+    scene picks one algorithm across every execution layout.
+
+    "auto" picks the sorted path only when it can PROVE it should: the
+    grid must carry >= SORTED_MIN_TILES flat tiles AND the caller must
+    know a per-splat ``tile_budget`` (probed from concrete splats — the
+    host entry points render_views / fit_partition(s) do this via
+    ``render.resolve_assignment`` — or passed explicitly) that stays under
+    n_tiles / SORTED_BUDGET_RATIO.  With no budget in hand (a directly
+    jitted building block) "auto" stays on the always-exact dense sweep —
+    a silent candidate-dropping default would violate the overflow-counter
+    honesty contract; pin ``assign_impl="sorted"`` (and size the budget)
+    to force the sorted path there.  Budgets past the ratio demote to
+    dense too: scenes of few huge splats are where duplicate-and-sort
+    loses."""
+    if impl == "auto":
+        if n_tiles < SORTED_MIN_TILES or tile_budget is None \
+                or tile_budget * SORTED_BUDGET_RATIO > n_tiles:
+            return "dense"
+        return "sorted"
+    if impl not in ("dense", "sorted"):
+        raise ValueError(f"unknown assignment impl {impl!r}; expected "
+                         f"'auto', 'dense' or 'sorted'")
+    return impl
+
+
+def resolve_tile_budget(n_tiles: int, tile_budget: Optional[int]) -> int:
+    """Static per-splat budget: auto = min(T, DEFAULT_TILE_BUDGET); clamped
+    to [1, T] (a splat can overlap at most all T tiles, where the expansion
+    provably cannot drop)."""
+    b = DEFAULT_TILE_BUDGET if tile_budget is None else int(tile_budget)
+    return max(1, min(b, max(n_tiles, 1)))
+
+
+def _bbox_bounds(mx, my, rad, grid: TileGrid):
+    """Clipped tile-coordinate bbox of each splat's circle: (x0, x1, y0, y1),
+    batch-polymorphic over leading dims.  The low edges use ceil-1 (not
+    floor) so a circle exactly tangent to a tile boundary still covers the
+    tile the dense sweep's clamp test counts as a hit."""
+    tw = jnp.float32(grid.tile_w)
+    th = jnp.float32(grid.tile_h)
+    x0 = jnp.clip(jnp.ceil((mx - rad) / tw).astype(jnp.int32) - 1,
+                  0, grid.nx - 1)
+    x1 = jnp.clip(jnp.floor((mx + rad) / tw).astype(jnp.int32),
+                  0, grid.nx - 1)
+    y0 = jnp.clip(jnp.ceil((my - rad) / th).astype(jnp.int32) - 1,
+                  0, grid.ny - 1)
+    y1 = jnp.clip(jnp.floor((my + rad) / th).astype(jnp.int32),
+                  0, grid.ny - 1)
+    return x0, x1, y0, y1
+
+
+def splat_tile_counts(splats: Splats2D, grid: TileGrid):
+    """(..., N) int32 per-splat bbox candidate-tile counts — the quantity
+    the sorted path's ``tile_budget`` must cover for bit-exactness (and
+    what its overflow counter reports when it doesn't).  Batch-polymorphic;
+    this is the budget-probe input for host layers (render.
+    tile_count_probe_jit -> auto_tile_budget)."""
+    x0, x1, y0, y1 = _bbox_bounds(splats.mean2d[..., 0],
+                                  splats.mean2d[..., 1], splats.radius, grid)
+    cnt = jnp.maximum(x1 - x0 + 1, 0) * jnp.maximum(y1 - y0 + 1, 0)
+    return jnp.where(splats.valid, cnt, 0).astype(jnp.int32)
+
+
+def auto_tile_budget(max_count, n_tiles: int, *, slack: float = 1.5,
+                     round_to: int = 16) -> int:
+    """CONCRETE max per-splat bbox count -> static sorted-path budget:
+    scaled by ``slack`` (splat radii drift between probes — they are
+    trained parameters), rounded up to ``round_to`` so nearby probes hash
+    to the same jit cache entry, clamped to [1, n_tiles] (where the
+    expansion provably cannot drop).  Host-side only — raises under
+    tracing, exactly like auto_tier_caps (budgets are static shapes)."""
+    _reject_tracers("auto_tile_budget", max_count)
+    b = int(np.ceil(max(int(max_count), 1) * slack))
+    b = -(-b // round_to) * round_to
+    return max(1, min(b, max(int(n_tiles), 1)))
+
+
+def _expand_splat_tiles(mx, my, rad, valid, grid: TileGrid, *,
+                        budget: int, t0=None, n_local: Optional[int] = None):
+    """Expand one splat table into per-splat candidate (tile, depth, idx)
+    triples over a static ``budget`` of bbox tile slots.
+
+    mx/my/rad/valid (N,); ``t0`` (dynamic scalar, default 0) is the
+    flat-tile offset of a LOCAL window of ``n_local`` row-major tiles (the
+    distributed strip case; None/None = the full grid).  Returns
+    (tile (N, B) int32 LOCAL ids with n_local as miss/pad sentinel,
+    overflow () int32 counting bbox candidate slots dropped past the
+    budget — conservative: bbox slots, a superset of true circle hits, so
+    0 still proves exactness).
+
+    The bbox low edge uses ceil-1 (not floor, see _bbox_bounds) so a circle
+    exactly tangent to a tile boundary still enumerates the tile the dense
+    sweep's clamp test counts as a hit; the exact circle/rect test then
+    decides membership with the same arithmetic as the dense path.
+    """
+    Tl = grid.n_tiles if n_local is None else n_local
+    tw = jnp.float32(grid.tile_w)
+    th = jnp.float32(grid.tile_h)
+    x0, x1, y0, y1 = _bbox_bounds(mx, my, rad, grid)
+    if t0 is not None:
+        # clamp the bbox rows to the window's row span (the window is a
+        # contiguous row-major tile range, so rows [t0//nx, (t0+Tl-1)//nx]
+        # are a superset of its tiles) — budget slots stop paying for
+        # strip-foreign rows
+        y0 = jnp.maximum(y0, t0 // grid.nx)
+        y1 = jnp.minimum(y1, (t0 + Tl - 1) // grid.nx)
+
+    # bw >= 1 for any rad >= 0 (the clamped range is non-empty); the
+    # maximum() only guards the integer division against degenerate
+    # negative-radius inputs, whose nt is already 0
+    bw = jnp.maximum(x1 - x0 + 1, 1)
+    nt = jnp.where(valid,
+                   jnp.maximum(x1 - x0 + 1, 0)
+                   * jnp.maximum(y1 - y0 + 1, 0), 0)
+    jj = jnp.arange(budget, dtype=jnp.int32)[None, :]
+    inb = jj < nt[:, None]                            # (N, B)
+    ty = y0[:, None] + jj // bw[:, None]
+    tx = x0[:, None] + jj % bw[:, None]
+    # exact circle/rect test — identical arithmetic to the dense sweep
+    lox = tx.astype(jnp.float32) * tw
+    loy = ty.astype(jnp.float32) * th
+    cx = jnp.clip(mx[:, None], lox, lox + tw)
+    cy = jnp.clip(my[:, None], loy, loy + th)
+    dx = mx[:, None] - cx
+    dy = my[:, None] - cy
+    hit = inb & (dx * dx + dy * dy <= (rad * rad)[:, None])
+    flat = ty * grid.nx + tx
+    if t0 is not None:
+        flat = flat - t0
+        hit &= (flat >= 0) & (flat < Tl)
+    tile = jnp.where(hit, flat, Tl).astype(jnp.int32)
+    overflow = jnp.maximum(nt - budget, 0).sum().astype(jnp.int32)
+    return tile, overflow
+
+
+def _splat_depth_ranks(depth):
+    """Stable (depth asc, splat idx asc) ranking of a (N,) depth table.
+
+    -> (rank_of (N,) int32 rank per ORIGINAL splat, perm (N,) int32
+    original index per rank).  Depths are positive, so their float32 bit
+    patterns are monotone as unsigned ints; the stable sort realizes the
+    splat-index tie-break — together exactly topk_by_score_then_index's
+    (score desc, idx asc) order.  Invalid splats may carry arbitrary
+    depths; they rank SOMEWHERE, harmlessly, since they emit no candidates.
+    """
+    N = depth.shape[0]
+    iota = jnp.arange(N, dtype=jnp.int32)
+    _, perm = lax.sort((lax.bitcast_convert_type(depth, jnp.uint32), iota),
+                       num_keys=1)
+    rank_of = jnp.zeros((N,), jnp.int32).at[perm].set(iota)
+    return rank_of, perm
+
+
+def _segment_topk_packed(tile, rank_of, perm, depth, *, n_tiles: int,
+                         K: int, rank_bits: int):
+    """Per-tile first-K of the candidate set via ONE single-operand sort.
+
+    tile (N, B) LOCAL ids (sentinel == ``n_tiles``) from
+    _expand_splat_tiles; rank_of/perm/depth from _splat_depth_ranks.  Each
+    candidate packs into a single uint32 key ``tile << rank_bits | rank``
+    — ascending keys are exactly the (tile, depth, splat idx) lexicographic
+    order, and the key alone DECODES back to (tile, splat idx, depth), so
+    the sort carries no payload.  XLA's single-operand u32 sort stays on a
+    fast vectorized path (~25 ms / 384k on CPU) where the variadic
+    multi-key comparator sort is ~10x slower — that difference is the whole
+    CPU viability of this path.  Group boundaries come from one
+    ``searchsorted`` over the tile prefixes and the (T, K) output is pure
+    gathers — no scatter (XLA CPU scatter costs ~55 ns/element).
+
+    Ranks past K fall off (the same depth-ordered truncation as the dense
+    top-k); empty slots carry (idx 0, score NEG) — bit-identical to the
+    dense sweep.
+    """
+    N, B = tile.shape
+    M = N * B
+    hit = tile < n_tiles
+    packed = jnp.where(
+        hit,
+        (tile.astype(jnp.uint32) << rank_bits)
+        | rank_of[:, None].astype(jnp.uint32),
+        jnp.uint32(0xFFFFFFFF)).reshape(-1)
+    skeys = lax.sort(packed)                          # (M,) single-operand
+    bounds = jnp.searchsorted(
+        skeys, jnp.arange(n_tiles + 1, dtype=jnp.uint32) << rank_bits)
+    pos = bounds[:n_tiles, None] + jnp.arange(K, dtype=bounds.dtype)[None, :]
+    live = pos < bounds[1:, None]                     # within my tile's run
+    key_at = skeys[jnp.minimum(pos, M - 1)]
+    r = jnp.minimum((key_at
+                     & jnp.uint32((1 << rank_bits) - 1)).astype(jnp.int32),
+                    N - 1)
+    src = perm[r]                                     # original splat index
+    idx = jnp.where(live, src, 0)
+    score = jnp.where(live, -depth[src], NEG)
+    return idx, score
+
+
+def _segment_topk_sort3(tile, depth, *, n_tiles: int, K: int):
+    """Variadic-sort fallback for _segment_topk_packed when
+    ``log2(T+1) + log2(N)`` exceeds the 32 packed key bits: a stable
+    three-key lax.sort over (tile, depth, splat idx) — same output, ~10x
+    slower on CPU (scalar comparator lowering); huge-N/huge-T callers
+    should shard (the distributed strip windows keep both factors small).
+    """
+    N, B = tile.shape
+    M = N * B
+    dk = jnp.where(tile < n_tiles,
+                   jnp.broadcast_to(depth[:, None], tile.shape),
+                   jnp.float32(1e30))
+    sidx = jnp.broadcast_to(jnp.arange(N, dtype=jnp.int32)[:, None], (N, B))
+    tile_s, _, idx_s = lax.sort(
+        (tile.reshape(-1), dk.reshape(-1), sidx.reshape(-1)), num_keys=3)
+    pos = jnp.arange(M, dtype=jnp.int32)
+    start = jnp.concatenate([jnp.ones((1,), bool), tile_s[1:] != tile_s[:-1]])
+    rank = pos - lax.cummax(jnp.where(start, pos, 0), axis=0)
+    live = (tile_s < n_tiles) & (rank < K)
+    row = jnp.where(live, tile_s, n_tiles)            # scratch row/col
+    col = jnp.where(live, rank, K)
+    idx = jnp.zeros((n_tiles + 1, K + 1), jnp.int32) \
+        .at[row, col].set(jnp.where(live, idx_s, 0))
+    score = jnp.full((n_tiles + 1, K + 1), NEG, jnp.float32) \
+        .at[row, col].set(jnp.where(live, -depth[idx_s], NEG))
+    return idx[:n_tiles, :K], score[:n_tiles, :K]
+
+
+def sorted_assign_window(mx, my, rad, valid, depth, grid: TileGrid, *,
+                         K: int, t0=None, n_local: Optional[int] = None,
+                         tile_budget: Optional[int] = None):
+    """Sort-based assignment of one raw splat table over a LOCAL tile
+    window: the building block ``assign_tiles_sorted`` (full grid) and the
+    distributed strip-local assignment (core.distributed) share.
+
+    mx/my/rad/valid/depth (N,) splat columns; ``t0`` a (possibly traced)
+    flat-tile offset and ``n_local`` the static window length — None/None
+    means the full grid.  -> (idx (Tl, K) int32 LOCAL rows, score (Tl, K),
+    overflow () int32) with exactly ``assign_tiles``'s slot semantics
+    (bit-identical to the dense sweep restricted to the window whenever the
+    budget covers every splat's bbox candidate count).
+    """
+    Tl = grid.n_tiles if n_local is None else int(n_local)
+    N = mx.shape[0]
+    if N == 0:
+        return (jnp.zeros((Tl, K), jnp.int32),
+                jnp.full((Tl, K), NEG, jnp.float32),
+                jnp.zeros((), jnp.int32))
+    if tile_budget is None and not isinstance(mx, jax.core.Tracer):
+        # concrete splats (outside jit/vmap): size the budget exactly from
+        # this table — provably no drops, the analogue of auto_tier_caps'
+        # outside-jit auto-sizing.  Under tracing the static
+        # DEFAULT_TILE_BUDGET applies; callers with a hot jitted loop
+        # probe a budget host-side instead (render.tile_count_probe_jit).
+        x0, x1, y0, y1 = _bbox_bounds(mx, my, rad, grid)
+        cnt = jnp.maximum(x1 - x0 + 1, 0) * jnp.maximum(y1 - y0 + 1, 0)
+        tile_budget = int(np.asarray(jnp.where(valid, cnt, 0).max()))
+    budget = resolve_tile_budget(grid.n_tiles, tile_budget)
+    tile, overflow = _expand_splat_tiles(
+        mx, my, rad, valid, grid, budget=budget, t0=t0, n_local=Tl)
+    rank_of, perm = _splat_depth_ranks(depth)
+    rank_bits = max(1, (N - 1).bit_length())
+    if Tl.bit_length() + rank_bits <= 32:
+        idx, score = _segment_topk_packed(tile, rank_of, perm, depth,
+                                          n_tiles=Tl, K=K,
+                                          rank_bits=rank_bits)
+    else:
+        idx, score = _segment_topk_sort3(tile, depth, n_tiles=Tl, K=K)
+    return idx, score, overflow
+
+
+def assign_tiles_sorted(splats: Splats2D, grid: TileGrid, *, K: int = 64,
+                        tile_budget: Optional[int] = None,
+                        return_overflow: bool = False):
+    """Sort-based top-K assignment: same contract as ``assign_tiles``.
+
+    The GPU 3D-GS duplicate-and-sort scatter, TPU/static-shape adapted:
+    every projected splat expands into the tiles its circle overlaps
+    (static per-splat ``tile_budget`` bbox slots; ``None`` sizes it
+    EXACTLY from the concrete table outside tracing, and falls back to
+    min(T, DEFAULT_TILE_BUDGET) under jit — hot jitted loops probe a
+    budget host-side via ``splat_tile_counts`` + ``auto_tile_budget``,
+    which is what render_views / fit_partition(s) do), one global stable
+    sort by
+    (tile, depth, splat idx) groups and orders the candidates, and a
+    segmented scatter writes each tile's first K into the (T, K)
+    idx/score layout — O(N * B log(N * B)) work, independent of the tile
+    count, vs the dense sweep's O(T * N).  The three-key order reproduces
+    ``topk_by_score_then_index``'s (score desc, index asc) tie-break, so
+    the output — indices, scores, empty slots (idx 0 / score NEG) — is
+    BIT-IDENTICAL to the dense sweep whenever the budget covers every
+    splat's bbox tile count (``benchmarks/bench_assign.py`` measures the
+    crossover; tests/test_tiling_properties.py pins the parity).
+
+    With ``return_overflow=True`` a third () int32 counts bbox candidate
+    slots dropped past the budget (the same "0 means provably exact"
+    telemetry contract as the coarse pre-cull's counter; conservative —
+    dropped slots may not have been true hits).  On overflow a splat keeps
+    its budget-first bbox tiles in row-major order, so the loss is
+    arbitrary w.r.t. visibility: size budgets to the scene and monitor the
+    counter in production.
+    """
+    idx, score, overflow = sorted_assign_window(
+        splats.mean2d[..., 0], splats.mean2d[..., 1], splats.radius,
+        splats.valid, splats.depth, grid, K=K, tile_budget=tile_budget)
+    return (idx, score, overflow) if return_overflow else (idx, score)
 
 
 # ---------------------------------------------------------------------------

@@ -24,7 +24,8 @@ from jax import lax
 from repro.core.cameras import Camera, select
 from repro.core.gaussians import Gaussians
 from repro.core.masking import gs_loss
-from repro.core.render import occupancy_probe_jit, render_batch
+from repro.core.render import (occupancy_probe_jit, render_batch,
+                               resolve_assignment)
 from repro.core.tiling import TierSchedule, TileGrid
 
 
@@ -67,6 +68,13 @@ class GSTrainCfg:
     impl: str = "auto"
     view_batch: int = 1         # views per minibatch step (loss = view mean)
     coarse: Optional[int] = None  # superblock pre-cull factor (tiling.py)
+    # tile-assignment algorithm: "auto" (sort-based scatter, O(N*B log), on
+    # grids of >= tiling.SORTED_MIN_TILES tiles; the O(T*N) dense sweep
+    # below — the measured CPU crossover) | "sorted" | "dense" (escape
+    # hatch / test oracle); assign_budget is the sorted path's static
+    # per-splat tile budget (None = auto, core.tiling.resolve_tile_budget)
+    assign_impl: str = "auto"
+    assign_budget: Optional[int] = None
     # rasterization schedule: occupancy-tiered by DEFAULT
     #   "auto"  ladder derived from K (e.g. K=64 -> (8, 32, 64))
     #   tuple   explicit ladder, e.g. (16, 64, 256)
@@ -166,7 +174,8 @@ _FROM_CFG = object()
 
 def make_train_step(cfg: GSTrainCfg, grid: TileGrid, extent: float, *,
                     k_tiers=_FROM_CFG, tier_caps: Optional[tuple] = None,
-                    return_overflow: bool = False):
+                    return_overflow: bool = False,
+                    assign_impl=_FROM_CFG, assign_budget=_FROM_CFG):
     """Minibatch-of-views train step: cam/gt/mask may carry a leading view
     axis (loss is averaged over the batch); plain single-view inputs still
     work (treated as V=1).
@@ -180,10 +189,18 @@ def make_train_step(cfg: GSTrainCfg, grid: TileGrid, extent: float, *,
     ``return_overflow=True`` the step returns ``(g, opt, loss, overflow)``
     where overflow is the tiered dropped-tile counter summed over the view
     batch (always 0 on the dense path) — the telemetry
-    ``TierSchedule.note_overflow`` consumes."""
+    ``TierSchedule.note_overflow`` consumes.  ``assign_impl`` /
+    ``assign_budget`` override the cfg's tile-assignment knobs —
+    ``fit_partition`` passes host-probed values (a static budget sized
+    from concrete bbox counts, or a demotion of "auto" to dense for
+    big-splat scenes)."""
     lrs = group_lrs(cfg, extent)
     if k_tiers is _FROM_CFG:
         k_tiers = cfg.resolved_k_tiers()
+    if assign_impl is _FROM_CFG:
+        assign_impl = cfg.assign_impl
+    if assign_budget is _FROM_CFG:
+        assign_budget = cfg.assign_budget
     if k_tiers is not None:
         k_tiers = tuple(int(k) for k in k_tiers)
         if tier_caps is None:
@@ -196,7 +213,9 @@ def make_train_step(cfg: GSTrainCfg, grid: TileGrid, extent: float, *,
         cam, gt, mask = _as_view_batch(cam, gt, mask)
         out = render_batch(gg, cam, grid, K=cfg.assign_K, impl=cfg.impl,
                            bg=cfg.bg, coarse=cfg.coarse,
-                           k_tiers=k_tiers, tier_caps=tier_caps)
+                           k_tiers=k_tiers, tier_caps=tier_caps,
+                           assign_impl=assign_impl,
+                           assign_budget=assign_budget)
         per_view = partial(gs_loss, lambda_dssim=cfg.lambda_dssim)
         if mask is None:
             losses = jax.vmap(lambda p, t: per_view(p, t, None))(out.rgb, gt)
@@ -384,23 +403,39 @@ def fit_partition(g: Gaussians, cams: Camera, gts, masks, cfg: GSTrainCfg,
 
     probe_vi = jnp.arange(min(n_views, max(vb, 2))) % n_views
 
+    # tile-assignment resolution (render.resolve_assignment: probe a
+    # static sorted budget from the whole rig's concrete bbox counts, or
+    # demote "auto" to dense for big-splat scenes) — re-resolved after
+    # every densify, since radii are trained parameters
+    assign = {"impl": cfg.assign_impl, "budget": cfg.assign_budget}
+
+    def probe_assign(gg):
+        impl, budget = resolve_assignment(gg, cams, grid,
+                                          assign_impl=cfg.assign_impl,
+                                          assign_budget=cfg.assign_budget)
+        assign.update(impl=impl, budget=budget)
+
     def reprobe(gg):
-        occ = occupancy_probe_jit(grid, sched.kmax, cfg.coarse)(
+        occ = occupancy_probe_jit(grid, sched.kmax, cfg.coarse,
+                                  assign["impl"], assign["budget"])(
             gg, select(cams, probe_vi))
         sched.probe(occ)
 
     step_cache = {}
 
     def get_step():
-        spec = (sched.k_tiers, sched.tier_caps) if sched else None
+        spec = ((sched.k_tiers, sched.tier_caps) if sched else None,
+                assign["impl"], assign["budget"])
         if spec not in step_cache:
             step_cache[spec] = jax.jit(make_train_step(
                 cfg, grid, extent,
                 k_tiers=sched.k_tiers if sched else None,
                 tier_caps=sched.tier_caps if sched else None,
-                return_overflow=sched is not None))
+                return_overflow=sched is not None,
+                assign_impl=assign["impl"], assign_budget=assign["budget"]))
         return step_cache[spec]
 
+    probe_assign(g)
     if sched is not None and sched.tier_caps is None:
         reprobe(g)
     losses = []
@@ -419,6 +454,7 @@ def fit_partition(g: Gaussians, cams: Camera, gts, masks, cfg: GSTrainCfg,
         if densify_every and i >= densify_from and (i + 1) % densify_every == 0:
             key, sub = jax.random.split(key)
             g, opt = densify(g, opt, sub)
+            probe_assign(g)     # splat sizes shifted: re-size the budget
             if sched is not None:
                 reprobe(g)      # occupancy shifted: re-pick tiers/caps
         if ckpt is not None and ckpt_every and (i + 1) % ckpt_every == 0:

@@ -396,9 +396,9 @@ def ref_step(kt):
         out[k] = tr[k] - lrs[k] * d
     return {k: np.asarray(x) for k, x in out.items()}, float(loss)
 
-def dist_step(mesh, kt):
-    step = make_gs_train_step(mesh, cfg, grid, extent=1.0, impl="ref",
-                              views=V, k_tiers=kt)
+def dist_step(mesh, kt, step_cfg=None):
+    step = make_gs_train_step(mesh, step_cfg or cfg, grid, extent=1.0,
+                              impl="ref", views=V, k_tiers=kt)
     gsh, osh, bsh = gs_shardings(mesh, views=V)
     tr = {k: getattr(g_b, k) for k in
           ("means", "log_scales", "quats", "opacity_logit", "colors")}
@@ -428,6 +428,23 @@ for kt in (None, (4, 8, K)):
                                    err_msg=f"2-D mesh {k} kt={kt}")
     np.testing.assert_allclose([l1, l2], rl, rtol=1e-5, atol=1e-6)
 print("M2D-STEP-MATCH")
+
+# sort-based strip-local assignment == dense sweep through the FULL 2-D
+# mesh step (params after one Adam update at 1e-6; the two impls share the
+# two-key tie-break, so the assignment itself is bit-identical and the
+# only differences left are float reassociation downstream)
+for kt in (None, (4, 8, K)):
+    p_sd, l_sd = dist_step(mesh2d, kt,
+                           GSTrainCfg(K=K, lr_colors=5e-2,
+                                      assign_impl="sorted"))
+    p_dn, l_dn = dist_step(mesh2d, kt,
+                           GSTrainCfg(K=K, lr_colors=5e-2,
+                                      assign_impl="dense"))
+    for k in p_sd:
+        np.testing.assert_allclose(p_sd[k], p_dn[k], rtol=1e-6, atol=1e-6,
+                                   err_msg=f"sorted-vs-dense {k} kt={kt}")
+    np.testing.assert_allclose(l_sd, l_dn, rtol=1e-6, atol=1e-7)
+print("M2D-ASSIGN-SORTED")
 
 # tiered-by-DEFAULT cfg (k_tiers resolved from GSTrainCfg, caps fall back
 # to the always-exact strip size) must equal the dense escape hatch
@@ -468,13 +485,16 @@ def test_2d_mesh_step_matches_1d_and_single_device(tmp_path):
     """The ("part", "view") 2-D mesh: view-sharded forward tiles/loss match
     the per-view reference, and the train step (params after one Adam
     update) matches the 1-D mesh and a hand-built single-device step at
-    1e-6 — dense and tiered, overflow 0, tiered-by-default cfg included."""
+    1e-6 — dense and tiered, overflow 0, tiered-by-default cfg included —
+    and the sort-based strip assignment (cfg.assign_impl="sorted") matches
+    the dense sweep through the full 2-D step at 1e-6."""
     code = MESH2D_SCRIPT % {"src": SRC}
     out = subprocess.run([sys.executable, "-c", code], capture_output=True,
                          text=True, timeout=900)
     assert out.returncode == 0, (out.stdout[-2000:], out.stderr[-3000:])
     assert "M2D-FWD-MATCH" in out.stdout
     assert "M2D-STEP-MATCH" in out.stdout
+    assert "M2D-ASSIGN-SORTED" in out.stdout
     assert "M2D-DEFAULT-TIERED" in out.stdout
     assert "M2D-DIVISIBILITY" in out.stdout
 

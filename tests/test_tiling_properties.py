@@ -7,7 +7,12 @@ Pins the contract the rasterizer relies on:
     non-decreasing);
   * the coarse superblock pre-cull returns identical (idx, score) to the
     dense path on live slots whenever its candidate budget covers the true
-    per-superblock occupancy (empty-slot idx values are unspecified).
+    per-superblock occupancy (empty-slot idx values are unspecified);
+  * the sort-based path (assign_tiles_sorted) is BIT-IDENTICAL to the
+    dense sweep — indices, scores, empty slots, overflow counters —
+    whenever its per-splat tile budget covers the scene, including
+    duplicate scores, saturated K, empty tiles and under vmap; a starved
+    budget fires the overflow counter with the exact dropped-slot count.
 """
 
 import jax
@@ -16,7 +21,9 @@ import numpy as np
 import pytest
 
 from repro.core.projection import Splats2D
-from repro.core.tiling import NEG, TileGrid, assign_tiles, tile_bounds
+from repro.core.tiling import (NEG, SORTED_MIN_TILES, TileGrid, assign_tiles,
+                               assign_tiles_sorted, resolve_assign_impl,
+                               tile_bounds)
 
 
 def random_splats(seed, n, w, h, *, rmax=9.0, invalid_frac=0.1):
@@ -166,6 +173,240 @@ def test_topk_tiebreak_is_merge_order_invariant():
     sc, ix = np.asarray(score_ref), np.asarray(idx_ref)
     same = (np.diff(sc, axis=1) == 0) & (sc[:, :-1] > NEG / 2)
     assert (np.diff(ix, axis=1)[same] > 0).all()
+
+
+# ---------------------------------------------------------------------------
+# Sort-based assignment (assign_tiles_sorted) vs the dense oracle
+# ---------------------------------------------------------------------------
+
+
+def _bbox_tile_counts(splats, grid):
+    """Numpy oracle of the sorted path's per-splat bbox candidate count
+    (the quantity its budget bounds and its overflow counter reports)."""
+    mean = np.asarray(splats.mean2d)
+    rad = np.asarray(splats.radius)
+    valid = np.asarray(splats.valid)
+    x0 = np.clip(np.ceil((mean[:, 0] - rad) / grid.tile_w) - 1,
+                 0, grid.nx - 1)
+    x1 = np.clip(np.floor((mean[:, 0] + rad) / grid.tile_w), 0, grid.nx - 1)
+    y0 = np.clip(np.ceil((mean[:, 1] - rad) / grid.tile_h) - 1,
+                 0, grid.ny - 1)
+    y1 = np.clip(np.floor((mean[:, 1] + rad) / grid.tile_h), 0, grid.ny - 1)
+    return np.where(valid, (x1 - x0 + 1) * (y1 - y0 + 1), 0).astype(np.int64)
+
+
+@pytest.mark.parametrize("seed,n,res,K,kwargs", [
+    (0, 150, 32, 64, {}),                        # K covers every tile
+    (1, 300, 48, 96, {}),
+    (11, 400, 64, 8, {}),                        # saturated K (K < overlap)
+    (12, 500, 64, 4, dict(rmax=14.0, invalid_frac=0.0)),   # heavy ties at K
+    (13, 40, 128, 16, dict(rmax=2.0)),           # mostly EMPTY tiles
+    (14, 200, 64, 16, dict(invalid_frac=0.6)),   # many dead splats
+])
+def test_sorted_assignment_bit_identical_to_dense(seed, n, res, K, kwargs):
+    """Full-budget sorted == dense on EVERYTHING: indices (live and empty
+    slots), scores, and the overflow counter — the contract that lets the
+    sorted path replace the sweep with zero downstream change."""
+    grid = TileGrid(res, res, 8, 16)
+    splats = random_splats(seed, n, res, res, **kwargs)
+    i_d, s_d, ov_d = assign_tiles(splats, grid, K=K, return_overflow=True)
+    i_s, s_s, ov_s = assign_tiles_sorted(splats, grid, K=K,
+                                         tile_budget=grid.n_tiles,
+                                         return_overflow=True)
+    assert int(ov_d) == 0 and int(ov_s) == 0
+    np.testing.assert_array_equal(np.asarray(s_d), np.asarray(s_s))
+    np.testing.assert_array_equal(np.asarray(i_d), np.asarray(i_s))
+    # the dispatcher routes impl="sorted" to the same result
+    i_2, s_2 = assign_tiles(splats, grid, K=K, impl="sorted",
+                            tile_budget=grid.n_tiles)
+    np.testing.assert_array_equal(np.asarray(i_d), np.asarray(i_2))
+    np.testing.assert_array_equal(np.asarray(s_d), np.asarray(s_2))
+
+
+def test_sorted_assignment_tie_break_bit_identical():
+    """Duplicate depths at the K boundary: the sorted path's stable
+    (depth, splat index) ranking must reproduce the dense sweep's two-key
+    tie-break exactly (the same invariant the merge-order test pins for
+    the dense path)."""
+    res = 32
+    grid = TileGrid(res, res, 8, 16)
+    r = np.random.default_rng(7)
+    n = 300
+    depths = np.repeat(r.uniform(0.5, 5.0, n // 4), 4)[:n]   # 4-way ties
+    splats = random_splats(15, n, res, res, rmax=12.0, invalid_frac=0.0)
+    splats = splats._replace(depth=jnp.asarray(depths, jnp.float32))
+    i_d, s_d = assign_tiles(splats, grid, K=8, block=n)
+    i_s, s_s = assign_tiles_sorted(splats, grid, K=8,
+                                   tile_budget=grid.n_tiles)
+    np.testing.assert_array_equal(np.asarray(i_d), np.asarray(i_s))
+    np.testing.assert_array_equal(np.asarray(s_d), np.asarray(s_s))
+
+
+def test_sorted_auto_budget_exact_on_small_scenes():
+    """The auto budget (min(T, DEFAULT_TILE_BUDGET)) covers these scenes:
+    overflow 0 and full bit-identity without an explicit tile_budget."""
+    for seed, n, res in [(2, 60, 64), (16, 250, 48)]:
+        grid = TileGrid(res, res, 8, 16)
+        splats = random_splats(seed, n, res, res, rmax=6.0)
+        i_d, s_d = assign_tiles(splats, grid, K=24)
+        i_s, s_s, ov = assign_tiles_sorted(splats, grid, K=24,
+                                           return_overflow=True)
+        assert int(ov) == 0
+        np.testing.assert_array_equal(np.asarray(i_d), np.asarray(i_s))
+        np.testing.assert_array_equal(np.asarray(s_d), np.asarray(s_s))
+
+
+def test_sorted_budget_overflow_counter_fires():
+    """A starved per-splat budget must be SURFACED, not silently wrong:
+    the counter reports exactly the bbox candidate slots dropped past the
+    budget (conservative superset of true hits — 0 proves exactness), and
+    the truncated output stays well-formed: front-to-back scores and live
+    entries that are a subset of the exact assignment's."""
+    grid = TileGrid(64, 64, 8, 16)
+    splats = random_splats(17, 400, 64, 64, rmax=9.0, invalid_frac=0.0)
+    cnt = _bbox_tile_counts(splats, grid)
+    budget = max(1, int(cnt.max()) // 2)
+    i_b, s_b, ov = assign_tiles_sorted(splats, grid, K=24,
+                                       tile_budget=budget,
+                                       return_overflow=True)
+    want = int(np.maximum(cnt - budget, 0).sum())
+    assert int(ov) == want and want > 0
+    s_b = np.asarray(s_b)
+    assert (np.diff(s_b, axis=1) <= 1e-6).all()      # still front-to-back
+    # every live (tile, splat) pair the truncated run kept is a true pair
+    # of the exact run (K = N: nothing truncated on the oracle side)
+    i_x, s_x = assign_tiles(splats, grid, K=400)
+    exact = {(t, int(i)) for t in range(grid.n_tiles)
+             for i, sc in zip(np.asarray(i_x)[t], np.asarray(s_x)[t])
+             if sc > NEG / 2}
+    live = s_b > NEG / 2
+    got = {(t, int(i)) for t in range(grid.n_tiles)
+           for i in np.asarray(i_b)[t][live[t]]}
+    assert got <= exact
+
+
+def test_sorted_assignment_under_vmap():
+    """render_batch vmaps the assignment over views — the sorted path must
+    match its own unbatched result and the dense oracle per view."""
+    grid = TileGrid(48, 48, 8, 16)
+    sp = [random_splats(20 + v, 250, 48, 48) for v in range(3)]
+    batched = jax.tree.map(lambda *xs: jnp.stack(xs), *sp)
+    f = lambda s: assign_tiles_sorted(s, grid, K=16,
+                                      tile_budget=grid.n_tiles)
+    idx_b, score_b = jax.vmap(f)(batched)
+    for v in range(3):
+        i_d, s_d = assign_tiles(sp[v], grid, K=16)
+        np.testing.assert_array_equal(np.asarray(score_b[v]), np.asarray(s_d))
+        np.testing.assert_array_equal(np.asarray(idx_b[v]), np.asarray(i_d))
+
+
+def test_assign_impl_auto_resolution():
+    """"auto" picks sorted only when it can prove it should: enough tiles
+    AND a known (probed/explicit) per-splat budget lean enough to win.
+    No budget in hand -> the always-exact dense sweep (a directly jitted
+    building block must not silently truncate); a fat budget demotes too
+    (big-splat scenes are where duplicate-and-sort loses).  Unknown impls
+    fail loudly."""
+    from repro.core.tiling import SORTED_BUDGET_RATIO
+    T = 4 * SORTED_MIN_TILES
+    ok_budget = T // SORTED_BUDGET_RATIO
+    assert resolve_assign_impl("auto", SORTED_MIN_TILES - 1, 8) == "dense"
+    assert resolve_assign_impl("auto", SORTED_MIN_TILES) == "dense"  # no B
+    assert resolve_assign_impl("auto", T, ok_budget) == "sorted"
+    assert resolve_assign_impl("auto", T, ok_budget + 1) == "dense"
+    # explicit impls are never overridden by the budget
+    assert resolve_assign_impl("sorted", T, T) == "sorted"
+    assert resolve_assign_impl("dense", 10 ** 6) == "dense"
+    assert resolve_assign_impl("sorted", 1) == "sorted"
+    with pytest.raises(ValueError):
+        resolve_assign_impl("radix", 64)
+    with pytest.raises(ValueError):
+        grid = TileGrid(32, 32, 8, 16)
+        assign_tiles(random_splats(0, 10, 32, 32), grid, K=4, impl="nope")
+
+
+def test_resolve_assignment_probes_and_demotes():
+    """render.resolve_assignment — the shared host-loop policy: probes a
+    budget over the whole rig for small-splat scenes (sorted wins), and
+    demotes "auto" to dense on big-splat scenes; pinned impls keep their
+    choice, explicit budgets are honored verbatim."""
+    from repro.core.cameras import orbital_rig
+    from repro.core.gaussians import from_points
+    from repro.core.render import resolve_assignment
+
+    r = np.random.default_rng(6)
+    grid = TileGrid(256, 256, 8, 16)          # T = 512 >= SORTED_MIN_TILES
+    cams = orbital_rig(3, (0.5, 0.5, 0.5), 2.6, width=256, height=256)
+
+    def scene(n, scale):
+        pts = r.uniform(0, 1, (n, 3))
+        return from_points(jnp.asarray(pts, jnp.float32),
+                           jnp.asarray(r.uniform(0, 1, (n, 3))),
+                           init_scale=scale / n ** (1 / 3), opacity=0.8)
+
+    small = scene(20000, 0.4)                 # tiny splats: sorted wins
+    impl, budget = resolve_assignment(small, cams, grid)
+    assert impl == "sorted" and budget is not None
+    assert budget * 20 <= grid.n_tiles        # probed lean budget
+    big = scene(300, 0.6)                     # huge splats: dense wins
+    impl_b, budget_b = resolve_assignment(big, cams, grid)
+    assert impl_b == "dense" and budget_b is None
+    # pinned sorted keeps sorted but still gets a probed budget
+    impl_s, budget_s = resolve_assignment(big, cams, grid,
+                                          assign_impl="sorted")
+    assert impl_s == "sorted" and budget_s is not None
+    # explicit budgets pass through untouched
+    impl_e, budget_e = resolve_assignment(small, cams, grid,
+                                          assign_impl="sorted",
+                                          assign_budget=24)
+    assert (impl_e, budget_e) == ("sorted", 24)
+
+
+def test_render_views_probed_budget_stays_exact_on_big_splats():
+    """The app-level honesty gate: on a big-splat scene at a grid past the
+    auto crossover, render_views must probe the per-splat budget from
+    concrete bbox counts — demoting "auto" to the dense sweep (sorted
+    cannot win there) and, when sorted is pinned, sizing the budget so the
+    render stays bit-identical to the dense oracle."""
+    from repro.core.cameras import orbital_rig
+    from repro.core.gaussians import from_points
+    from repro.core.pipeline import render_views
+
+    r = np.random.default_rng(5)
+    pts = r.uniform(0, 1, (400, 3))
+    g = from_points(jnp.asarray(pts, jnp.float32),
+                    jnp.asarray(r.uniform(0, 1, (400, 3))),
+                    init_scale=0.5 / 400 ** (1 / 3), opacity=0.8)
+    grid = TileGrid(256, 256, 8, 16)
+    assert grid.n_tiles >= SORTED_MIN_TILES
+    cams = orbital_rig(2, (0.5, 0.5, 0.5), 2.2, width=256, height=256)
+    rgb_d, _ = render_views(g, cams, grid, K=16, assign_impl="dense")
+    rgb_a, _ = render_views(g, cams, grid, K=16)                # auto
+    rgb_s, _ = render_views(g, cams, grid, K=16, assign_impl="sorted")
+    np.testing.assert_array_equal(rgb_a, rgb_d)
+    np.testing.assert_array_equal(rgb_s, rgb_d)
+
+
+def test_sorted_assignment_through_render_ref_and_interpret():
+    """End-to-end: swapping assign_impl never changes the rendered tiles,
+    on both the jnp oracle and the interpreted Pallas kernel."""
+    from repro.core.cameras import orbital_rig, select
+    from repro.core.gaussians import from_points
+    from repro.core.render import render_tiles
+
+    r = np.random.default_rng(3)
+    pts = r.uniform(0, 1, (300, 3))
+    g = from_points(jnp.asarray(pts, jnp.float32),
+                    jnp.asarray(r.uniform(0, 1, (300, 3))), opacity=0.8)
+    cams = orbital_rig(1, (0.5, 0.5, 0.5), 1.8, width=48, height=48)
+    grid = TileGrid(48, 48, 8, 16)
+    for impl in ("ref", "interpret"):
+        t_d, _, _ = render_tiles(g, select(cams, 0), grid, K=16, impl=impl,
+                                 assign_impl="dense")
+        t_s, _, _ = render_tiles(g, select(cams, 0), grid, K=16, impl=impl,
+                                 assign_impl="sorted",
+                                 assign_budget=grid.n_tiles)
+        np.testing.assert_array_equal(np.asarray(t_d), np.asarray(t_s))
 
 
 def test_coarse_cull_under_vmap():

@@ -1,0 +1,110 @@
+"""CI benchmark-regression gate: compare a benchmark summary against the
+committed baseline and fail on wall-clock regressions.
+
+    # produce a summary (CI does this in the bench job)
+    PYTHONPATH=src python -m benchmarks.run --smoke --json BENCH_SMOKE.json
+
+    # gate: exit 1 if any benchmark regressed past --max-ratio (default 2x)
+    python tools/check_bench.py --bench BENCH_SMOKE.json
+
+    # refresh the committed baseline after an intentional perf change
+    python tools/check_bench.py --bench BENCH_SMOKE.json --update
+
+The baseline (benchmarks/baseline.json) and the per-run summaries
+(BENCH_*.json) share one schema — ``{"schema": 1, "mode": ...,
+"entries": [{"name", "config", "wall_clock_s"}, ...]}`` — emitted by
+``benchmarks/run.py --json``.  The 2x default ratio absorbs shared-runner
+noise (absolute wall-clocks are machine-dependent) while still catching
+step-change regressions like an accidentally recompiling hot loop; refresh
+the baseline with --update when a PR intentionally shifts the numbers.
+Because the comparison is on ABSOLUTE wall-clocks, the committed baseline
+should come from the same machine class as the gate: after the bench job's
+first green run, download its bench-smoke artifact and commit
+`check_bench.py --bench BENCH_SMOKE.json --update`'s output so baseline
+and measurement share runner hardware (a dev-box baseline on a runner that
+is legitimately >2x slower reads as a regression).  The two files must
+also share the run MODE (smoke vs default/full) — mismatches fail loudly.
+
+Benchmarks present in the run but missing from the baseline (a new bench)
+only warn — commit an --update'd baseline alongside the new benchmark.
+Baseline entries missing from the run warn too (a bench was removed or
+renamed: update the baseline).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def load(path):
+    with open(path) as f:
+        data = json.load(f)
+    if data.get("schema") != 1 or "entries" not in data:
+        raise SystemExit(
+            f"{path}: not a schema-1 benchmark summary (run `python -m "
+            f"benchmarks.run --smoke --json {path}` — match the baseline's "
+            f"mode)")
+    return data
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bench", default="BENCH_SMOKE.json",
+                    help="summary produced by benchmarks.run --json")
+    ap.add_argument("--baseline", default="benchmarks/baseline.json",
+                    help="committed reference summary")
+    ap.add_argument("--max-ratio", type=float, default=2.0,
+                    help="fail when wall_clock_s exceeds baseline * ratio")
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the baseline from --bench and exit 0")
+    args = ap.parse_args()
+
+    bench = load(args.bench)
+    if args.update:
+        with open(args.baseline, "w") as f:
+            json.dump(bench, f, indent=1)
+            f.write("\n")
+        print(f"[check_bench] baseline updated: {args.baseline} "
+              f"({len(bench['entries'])} entries)")
+        return
+
+    base = load(args.baseline)
+    if bench.get("mode") != base.get("mode"):
+        raise SystemExit(
+            f"[check_bench] FAIL: mode mismatch — {args.bench} was run in "
+            f"{bench.get('mode')!r} mode but {args.baseline} holds "
+            f"{base.get('mode')!r} wall-clocks; comparing them would make "
+            f"the ratio gate meaningless.  Re-run the benchmarks in the "
+            f"baseline's mode, or refresh the baseline with --update.")
+    base_by_name = {e["name"]: e for e in base["entries"]}
+    failures = []
+    for e in bench["entries"]:
+        ref = base_by_name.pop(e["name"], None)
+        if ref is None:
+            print(f"[check_bench] WARNING: no baseline for "
+                  f"{e['name']!r} ({e['wall_clock_s']:.1f}s) — new "
+                  f"benchmark?  Refresh with --update.")
+            continue
+        ratio = e["wall_clock_s"] / max(ref["wall_clock_s"], 1e-9)
+        status = "OK" if ratio <= args.max_ratio else "REGRESSED"
+        print(f"[check_bench] {e['name']:20s} {e['wall_clock_s']:8.1f}s  "
+              f"baseline {ref['wall_clock_s']:8.1f}s  ({ratio:.2f}x)  "
+              f"{status}")
+        if ratio > args.max_ratio:
+            failures.append((e["name"], ratio))
+    for name in base_by_name:
+        print(f"[check_bench] WARNING: baseline entry {name!r} missing "
+              f"from this run — removed benchmark?  Refresh with --update.")
+    if failures:
+        names = ", ".join(f"{n} ({r:.2f}x)" for n, r in failures)
+        print(f"[check_bench] FAIL: wall-clock regression past "
+              f"{args.max_ratio}x vs {args.baseline}: {names}")
+        sys.exit(1)
+    print(f"[check_bench] PASS: {len(bench['entries'])} benchmark(s) "
+          f"within {args.max_ratio}x of baseline")
+
+
+if __name__ == "__main__":
+    main()
