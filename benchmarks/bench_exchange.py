@@ -1,0 +1,205 @@
+"""Sparse-overlap splat exchange vs the full-table all-gather (tentpole
+gate for the exchange path in core/distributed.py).
+
+The all-gather moves EVERY partition's projected table to every device even
+though a device's tile sub-window only needs the splats whose bboxes
+overlap it.  The exchange probes a per-(src, dst) edge budget E and moves
+exactly ``n_data * E`` rows per table tensor via one ``lax.all_to_all`` —
+so the per-device communicated payload drops from ``n_data * n_local`` rows
+to ``n_data * E`` rows, i.e. proportionally to the probed strip overlap.
+This benchmark measures that proportionality on a real scene (plus the
+train-step wall-clocks for context — on forced HOST devices the collective
+is memcpy-emulated, so payload, not wall-clock, is the headline number) and
+asserts exchange/gather loss parity so the timed configs are known-equal.
+
+Runs its measurement in a SUBPROCESS with
+``XLA_FLAGS=--xla_force_host_platform_device_count=4`` (the flag must be
+set before jax initializes, and the orchestrator has long since imported
+jax), mesh ("part",) x 4.
+
+    PYTHONPATH=src python -m benchmarks.bench_exchange [--smoke]
+        [--res 128] [--points-per-part 1024] [--reps 3]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+from benchmarks.common import save_result
+
+N_DEV = 4
+
+
+def _inner(*, res: int, n_local: int, views: int, reps: int):
+    """Runs inside the forced-host-device subprocess; prints one RESULT
+    line of JSON as its last stdout line."""
+    import time
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.cameras import orbital_rig, select
+    from repro.core.distributed import (ExchangeSchedule, gs_shardings,
+                                        make_gs_exchange_probe,
+                                        make_gs_train_step)
+    from repro.core.gaussians import from_points
+    from repro.core.projection import project
+    from repro.core.tiling import TileGrid, splat_features
+    from repro.core.train import GSOptState, GSTrainCfg
+    from repro.data.isosurface import point_cloud_for
+
+    K = 16
+    n_total = N_DEV * n_local
+    grid = TileGrid(res, res, 8, 16)
+    # kingsnake close-up: the surface fills the frame and spreads across
+    # the horizontal tile bands, so each device's sub-window genuinely sees
+    # only a fraction of each peer's splats (~28% probed overlap) — the
+    # regime the exchange exists for.  point_cloud_for returns ~n points,
+    # so over-request and slice.
+    pts, cols = point_cloud_for("kingsnake", int(n_total * 1.5))
+    assert pts.shape[0] >= n_total, pts.shape
+    pts, cols = pts[:n_total], cols[:n_total]
+    cams = orbital_rig(views, (0.5, 0.5, 0.5), 0.8, width=res, height=res)
+    cam_b = select(cams, jnp.arange(views))
+    g_all = from_points(jnp.asarray(pts), jnp.asarray(cols),
+                        init_scale=0.008 if res >= 128 else 0.01,
+                        opacity=0.8)
+    g_b = jax.tree.map(lambda x: x[None], g_all)       # (P=1, N, ...)
+
+    mesh = jax.make_mesh((N_DEV,), ("part",))
+    g_sh, opt_sh, b_sh = gs_shardings(mesh, views=views)
+    g_dev = jax.device_put(g_b, g_sh)
+    cam_dev = jax.device_put(cam_b, b_sh["cam"])
+
+    # ---- probe the edge budget; payload is rows * row_bytes ----
+    probe = jax.jit(make_gs_exchange_probe(mesh, grid, views=views))
+    max_edge = int(probe(g_dev, cam_dev))
+    es = ExchangeSchedule()
+    E = es.probe_budget(max_edge, n_local)
+    F = splat_features(project(g_all, select(cams, 0))).shape[-1]
+    row_bytes = (F + 3) * 4                            # feat f32 + aux f32
+    bytes_gather = N_DEV * views * n_local * row_bytes
+    bytes_exchange = N_DEV * views * E * row_bytes
+
+    # ---- one train step, gather vs exchange ----
+    gt = jnp.zeros((views, grid.n_tiles, 3, grid.tile_h, grid.tile_w))
+    mask = jnp.ones((views, grid.n_tiles, grid.tile_h, grid.tile_w), bool)
+    batch = {"gt_tiles": jax.device_put(gt, b_sh["gt_tiles"]),
+             "mask_tiles": jax.device_put(mask, b_sh["mask_tiles"]),
+             "cam": cam_dev}
+    def fresh_state():
+        # fresh buffers each config: the step DONATES g/opt, and device_put
+        # aliases (doesn't copy) leaves whose sharding already matches, so
+        # reusing one host tree across configs would hand the second run
+        # deleted buffers
+        g = jax.tree.map(jnp.array, g_b)
+        tr = {k: getattr(g, k) for k in
+              ("means", "log_scales", "quats", "opacity_logit", "colors")}
+        o = GSOptState(
+            m=jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32), tr),
+            v=jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32), tr),
+            step=jnp.int32(0),
+            grad_accum=jnp.zeros((1, n_total)),
+            grad_count=jnp.zeros((1, n_total)))
+        return jax.device_put(g, g_sh), jax.device_put(o, opt_sh)
+
+    def timed(cfg):
+        step = make_gs_train_step(mesh, cfg, grid, extent=1.0, impl="ref",
+                                  views=views)
+        # the step donates g/opt, so thread the returned state through
+        g, o = fresh_state()
+        g, o, loss = step(g, o, batch)                 # warmup: compile
+        loss = float(jax.block_until_ready(loss))
+        best = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            g, o, l = step(g, o, batch)
+            jax.block_until_ready(l)
+            best = min(best, time.perf_counter() - t0)
+        return best, loss
+
+    t_g, l_g = timed(GSTrainCfg(K=K))
+    t_e, l_e = timed(GSTrainCfg(K=K, exchange=True, exchange_budget=E))
+    np.testing.assert_allclose(l_e, l_g, rtol=1e-6, atol=1e-7)
+
+    print("RESULT " + json.dumps({
+        "n_devices": N_DEV, "n_local": n_local, "views": views, "res": res,
+        "n_tiles": grid.n_tiles, "max_edge_overlap": max_edge, "budget": E,
+        "overlap_frac": max_edge / n_local, "budget_frac": E / n_local,
+        "payload_bytes_gather": bytes_gather,
+        "payload_bytes_exchange": bytes_exchange,
+        "payload_reduction": bytes_gather / bytes_exchange,
+        "t_step_gather_s": t_g, "t_step_exchange_s": t_e,
+        "step_speedup": t_g / t_e, "loss": l_g}))
+
+
+def run(*, res: int = 128, n_local: int = 512, views: int = 4,
+        reps: int = 3, quick: bool = False, gate_floor: float | None = None):
+    if quick:
+        res, n_local, views, reps = 64, 256, 2, 2
+    cmd = [sys.executable, "-m", "benchmarks.bench_exchange", "--inner",
+           "--res", str(res), "--points-per-part", str(n_local),
+           "--views", str(views), "--reps", str(reps)]
+    env = dict(os.environ,
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={N_DEV}",
+               JAX_PLATFORMS="cpu")
+    env.setdefault("PYTHONPATH", "src")
+    print(f"\n[exchange] res={res} n_local={n_local} x{N_DEV} parts "
+          f"V={views} (subprocess, {N_DEV} forced host devices)")
+    proc = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                          timeout=1800)
+    sys.stdout.write(proc.stdout[: proc.stdout.rfind("RESULT ")])
+    sys.stderr.write(proc.stderr[-2000:] if proc.returncode else "")
+    if proc.returncode:
+        raise SystemExit(f"bench_exchange inner failed ({proc.returncode})")
+    r = json.loads(proc.stdout.rstrip().rsplit("RESULT ", 1)[1])
+
+    mb = 1.0 / (1024 * 1024)
+    print(f"  probed edge overlap {r['max_edge_overlap']}/{r['n_local']} "
+          f"({r['overlap_frac']:.1%}) -> budget {r['budget']} "
+          f"({r['budget_frac']:.1%})")
+    print(f"  per-device payload: all-gather "
+          f"{r['payload_bytes_gather'] * mb:7.2f} MiB  exchange "
+          f"{r['payload_bytes_exchange'] * mb:7.2f} MiB  "
+          f"({r['payload_reduction']:.2f}x smaller, proportional to the "
+          f"probed overlap)")
+    print(f"  train step: gather {r['t_step_gather_s'] * 1e3:8.2f} ms  "
+          f"exchange {r['t_step_exchange_s'] * 1e3:8.2f} ms  "
+          f"({r['step_speedup']:.2f}x; host-device collectives are "
+          f"memcpy-emulated — payload is the headline)")
+    save_result("exchange", r)
+    if gate_floor is not None and r["payload_reduction"] < gate_floor:
+        raise SystemExit(
+            f"exchange payload gate FAILED: {r['payload_reduction']:.2f}x "
+            f"reduction below floor {gate_floor:.2f}x — the probed budget "
+            f"no longer undercuts the full table")
+    return r
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--res", type=int, default=128)
+    ap.add_argument("--points-per-part", type=int, default=512)
+    ap.add_argument("--views", type=int, default=4)
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--gate-floor", type=float, default=None,
+                    help="fail unless the exchange payload is at least this "
+                         "factor smaller than the all-gather's")
+    ap.add_argument("--inner", action="store_true", help=argparse.SUPPRESS)
+    args = ap.parse_args()
+    if args.inner:
+        _inner(res=args.res, n_local=args.points_per_part,
+               views=args.views, reps=args.reps)
+        return
+    run(res=args.res, n_local=args.points_per_part, views=args.views,
+        reps=args.reps, quick=args.smoke, gate_floor=args.gate_floor)
+
+
+if __name__ == "__main__":
+    main()

@@ -5,7 +5,7 @@
 
 Default mode balances coverage vs CPU time (~10-20 min); --full runs the
 longer protocols; --smoke is the CI tier (batched-render + tiered-raster +
-assignment microbenches, a few minutes on CPU).  Results are printed AND
+assignment + exchange microbenches, a few minutes on CPU).  Results are printed AND
 saved under experiments/benchmarks/*.json; ``--json PATH`` additionally
 writes one machine-readable summary — per-benchmark name, config, and
 wall-clock — the format the CI regression gate (tools/check_bench.py vs
@@ -25,8 +25,9 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--smoke", action="store_true",
-                    help="CI smoke tier: batched-render, tiered-raster and "
-                         "assignment microbenches only (a few min on CPU)")
+                    help="CI smoke tier: batched-render, tiered-raster, "
+                         "assignment and exchange microbenches only (a few "
+                         "min on CPU)")
     ap.add_argument("--skip-roofline", action="store_true")
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="write a machine-readable summary (name, config, "
@@ -88,6 +89,15 @@ def main():
     bench("assign",
           lambda: bench_assign.run(quick=quick or args.smoke,
                                    gate_floor=0.8))
+
+    from benchmarks import bench_exchange
+    # payload floor 1.5: the probed kingsnake budget sits at ~50% of the
+    # local table, so a healthy exchange halves the communicated bytes;
+    # dropping under 1.5x means the probe/budget path stopped undercutting
+    # the full-table all-gather
+    bench("exchange",
+          lambda: bench_exchange.run(quick=quick or args.smoke,
+                                     gate_floor=1.5))
 
     if args.smoke:
         print(f"\n[benchmarks] smoke tier done in {time.time()-t0:.0f}s; "

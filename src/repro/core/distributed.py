@@ -30,6 +30,23 @@ Canonical production meshes: ``("part", "view")`` for the 2-D trainer and
 ``("pod", "part", "model")`` for the legacy pixel-sharded layout; any subset
 containing a "part"/"data" axis works (see ``_axes``).
 
+Sparse-overlap exchange (``exchange=True`` / cfg.exchange): the full-table
+all-gather is the scaling wall at paper-scale splat counts — every device
+pays O(N_total) wire bytes per step regardless of how little of the image
+its splats touch.  The exchange path replaces it: each device's window is
+further split over "part" into per-device sub-windows, each source packs
+ONLY the local splats whose tile bboxes overlap each destination's
+sub-window (``core.tiling.window_overlap_mask`` — the same bbox math as the
+sorted assignment) into a static per-(src, dst) edge budget, and the packed
+slabs move via one ``lax.all_to_all`` over "part".  Budgets are probed
+(``probe_gs_exchange`` / ``ExchangeSchedule``), overflow is counted and
+psum'd — never silent truncation — and the ``fit_partitions`` driver grows
+starved budgets geometrically, exactly the probe/overflow honesty contract
+the tier schedule and sorted assignment already follow.  The received
+table is a src-major, order-preserving subsequence of the all-gather
+table, so the two-key (score, index) assignment selects identical splats
+and the step matches the gather path to float association.
+
 Implemented with ``shard_map`` + explicit ``lax.all_gather`` so the
 collective schedule is *by construction* (an earlier pjit-constraint version
 let the SPMD partitioner sink the table all-gather into the tile-assignment
@@ -58,12 +75,14 @@ from repro.core.gaussians import Gaussians
 from repro.core.metrics import ssim_map
 from repro.core.projection import project
 from repro.core.render import resolve_assignment
-from repro.core.tiling import (DEFAULT_ASSIGN_IMPL, FEAT_DIM, TierSchedule,
-                               TileGrid, bin_tiles_by_occupancy,
+from repro.core.tiling import (DEFAULT_ASSIGN_IMPL, DEFAULT_TILE_BUDGET,
+                               FEAT_DIM, TierSchedule, TileGrid,
+                               bin_tiles_by_occupancy, grow_tile_budget,
                                resolve_assign_impl, sorted_assign_window,
                                splat_features, tile_bounds, tile_image,
                                tile_occupancy, tile_tiers,
-                               topk_by_score_then_index)
+                               topk_by_score_then_index,
+                               window_overlap_mask)
 from repro.core.train import (GSTrainCfg, GSOptState, densify_and_prune,
                               group_lrs, init_opt)
 from repro.kernels import rasterize_tiles
@@ -172,7 +191,12 @@ def _assign_tiles_local(mean2d, radius, depth, valid, lo, hi, *, K: int,
     """Top-K front-most splats for THIS shard's tile strip.
 
     mean2d (Pl, N, 2), radius/depth/valid (Pl, N); lo/hi (Tl, 2) strip bounds.
-    -> idx (Pl, Tl, K) int32, score (Pl, Tl, K).
+    -> idx (Pl, Tl, K) int32, score (Pl, Tl, K), overflow () int32 — the
+    sorted path's dropped bbox-candidate count summed over the partition
+    axis (always 0 on the dense sweep, which has no budget to starve);
+    the distributed forward psums it into the step's ``"assign"`` counter
+    so the driver can grow a starved ``tile_budget`` instead of silently
+    truncating.
 
     ``impl="sorted"`` switches to the duplicate-and-sort scatter
     (core.tiling.sorted_assign_window, vmapped over the partition axis):
@@ -192,12 +216,12 @@ def _assign_tiles_local(mean2d, radius, depth, valid, lo, hi, *, K: int,
         Tl = lo.shape[0]
 
         def one(m, r, d, v):
-            idx, score, _ = sorted_assign_window(
+            return sorted_assign_window(
                 m[:, 0], m[:, 1], r, v, d, grid, K=K, t0=t0, n_local=Tl,
                 tile_budget=tile_budget)
-            return idx, score
 
-        return jax.vmap(one)(mean2d, radius, depth, valid)
+        idx, score, ov = jax.vmap(one)(mean2d, radius, depth, valid)
+        return idx, score, ov.sum().astype(jnp.int32)
     block = min(block, max(N, K))
     nb = (N + block - 1) // block
     Np = nb * block
@@ -237,7 +261,7 @@ def _assign_tiles_local(mean2d, radius, depth, valid, lo, hi, *, K: int,
             jnp.zeros((Pl, Tl, K), jnp.int32))
     b0s = jnp.arange(nb, dtype=jnp.int32) * block
     (score, idx), _ = lax.scan(body, init, (mb, rb, db, vb, b0s))
-    return idx, score
+    return idx, score, jnp.zeros((), jnp.int32)
 
 
 def _loss_partials(pred, gt, mask, *, win_size: int = 7):
@@ -270,8 +294,31 @@ def make_gs_forward(mesh, grid: TileGrid, *, K: int, impl: str = "auto",
                     tier_caps: Optional[tuple] = None,
                     return_overflow: bool = False, win_size: int = 7,
                     assign_impl: str = DEFAULT_ASSIGN_IMPL,
-                    assign_budget: Optional[int] = None):
+                    assign_budget: Optional[int] = None,
+                    exchange: bool = False,
+                    exchange_budget: Optional[int] = None):
     """shard_map'd distributed forward: (gaussians, cam, gt, mask) -> loss.
+
+    ``exchange=True`` swaps the table all-gather for the SPARSE-OVERLAP
+    EXCHANGE (module docstring): the window is additionally split over the
+    gaussian axis into per-device sub-windows (the strip's tile count must
+    divide by that axis' size), each source packs only its splats whose
+    bboxes overlap each destination's sub-window into ``exchange_budget``
+    static slots per (src, dst) edge, and one ``lax.all_to_all`` over
+    "part" moves them.  ``exchange_budget=None`` defaults to the local
+    table size (always exact, payload == all_gather — pass a probed budget
+    from ``probe_gs_exchange`` for the sparse win); a starved budget drops
+    the overflowing splats from the receiver's table and FIRES the psum'd
+    ``"exchange"`` overflow counter (see ``return_overflow``) — the output
+    stays well-formed, and the ``fit_partitions`` driver grows the budget.
+    Each device rasterizes (and pays loss partials for) only its own
+    sub-window, so per-device rasterization work also drops by the
+    gaussian-axis size relative to the gather path's redundant strips.
+    Incompatible with ``strip_budget < 1.0`` (the prefilter is the gather
+    path's halfway optimization; exchange subsumes it).  With
+    ``return_tiles=True`` the tiles come back UNFLATTENED as
+    ([V,] P, T, 4, th, tw) — the flat (P*T,) layout of the gather path
+    would interleave sub-windows non-contiguously.
 
     ``assign_impl`` selects the strip-local tile assignment: "auto" (the
     default — sort-based scatter on grids past the measured tile-count
@@ -304,11 +351,16 @@ def make_gs_forward(mesh, grid: TileGrid, *, K: int, impl: str = "auto",
     tile capacities shared by all devices (they must cover the worst
     strip); None defaults to the always-exact full strip size (no tile is
     ever dropped, but every tier launch is strip-sized — pass measured
-    caps in production).  ``return_overflow=True`` appends the global
-    dropped-tile count (summed over strips/partitions/views; 0 == the
-    tiered step is exact) to the outputs — production configs running
-    measured caps should log it, mirroring RenderOut.overflow on the
-    single-device path.
+    caps in production).  ``return_overflow=True`` appends a DICT of three
+    globally psum'd () int32 counters to the outputs — ``"tiles"`` (tiered
+    dropped tiles; 0 == the tiered step is exact), ``"assign"`` (sorted
+    assignment's dropped bbox candidates past ``assign_budget``) and
+    ``"exchange"`` (splats dropped past a starved ``exchange_budget``; 0
+    on the gather path) — the telemetry ``fit_partitions`` consumes for
+    geometric budget growth, mirroring RenderOut.overflow /
+    RenderOut.assign_overflow on the single-device path.  No counter is
+    ever silently swallowed: every truncation path in the step reports
+    here.
 
     views=V enables the view-batched step: cam carries (V, 4, 4) view
     matrices, gt/mask gain a leading V axis, and the loss is the MEAN OF
@@ -359,6 +411,19 @@ def make_gs_forward(mesh, grid: TileGrid, *, K: int, impl: str = "auto",
     T = grid.n_tiles
     assert T % n_model == 0, (T, n_model)
     Tl = T // n_model
+    n_data = sizes[data]
+    sub = Tl
+    if exchange:
+        if strip_budget < 1.0:
+            raise ValueError(
+                f"exchange=True subsumes the strip prefilter; "
+                f"strip_budget must stay 1.0 (got {strip_budget})")
+        if Tl % n_data:
+            raise ValueError(
+                f"exchange=True splits each {Tl}-tile window over the "
+                f"'{data}' axis (size {n_data}); the window tile count "
+                f"must divide by it")
+        sub = Tl // n_data
     tile0 = _tile_axes(ax)
     if k_tiers is not None:
         k_tiers = tuple(int(k) for k in k_tiers)
@@ -383,12 +448,20 @@ def make_gs_forward(mesh, grid: TileGrid, *, K: int, impl: str = "auto",
                       width=P(), height=P())
     in_specs = (g_spec, cam_spec, P(*vlead, tile0, None, None, None),
                 P(*vlead, tile0, None, None))
-    tiles_spec = P(*vlead, tile0, None, None, None)
+    if exchange:
+        # unflattened ([V,] P, T, ...) tiles: the T axis shards over
+        # (model-major, part-minor), exactly the sub-window decomposition
+        # t = mi*Tl + pi*sub — each device's chunk is contiguous there,
+        # which the flat (P*T,) layout can't offer for P > 1
+        win_axes = tuple(a for a in (model, data) if a)
+        tiles_spec = P(*vlead, pod, win_axes, None, None, None)
+    else:
+        tiles_spec = P(*vlead, tile0, None, None, None)
     out_specs = (P(),)
     if return_tiles:
         out_specs += (tiles_spec,)
     if return_overflow:
-        out_specs += (P(),)
+        out_specs += ({"tiles": P(), "assign": P(), "exchange": P()},)
     out_specs = out_specs if len(out_specs) > 1 else P()
 
     lo_full, hi_full = tile_bounds(grid)            # (T, 2) host constants
@@ -406,8 +479,7 @@ def make_gs_forward(mesh, grid: TileGrid, *, K: int, impl: str = "auto",
         else:
             splats = project(g, cam)                # (Pl, Nl, ...)
 
-        # ---- Grendel handoff: all-gather the SMALL projected table over
-        # "part".  bwd(all_gather) = psum_scatter -> grads return sharded.
+        # ---- local compact tables: the per-splat rows both handoffs move
         if gather_mode == "split":
             radius_v = jnp.where(splats.valid, splats.radius, 0.0)
             geo_l = jnp.stack(
@@ -422,47 +494,113 @@ def make_gs_forward(mesh, grid: TileGrid, *, K: int, impl: str = "auto",
                  splats.rgb[..., 0], splats.rgb[..., 1], splats.rgb[..., 2],
                  alpha_v, jnp.zeros_like(alpha_v)],
                 axis=-1).astype(jnp.bfloat16)                  # (Pl,Nl,8)
-            geo = lax.all_gather(geo_l, data, axis=nax, tiled=True)
-            rest = lax.all_gather(rest_l, data, axis=nax, tiled=True)
-            mean_g = geo[..., 0:2]
-            radius_g = geo[..., 2]
-            depth_g = geo[..., 3]
-            valid_g = radius_g > 0
+            tabs_l = (geo_l, rest_l)
         else:
             feat_l = splat_features(splats)                    # (Pl,Nl,F)
             aux_l = jnp.stack(
                 [splats.radius, splats.depth,
                  splats.valid.astype(jnp.float32)], axis=-1)   # (Pl,Nl,3)
-            feat = lax.all_gather(feat_l, data, axis=nax, tiled=True)
-            aux = lax.all_gather(aux_l, data, axis=nax, tiled=True)
+            tabs_l = (feat_l, aux_l)
+
+        fold = lambda x: x.reshape((-1,) + x.shape[2:])
+        t0_strip = lax.axis_index(model) * Tl if model is not None else None
+
+        if exchange:
+            # ---- sparse-overlap exchange: pack only the splats whose
+            # bboxes overlap each destination's sub-window, move them via
+            # one all_to_all over "part" (module docstring).
+            if views:
+                tabs_l = tuple(fold(x) for x in tabs_l)        # (R, Nl, C)
+            Nl = tabs_l[0].shape[1]
+            E = min(exchange_budget, Nl) if exchange_budget else Nl
+            mx_l, my_l = tabs_l[0][..., 0], tabs_l[0][..., 1]
+            if gather_mode == "split":
+                rad_l = tabs_l[0][..., 2]          # geo radius, valid-masked
+                val_l = rad_l > 0
+            else:
+                rad_l = tabs_l[1][..., 0]          # aux radius (raw)
+                val_l = tabs_l[1][..., 2] > 0.5
+            base = 0 if t0_strip is None else t0_strip
+            t0_all = base + jnp.arange(n_data, dtype=jnp.int32) * sub
+            hit = window_overlap_mask(mx_l, my_l, rad_l, val_l, grid,
+                                      t0=t0_all, n_local=sub)
+            # hit (n_data, R, Nl): slab d = MY splats destined for the
+            # device at part-index d.  Candidates past the edge budget are
+            # counted, never silently dropped.
+            counts = hit.sum(-1, dtype=jnp.int32)
+            exchange_ov_l = jnp.maximum(counts - E, 0).sum() \
+                .astype(jnp.int32)
+            slots = jax.vmap(jax.vmap(
+                lambda m: jnp.nonzero(m, size=E, fill_value=Nl)[0]))(hit)
+
+            def exch(x):
+                sent = jax.vmap(lambda s: jax.vmap(
+                    lambda row, i: jnp.take(row, i, axis=0, mode="fill",
+                                            fill_value=0))(x, s))(slots)
+                got = lax.all_to_all(sent, data, 0, 0, tiled=True)
+                # got's axis 0 is the SOURCE part index: flattening it
+                # src-major keeps ascending local rows inside each source —
+                # an order-preserving subsequence of the all-gather table,
+                # so the two-key (score, index) top-k selects the identical
+                # splats whenever E covers.  Fill slots carry radius 0 /
+                # valid 0: dead to assignment and compositing.
+                return got.transpose(1, 0, 2, 3).reshape(
+                    (got.shape[1], n_data * E) + got.shape[3:])
+
+            tabs = tuple(exch(x) for x in tabs_l)
+        else:
+            # ---- Grendel handoff: all-gather the SMALL projected table
+            # over "part".  bwd(all_gather) = psum_scatter -> grads return
+            # sharded.
+            tabs = tuple(lax.all_gather(x, data, axis=nax, tiled=True)
+                         for x in tabs_l)
+            if views:
+                # fold the LOCAL view axis into the partition axis:
+                # (Vl, Pl, ...) -> (Vl*Pl, ...) — stage 2 and the kernel
+                # launch are view-count agnostic
+                tabs = tuple(fold(x) for x in tabs)
+            exchange_ov_l = jnp.zeros((), jnp.int32)
+
+        if gather_mode == "split":
+            geo, rest = tabs
+            mean_g = geo[..., 0:2]
+            radius_g = geo[..., 2]
+            depth_g = geo[..., 3]
+            valid_g = radius_g > 0
+        else:
+            feat, aux = tabs
             mean_g = feat[..., 0:2]
             radius_g = aux[..., 0]
             depth_g = aux[..., 1]
             valid_g = aux[..., 2] > 0.5
 
-        if views:
-            # fold the LOCAL view axis into the partition axis:
-            # (Vl, Pl, ...) -> (Vl*Pl, ...) — stage 2 and the kernel launch
-            # are view-count agnostic
-            fold = lambda x: x.reshape((-1,) + x.shape[2:])
-            mean_g, radius_g, depth_g = (fold(mean_g), fold(radius_g),
-                                         fold(depth_g))
-            valid_g = fold(valid_g)
-            if gather_mode == "split":
-                rest = fold(rest)
-            else:
-                feat = fold(feat)
-
-        # ---- stage 2 (pixel-parallel over "model"): my tile strip only;
-        # without a "model" axis the "strip" is the full tile grid
-        if model is not None:
-            mi = lax.axis_index(model)
-            t0 = mi * Tl                     # strip's flat-tile offset
+        # ---- stage 2 (pixel-parallel over "model"): my tile window — the
+        # model-axis strip, further split over "part" into sub-windows
+        # under exchange; without either axis the window is the whole grid
+        if exchange:
+            pi = lax.axis_index(data)
+            t0 = (0 if t0_strip is None else t0_strip) + pi * sub
+            lo = lax.dynamic_slice_in_dim(lo_full, t0, sub, 0)
+            hi = lax.dynamic_slice_in_dim(hi_full, t0, sub, 0)
+        elif model is not None:
+            t0 = t0_strip                    # strip's flat-tile offset
             lo = lax.dynamic_slice_in_dim(lo_full, t0, Tl, 0)
             hi = lax.dynamic_slice_in_dim(hi_full, t0, Tl, 0)
         else:
-            t0 = None                        # strip == the whole grid
+            t0 = None                        # window == the whole grid
             lo, hi = lo_full, hi_full
+        Wl = sub if exchange else Tl
+
+        if exchange:
+            # gt/mask arrive replicated along "part" with the full strip's
+            # tiles: slice MY sub-window out of each partition's block
+            def subwin(x):
+                lead = 1 if views else 0
+                y = x.reshape(x.shape[:lead] + (-1, Tl) + x.shape[lead + 1:])
+                y = lax.dynamic_slice_in_dim(y, pi * sub, sub, lead + 1)
+                return y.reshape(x.shape[:lead] + (-1,) + x.shape[lead + 1:])
+            gt = subwin(gt)
+            mask = subwin(mask)
 
         N = mean_g.shape[1]
         if strip_budget < 1.0:
@@ -486,7 +624,7 @@ def make_gs_forward(mesh, grid: TileGrid, *, K: int, impl: str = "auto",
             else:
                 feat = take(feat)
 
-        idx, score = _assign_tiles_local(
+        idx, score, assign_ov_l = _assign_tiles_local(
             mean_g, radius_g, depth_g, valid_g,
             lo, hi, K=K, block=assign_block, impl=assign_impl,
             grid=grid, t0=t0, tile_budget=assign_budget)
@@ -516,8 +654,8 @@ def make_gs_forward(mesh, grid: TileGrid, *, K: int, impl: str = "auto",
         Pl = mean_g.shape[0]
         origins = jnp.tile(lo, (Pl, 1))                 # (Pl*Tl, 2)
         if k_tiers is not None:
-            # ---- tiered dispatch over the strip's flat tile axis ----
-            M = Pl * Tl
+            # ---- tiered dispatch over the window's flat tile axis ----
+            M = Pl * Wl
             idx_f = idx.reshape(M, K)
             live_f = live.reshape(M, K)
             occ = live_f.sum(-1).astype(jnp.int32)
@@ -530,7 +668,7 @@ def make_gs_forward(mesh, grid: TileGrid, *, K: int, impl: str = "auto",
                 safe = jnp.minimum(ids, M - 1)          # sentinel-safe rows
                 live_rows = live_f[safe, :k] & (ids < M)[:, None]
                 tier_feats.append(
-                    features_for(safe // Tl, idx_f[safe, :k], live_rows))
+                    features_for(safe // Wl, idx_f[safe, :k], live_rows))
                 tier_origins.append(jnp.take(origins, ids, axis=0,
                                              mode="fill", fill_value=0.0))
             tiles = rasterize_tiles_tiered(
@@ -539,8 +677,8 @@ def make_gs_forward(mesh, grid: TileGrid, *, K: int, impl: str = "auto",
         else:
             p_rows = jnp.broadcast_to(
                 jnp.arange(Pl, dtype=jnp.int32)[:, None], idx.shape[:2])
-            tile_feat = features_for(p_rows, idx, live)  # (Pl,Tl,K,F)
-            flat = tile_feat.reshape(Pl * Tl, K, FEAT_DIM)
+            tile_feat = features_for(p_rows, idx, live)  # (Pl,Wl,K,F)
+            flat = tile_feat.reshape(Pl * Wl, K, FEAT_DIM)
             tiles = rasterize_tiles(flat, origins, tile_h=grid.tile_h,
                                     tile_w=grid.tile_w, impl=impl)
             overflow_l = jnp.zeros((), jnp.int32)   # dense path never drops
@@ -575,16 +713,29 @@ def make_gs_forward(mesh, grid: TileGrid, *, K: int, impl: str = "auto",
         if return_tiles or return_overflow:
             outs = (loss,)
             if return_tiles:
-                if views:
+                if exchange:
+                    # unflattened ([Vl,] Pl, Wl, ...) — see tiles_spec
+                    lead = (vloc, -1, Wl) if views else (-1, Wl)
+                    tiles = tiles.reshape(lead + tiles.shape[1:])
+                elif views:
                     tiles = tiles.reshape((vloc, -1) + tiles.shape[1:])
                 outs += (tiles,)
             if return_overflow:
-                # each (pod, model, view) strip/view-slice is computed
-                # redundantly along the "part" axis only, so sum over the
-                # strip-distinct axes
-                ov_axes = tuple(a for a in (pod, model, view) if a)
-                ov = lax.psum(overflow_l, ov_axes) if ov_axes else overflow_l
-                outs += (ov,)
+                # tiles/assign counters: each window is computed once per
+                # strip-distinct device; under gather the "part" devices
+                # hold REDUNDANT copies of the strip (summing across them
+                # would multiply by n_part), under exchange they hold
+                # DISTINCT sub-windows (the sum must cross "part" too).
+                # The exchange counter is send-side and per-device-distinct
+                # always: sum over every axis.
+                strip_axes = tuple(a for a in (pod, model, view) if a) \
+                    + ((data,) if exchange else ())
+                red = (lambda x: lax.psum(x, strip_axes)) if strip_axes \
+                    else (lambda x: x)
+                all_axes = tuple(a for a in (pod, data, model, view) if a)
+                outs += ({"tiles": red(overflow_l),
+                          "assign": red(assign_ov_l),
+                          "exchange": lax.psum(exchange_ov_l, all_axes)},)
             return outs
         return loss
 
@@ -600,7 +751,8 @@ def make_gs_forward(mesh, grid: TileGrid, *, K: int, impl: str = "auto",
 def make_gs_probe(mesh, grid: TileGrid, *, k_tiers, views: Optional[int] = None,
                   assign_block: Optional[int] = None,
                   assign_impl: str = DEFAULT_ASSIGN_IMPL,
-                  assign_budget: Optional[int] = None):
+                  assign_budget: Optional[int] = None,
+                  exchange: bool = False):
     """shard_map'd tier-schedule probe: (gaussians, cam) ->
     (tier_counts (n_tiers,) int32, max_occ () int32), REPLICATED.
 
@@ -626,6 +778,15 @@ def make_gs_probe(mesh, grid: TileGrid, *, k_tiers, views: Optional[int] = None,
     ``assign_impl``/``assign_budget``: the probe must measure occupancy
     with the same assignment the training step runs, or a budget-truncated
     step could be capped from un-truncated telemetry.
+
+    ``exchange=True`` matches the sparse-exchange forward's binning domain:
+    each device's window shrinks to its per-"part" sub-window of the strip
+    (folded domain (Vl*Pl*sub,)), and the pmax makes every device agree on
+    the worst sub-window.  The probe still builds its table via the full
+    all-gather — occupancy of the complete table upper-bounds the
+    budget-truncated exchange table, so caps sized here stay conservative
+    regardless of the edge budget (and the probe needs no budget to exist
+    yet; ``probe_gs_exchange`` sizes that knob independently).
     """
     ax = _axes(mesh)
     pod, data, model, view = ax
@@ -646,6 +807,15 @@ def make_gs_probe(mesh, grid: TileGrid, *, k_tiers, views: Optional[int] = None,
     T = grid.n_tiles
     assert T % n_model == 0, (T, n_model)
     Tl = T // n_model
+    n_data = sizes[data]
+    sub = Tl
+    if exchange:
+        if Tl % n_data:
+            raise ValueError(
+                f"exchange=True splits each {Tl}-tile window over the "
+                f"'{data}' axis (size {n_data}); the window tile count must "
+                f"divide by it")
+        sub = Tl // n_data
     if assign_block is None:
         assign_block = max(1024, 4096 // vloc) if views else 4096
 
@@ -681,7 +851,12 @@ def make_gs_probe(mesh, grid: TileGrid, *, k_tiers, views: Optional[int] = None,
         depth_g = aux[..., 3]
         valid_g = radius_g > 0
 
-        if model is not None:
+        if exchange:
+            base = lax.axis_index(model) * Tl if model is not None else 0
+            t0 = base + lax.axis_index(data) * sub
+            lo = lax.dynamic_slice_in_dim(lo_full, t0, sub, 0)
+            hi = lax.dynamic_slice_in_dim(hi_full, t0, sub, 0)
+        elif model is not None:
             mi = lax.axis_index(model)
             t0 = mi * Tl
             lo = lax.dynamic_slice_in_dim(lo_full, t0, Tl, 0)
@@ -690,11 +865,11 @@ def make_gs_probe(mesh, grid: TileGrid, *, k_tiers, views: Optional[int] = None,
             t0 = None
             lo, hi = lo_full, hi_full
 
-        _, score = _assign_tiles_local(mean_g, radius_g, depth_g, valid_g,
-                                       lo, hi, K=K, block=assign_block,
-                                       impl=assign_impl, grid=grid, t0=t0,
-                                       tile_budget=assign_budget)
-        occ = tile_occupancy(score).reshape(-1)          # (Vl*Pl*Tl,)
+        _, score, _ = _assign_tiles_local(mean_g, radius_g, depth_g, valid_g,
+                                          lo, hi, K=K, block=assign_block,
+                                          impl=assign_impl, grid=grid, t0=t0,
+                                          tile_budget=assign_budget)
+        occ = tile_occupancy(score).reshape(-1)   # (Vl*Pl*Tl,) or (..*sub,)
         tiers = tile_tiers(occ, ladder)
         counts = jnp.stack(
             [(tiers == i).sum() for i in range(len(ladder))]
@@ -711,31 +886,39 @@ def make_gs_probe(mesh, grid: TileGrid, *, k_tiers, views: Optional[int] = None,
 
 
 def folded_tile_count(mesh, grid: TileGrid, n_parts: int,
-                      views: Optional[int] = None) -> int:
+                      views: Optional[int] = None,
+                      exchange: bool = False) -> int:
     """Per-device flat tile count of the distributed binning domain,
     ``Vl * Pl * Tl`` — the cap clamp / ``note_overflow`` ``n_tiles``
-    argument (binning over a domain of this size provably cannot drop)."""
+    argument (binning over a domain of this size provably cannot drop).
+    ``exchange=True`` shrinks the window to the per-"part" sub-window,
+    ``Vl * Pl * (Tl // n_data)``, matching the sparse-exchange step."""
     ax = _axes(mesh)
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
     vloc = views // sizes.get(ax.view, 1) if views else 1
-    return (vloc * (n_parts // sizes.get(ax.pod, 1))
-            * (grid.n_tiles // sizes.get(ax.model, 1)))
+    t_loc = grid.n_tiles // sizes.get(ax.model, 1)
+    if exchange:
+        t_loc //= sizes[ax.data]
+    return vloc * (n_parts // sizes.get(ax.pod, 1)) * t_loc
 
 
 @functools.lru_cache(maxsize=32)
 def _gs_probe_jit(mesh, grid: TileGrid, ladder: tuple,
                   views: Optional[int],
                   assign_impl: str = DEFAULT_ASSIGN_IMPL,
-                  assign_budget: Optional[int] = None):
+                  assign_budget: Optional[int] = None,
+                  exchange: bool = False):
     return jax.jit(make_gs_probe(mesh, grid, k_tiers=ladder, views=views,
                                  assign_impl=assign_impl,
-                                 assign_budget=assign_budget))
+                                 assign_budget=assign_budget,
+                                 exchange=exchange))
 
 
 def probe_gs_schedule(sched: TierSchedule, mesh, grid: TileGrid,
                       g: Gaussians, cam, *, views: Optional[int] = None,
                       assign_impl: str = DEFAULT_ASSIGN_IMPL,
-                      assign_budget: Optional[int] = None):
+                      assign_budget: Optional[int] = None,
+                      exchange: bool = False):
     """Probe ``sched`` against the mesh: run the (cached, jitted)
     ``make_gs_probe`` telemetry reduction and update the schedule host-side
     via ``probe_counts``.  Returns the new ``(k_tiers, tier_caps)`` —
@@ -753,7 +936,7 @@ def probe_gs_schedule(sched: TierSchedule, mesh, grid: TileGrid,
     """
     cam_batches = [cam] if isinstance(cam, Camera) else list(cam)
     probe_fn = _gs_probe_jit(mesh, grid, tuple(sched.ladder), views,
-                             assign_impl, assign_budget)
+                             assign_impl, assign_budget, exchange)
     counts, max_occ = None, 0
     for cb in cam_batches:
         c, m = probe_fn(g, cb)
@@ -763,7 +946,184 @@ def probe_gs_schedule(sched: TierSchedule, mesh, grid: TileGrid,
     n_parts = g.means.shape[0]
     return sched.probe_counts(
         counts, max_occ,
-        n_tiles=folded_tile_count(mesh, grid, n_parts, views))
+        n_tiles=folded_tile_count(mesh, grid, n_parts, views,
+                                  exchange=exchange))
+
+
+# ---------------------------------------------------------------------------
+# Sparse-exchange edge budget: probe + schedule
+# ---------------------------------------------------------------------------
+
+
+class ExchangeSchedule:
+    """Telemetry-driven per-(src, dst) edge budget for the sparse exchange.
+
+    The exchange packs, per destination, the local splats overlapping that
+    destination's sub-window into ``budget`` static slots.  Like the tier
+    caps, the budget is a STATIC shape fed from concrete telemetry and
+    guarded by a psum'd overflow counter — the same probe/overflow honesty
+    contract:
+
+      probe_budget(max_edge, n_local)   size the budget from the pmax'd
+          worst per-edge overlap count (``probe_gs_exchange``), scaled by
+          ``slack`` and rounded so nearby probes hash to the same jit entry;
+          clamped to ``n_local`` (a source can never send more splats than
+          it holds, so overflow is impossible at the clamp).
+      note_overflow(ov, n_local)        a step reported dropped splats: the
+          budget grows geometrically (clamped at ``n_local``).  Returns
+          True when it changed — rebuild the step.  Never silent
+          truncation: every dropped splat shows up in the counter first.
+      state_dict / load_state           checkpointed via the manager's
+          ``extra`` payload so a resumed run keeps its probed budget
+          instead of re-probing.
+    """
+
+    def __init__(self, *, slack: float = 1.5, round_to: int = 16,
+                 growth: float = 2.0, budget: Optional[int] = None):
+        self.slack = float(slack)
+        self.round_to = int(round_to)
+        self.growth = float(growth)
+        self.budget: Optional[int] = None if budget is None else int(budget)
+
+    def probe_budget(self, max_edge, n_local: int) -> int:
+        """Size the edge budget from the pmax'd worst overlap count."""
+        b = int(np.ceil(max(int(max_edge), 1) * self.slack))
+        b = -(-b // self.round_to) * self.round_to
+        self.budget = max(1, min(b, int(n_local)))
+        return self.budget
+
+    def note_overflow(self, overflow, n_local: int) -> bool:
+        """React to a step's dropped-splat counter: grow the budget by
+        ``growth`` (clamped at ``n_local``, where overflow is impossible).
+        Returns True when it changed — rebuild the step."""
+        ov = int(np.asarray(overflow).sum())
+        if ov <= 0 or self.budget is None:
+            return False
+        grown = min(int(n_local),
+                    max(self.round_to, int(np.ceil(self.budget
+                                                   * self.growth))))
+        if grown <= self.budget:
+            return False
+        self.budget = grown
+        return True
+
+    def state_dict(self) -> dict:
+        """JSON-able snapshot, stored under CheckpointManager extra
+        ["exchange"] by ``fit_partitions``."""
+        return {"slack": self.slack, "round_to": self.round_to,
+                "growth": self.growth, "budget": self.budget}
+
+    def load_state(self, state: dict) -> "ExchangeSchedule":
+        """Restore a snapshot IN PLACE (the checkpoint wins) — a resumed
+        run keeps its probed/grown budget without re-probing."""
+        self.slack = float(state["slack"])
+        self.round_to = int(state["round_to"])
+        self.growth = float(state["growth"])
+        b = state["budget"]
+        self.budget = None if b is None else int(b)
+        return self
+
+    @classmethod
+    def from_state(cls, state: dict) -> "ExchangeSchedule":
+        """Rebuild a schedule from a ``state_dict`` snapshot."""
+        return cls().load_state(state)
+
+    def __repr__(self):
+        return (f"ExchangeSchedule(budget={self.budget}, "
+                f"slack={self.slack}, round_to={self.round_to})")
+
+
+def make_gs_exchange_probe(mesh, grid: TileGrid, *,
+                           views: Optional[int] = None):
+    """(gaussians, cam) -> () int32: the mesh-wide WORST per-(src, dst)
+    overlap count — the telemetry ``ExchangeSchedule.probe_budget`` sizes
+    the edge budget from.
+
+    Each device projects its local splats and counts, per destination
+    sub-window, how many overlap (``window_overlap_mask`` — the exchange's
+    exact packing predicate, so the count is the exact slot demand).  The
+    max over destinations is pmax'd over every mesh axis: all hosts agree
+    on the worst edge and land on the identical budget.  No collective
+    moves table data — the probe is cheaper than one gather step.
+    """
+    ax = _axes(mesh)
+    pod, data, model, view = ax
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n_model = sizes.get(model, 1)
+    n_data = sizes[data]
+    n_view = sizes.get(view, 1)
+    if views is not None and views % n_view:
+        raise ValueError(f"views={views} must divide by the 'view' axis "
+                         f"size {n_view}")
+    if views is None and n_view > 1:
+        raise ValueError(f"mesh has a 'view' axis of size {n_view} but "
+                         f"views=None; pass views=V")
+    T = grid.n_tiles
+    assert T % n_model == 0, (T, n_model)
+    Tl = T // n_model
+    if Tl % n_data:
+        raise ValueError(
+            f"exchange splits each {Tl}-tile window over the '{data}' axis "
+            f"(size {n_data}); the window tile count must divide by it")
+    sub = Tl // n_data
+
+    g_spec = Gaussians(
+        means=P(pod, data, None), log_scales=P(pod, data, None),
+        quats=P(pod, data, None), opacity_logit=P(pod, data),
+        colors=P(pod, data, None), active=P(pod, data), owner=P(pod, data),
+    )
+    vlead = (view,) if views else ()
+    cam_spec = Camera(view=P(*vlead, None, None) if views else P(),
+                      fx=P(*vlead) if views else P(),
+                      fy=P(*vlead) if views else P(),
+                      width=P(), height=P())
+    reduce_axes = tuple(a for a in (pod, data, model, view) if a)
+
+    def shard_fn(g: Gaussians, cam: Camera):
+        if views:
+            splats = jax.vmap(lambda c: project(g, c),
+                              in_axes=(CAM_VAXES,))(cam)
+        else:
+            splats = project(g, cam)
+        mx = splats.mean2d[..., 0]
+        my = splats.mean2d[..., 1]
+        rad = jnp.where(splats.valid, splats.radius, 0.0)
+        val = splats.valid
+        if views:  # fold Vl into the partition axis: (Vl*Pl, Nl)
+            fold = lambda x: x.reshape((-1,) + x.shape[2:])
+            mx, my, rad, val = fold(mx), fold(my), fold(rad), fold(val)
+        base = lax.axis_index(model) * Tl if model is not None else 0
+        t0_all = base + jnp.arange(n_data, dtype=jnp.int32) * sub
+        hit = window_overlap_mask(mx, my, rad, val, grid,
+                                  t0=t0_all, n_local=sub)
+        m = hit.sum(-1, dtype=jnp.int32).max()
+        return lax.pmax(m, reduce_axes) if reduce_axes else m
+
+    return shard_map(shard_fn, mesh=mesh, in_specs=(g_spec, cam_spec),
+                     out_specs=P(), check_rep=False)
+
+
+@functools.lru_cache(maxsize=32)
+def _gs_exchange_probe_jit(mesh, grid: TileGrid, views: Optional[int]):
+    return jax.jit(make_gs_exchange_probe(mesh, grid, views=views))
+
+
+def probe_gs_exchange(esched: ExchangeSchedule, mesh, grid: TileGrid,
+                      g: Gaussians, cam, *,
+                      views: Optional[int] = None) -> int:
+    """Probe ``esched`` against the mesh: measure the worst per-edge
+    overlap over one or more view batches (max-merged host-side, like
+    ``probe_gs_schedule``) and size the edge budget.  Returns the new
+    budget — identical on every host (pmax'd telemetry)."""
+    cam_batches = [cam] if isinstance(cam, Camera) else list(cam)
+    probe_fn = _gs_exchange_probe_jit(mesh, grid, views)
+    mx = 0
+    for cb in cam_batches:
+        mx = max(mx, int(probe_fn(g, cb)))
+    ax = _axes(mesh)
+    n_data = dict(zip(mesh.axis_names, mesh.devices.shape))[ax.data]
+    n_local = g.means.shape[1] // n_data
+    return esched.probe_budget(mx, n_local)
 
 
 # ---------------------------------------------------------------------------
@@ -781,7 +1141,8 @@ def make_gs_train_step(mesh, cfg: GSTrainCfg, grid: TileGrid, extent: float,
                        k_tiers=_FROM_CFG,
                        tier_caps: Optional[tuple] = None,
                        return_overflow: bool = False, win_size: int = 7,
-                       assign_impl=_FROM_CFG, assign_budget=_FROM_CFG):
+                       assign_impl=_FROM_CFG, assign_budget=_FROM_CFG,
+                       exchange=_FROM_CFG, exchange_budget=_FROM_CFG):
     """jit'd (gaussians, opt, batch) -> (gaussians, opt, loss).
 
     Per-partition losses are averaged globally, but gradients never mix
@@ -805,11 +1166,18 @@ def make_gs_train_step(mesh, cfg: GSTrainCfg, grid: TileGrid, extent: float,
     cfg.dense_k) is the dense path's assignment depth.
 
     ``return_overflow=True`` makes the step return
-    ``(gaussians, opt, loss, overflow)`` where overflow is the globally
-    psum'd tiered dropped-tile counter (always 0 on the dense path) — the
-    telemetry ``TierSchedule.note_overflow`` consumes, mirroring
+    ``(gaussians, opt, loss, overflow)`` where overflow is a dict of
+    globally psum'd () int32 counters — ``"tiles"`` (tiered dropped tiles,
+    for ``TierSchedule.note_overflow``), ``"assign"`` (sorted-assignment
+    budget truncation, grows ``assign_budget``) and ``"exchange"``
+    (sparse-exchange dropped splats, for ``ExchangeSchedule.note_overflow``)
+    — the telemetry the ``fit_partitions`` driver consumes, mirroring
     train.make_train_step.  ``win_size`` is the per-tile D-SSIM window
     (see make_gs_forward).
+
+    ``exchange``/``exchange_budget`` (default: from cfg) select the
+    sparse-overlap table exchange instead of the full all-gather — see
+    make_gs_forward.
     """
     if k_tiers is _FROM_CFG:
         k_tiers = cfg.resolved_k_tiers()
@@ -817,6 +1185,10 @@ def make_gs_train_step(mesh, cfg: GSTrainCfg, grid: TileGrid, extent: float,
         assign_impl = cfg.assign_impl
     if assign_budget is _FROM_CFG:
         assign_budget = cfg.assign_budget
+    if exchange is _FROM_CFG:
+        exchange = cfg.exchange
+    if exchange_budget is _FROM_CFG:
+        exchange_budget = cfg.exchange_budget
     lrs = group_lrs(cfg, extent)
     g_sh, opt_sh, b_sh = gs_shardings(mesh, views=views)
     fwd = make_gs_forward(mesh, grid, K=cfg.assign_K, impl=impl,
@@ -827,11 +1199,15 @@ def make_gs_train_step(mesh, cfg: GSTrainCfg, grid: TileGrid, extent: float,
                           k_tiers=k_tiers, tier_caps=tier_caps,
                           return_overflow=return_overflow, win_size=win_size,
                           assign_impl=assign_impl,
-                          assign_budget=assign_budget)
+                          assign_budget=assign_budget,
+                          exchange=exchange, exchange_budget=exchange_budget)
 
     def loss_fn(tr, g, cam, gt, mask):
         out = fwd(g.with_trainable(tr), cam, gt, mask)
-        return out if return_overflow else (out, jnp.zeros((), jnp.int32))
+        if return_overflow:
+            return out
+        z = jnp.zeros((), jnp.int32)
+        return out, {"tiles": z, "assign": z, "exchange": z}
 
     def step(g: Gaussians, opt: GSOptState, batch):
         (loss, overflow), grads = jax.value_and_grad(loss_fn, has_aux=True)(
@@ -857,7 +1233,8 @@ def make_gs_train_step(mesh, cfg: GSTrainCfg, grid: TileGrid, extent: float,
         return out + (overflow,) if return_overflow else out
 
     rep = NamedSharding(mesh, P())
-    out_sh = (g_sh, opt_sh, rep) + ((rep,) if return_overflow else ())
+    ov_sh = {"tiles": rep, "assign": rep, "exchange": rep}
+    out_sh = (g_sh, opt_sh, rep) + ((ov_sh,) if return_overflow else ())
     return jax.jit(
         step,
         in_shardings=(g_sh, opt_sh, b_sh),
@@ -957,6 +1334,60 @@ def _tile_view_batches(gts, masks, grid: TileGrid):
     return gt_t, mask_t
 
 
+def rebalance_partitions(g: Gaussians, opt: GSOptState, mesh, *,
+                         threshold: float = 1.5):
+    """Host-side dynamic load rebalance for the sparse exchange: permute
+    each partition's rows so LIVE splats spread evenly over the "part"
+    shards of the equal-capacity (P, N) stacks.
+
+    Densify/prune is data-dependent, so per-shard live counts drift apart
+    over training; under ``exchange=True`` a crowded shard both sends and
+    rasterizes more than its peers (the gather path is insensitive — every
+    device holds the full table either way).  When the worst shard's live
+    count exceeds ``threshold`` x the partition mean, live rows are dealt
+    round-robin across shards (a pure PERMUTATION of rows — capacities,
+    shapes and jit caches are untouched; no reshard, no recompile).
+    ``threshold=0.0`` forces the permutation unconditionally (tests).
+
+    Optimizer rows (m/v/grad accumulators) travel with their splats, so
+    training is equivalent up to row order: assignment top-k breaks ties by
+    row index, so a scene with tie-free scores composites identically and
+    the loss trajectory is bit-stable (see tests/test_distributed.py).
+
+    Returns ``(g, opt, moved)`` with host (numpy) leaves when ``moved`` —
+    callers re-``device_put`` onto their shardings — or the inputs
+    untouched when the skew is under threshold.
+    """
+    ax = _axes(mesh)
+    n_data = dict(zip(mesh.axis_names, mesh.devices.shape))[ax.data]
+    gh = jax.device_get(g)
+    oh = jax.device_get(opt)
+    active = np.asarray(gh.active)
+    Pn, N = active.shape
+    Nl = N // n_data
+    shard_live = active.reshape(Pn, n_data, Nl).sum(-1)
+    skew = shard_live.max(-1) / np.maximum(shard_live.mean(-1), 1.0)
+    if float(skew.max()) <= threshold:
+        return g, opt, False
+    # stable live-first order, dealt round-robin: row k of the live-first
+    # ordering lands on shard k % n_data — every shard gets within one of
+    # the same live count, and equal inputs produce the identical
+    # permutation on every host (numpy stable sort, no RNG)
+    k = np.arange(N)
+    dest = (k % n_data) * Nl + (k // n_data)
+    perm = np.empty((Pn, N), np.int64)
+    for p in range(Pn):
+        perm[p, dest] = np.argsort(~active[p], kind="stable")
+
+    def take(x):
+        x = np.asarray(x)
+        if x.ndim >= 2 and x.shape[:2] == (Pn, N):
+            return np.stack([x[p][perm[p]] for p in range(Pn)])
+        return x
+
+    return jax.tree.map(take, gh), jax.tree.map(take, oh), True
+
+
 def fit_partitions(g: Gaussians, cams: Camera, gts, masks, cfg: GSTrainCfg,
                    *, mesh, steps: int, extent: float, key=None,
                    densify_every: int = 0, densify_from: int = 100,
@@ -964,6 +1395,8 @@ def fit_partitions(g: Gaussians, cams: Camera, gts, masks, cfg: GSTrainCfg,
                    view_batch: Optional[int] = None,
                    schedule: Optional[TierSchedule] = None,
                    impl: str = "auto", win_size: int = 7,
+                   rebalance_every: int = 0,
+                   rebalance_threshold: float = 1.5,
                    ckpt=None, ckpt_every: int = 0, log_every: int = 0):
     """Distributed tier-schedule driver: train every partition of the
     batched (P, N) layout in ONE SPMD program on ``mesh``, running the same
@@ -985,14 +1418,26 @@ def fit_partitions(g: Gaussians, cams: Camera, gts, masks, cfg: GSTrainCfg,
     counter, any overflow grows the caps (bounded recompile), and every
     densify event (vmapped over partitions inside jit) re-probes.
 
+    Sparse exchange (``cfg.exchange=True``): the step swaps the table
+    all-gather for the budgeted all_to_all exchange.  The edge budget comes
+    from ``cfg.exchange_budget`` when set (pinned — never re-probed), else
+    from an ``ExchangeSchedule`` probed at init and after every densify /
+    rebalance; a starved budget surfaces in the psum'd ``"exchange"``
+    overflow counter and grows geometrically (bounded recompile) — never
+    silent truncation.  ``rebalance_every=R`` additionally checks per-shard
+    live-splat skew every R steps and deals live rows round-robin across
+    the "part" shards when it passes ``rebalance_threshold`` (see
+    ``rebalance_partitions``; works with or without exchange).
+
     Checkpoint/resume: with ``ckpt`` (a runtime.CheckpointManager) the
     driver restores the newest complete (g, opt) checkpoint, loads the
     TierSchedule state saved alongside it (``extra["schedule"]``) — so a
     resumed run keeps its probed caps instead of re-probing from scratch —
-    fast-forwards the densify key stream, and continues from that step;
-    ``ckpt_every`` saves (g, opt) + schedule periodically and a final
-    checkpoint always lands at ``steps``.  ``losses`` covers only the
-    steps this call actually ran.
+    plus the exchange-budget state (``extra["exchange"]``, same contract:
+    restored budgets are NOT re-probed), fast-forwards the densify key
+    stream, and continues from that step; ``ckpt_every`` saves (g, opt) +
+    schedules periodically and a final checkpoint always lands at
+    ``steps``.  ``losses`` covers only the steps this call actually ran.
     """
     if grid is None:
         grid = TileGrid(cams.width, cams.height, cfg.tile_h, cfg.tile_w)
@@ -1002,7 +1447,13 @@ def fit_partitions(g: Gaussians, cams: Camera, gts, masks, cfg: GSTrainCfg,
     V = gts.shape[1]
     vb = max(1, min(view_batch or cfg.view_batch, V))
     sched = schedule if schedule is not None else cfg.tier_schedule()
-    m_dev = folded_tile_count(mesh, grid, Pn, views=vb)
+    m_dev = folded_tile_count(mesh, grid, Pn, views=vb,
+                              exchange=cfg.exchange)
+    ex = ExchangeSchedule(budget=cfg.exchange_budget) if cfg.exchange \
+        else None
+    ex_pinned = cfg.exchange_budget is not None
+    n_data = dict(zip(mesh.axis_names, mesh.devices.shape))[_axes(mesh).data]
+    Nl = g.means.shape[1] // n_data
 
     gt_tiles, mask_tiles = _tile_view_batches(gts, masks, grid)
     g_sh, opt_sh, b_sh = gs_shardings(mesh, views=vb)
@@ -1014,6 +1465,8 @@ def fit_partitions(g: Gaussians, cams: Camera, gts, masks, cfg: GSTrainCfg,
         if latest is not None:
             if sched is not None and extra.get("schedule"):
                 sched.load_state(extra["schedule"])
+            if ex is not None and extra.get("exchange"):
+                ex.load_state(extra["exchange"])
             start = latest
     # fast-forward the densify key stream consumed before ``start`` so a
     # resumed run splits the same keys as an uninterrupted one
@@ -1039,30 +1492,40 @@ def fit_partitions(g: Gaussians, cams: Camera, gts, masks, cfg: GSTrainCfg,
                                           assign_budget=cfg.assign_budget)
         assign.update(impl=impl, budget=budget)
 
+    # probe minibatches, shared by the tier probe and the exchange-budget
+    # probe: the first one — and, mirroring fit_partition's
+    # min(n_views, max(vb, 2))-view probe, a SECOND minibatch when vb == 1
+    # (a single-view probe would size caps/budgets from one view only);
+    # both probes max-merge the telemetry so the static shapes cover the
+    # worst probed minibatch of the step's exact folded domain
+    n_probe = 2 if vb < 2 and V > 1 else 1
+    probe_cams = [
+        jax.device_put(
+            select(cams, jnp.asarray((b * vb + np.arange(vb)) % V)),
+            b_sh["cam"])
+        for b in range(n_probe)]
+
     reprobe = None
     if sched is not None:
-        # tier-probe minibatches: the first one — and, mirroring
-        # fit_partition's min(n_views, max(vb, 2))-view probe, a SECOND
-        # minibatch when vb == 1 (a single-view probe would size caps from
-        # one view only); probe_gs_schedule max-merges the counts so the
-        # caps cover the worst probed minibatch of the step's exact folded
-        # domain
-        n_probe = 2 if vb < 2 and V > 1 else 1
-        probe_cams = [
-            jax.device_put(
-                select(cams, jnp.asarray((b * vb + np.arange(vb)) % V)),
-                b_sh["cam"])
-            for b in range(n_probe)]
-
         def reprobe(gg):
             probe_gs_schedule(sched, mesh, grid, gg, probe_cams, views=vb,
                               assign_impl=assign["impl"],
-                              assign_budget=assign["budget"])
+                              assign_budget=assign["budget"],
+                              exchange=cfg.exchange)
+
+    def reprobe_exchange(gg):
+        # pinned budgets (explicit cfg.exchange_budget / checkpoint-restored
+        # state) are never re-probed — resume keeps its grown budget
+        if ex is not None and not ex_pinned:
+            probe_gs_exchange(ex, mesh, grid, gg, probe_cams, views=vb)
 
     probe_assign(g_dev)
     if sched is not None and sched.tier_caps is None:
         # a resume restored caps: no re-probe
         reprobe(g_dev)
+    if ex is not None and ex.budget is None:
+        # a resume restored the budget: no re-probe
+        probe_gs_exchange(ex, mesh, grid, g_dev, probe_cams, views=vb)
 
     opt_vax = GSOptState(m=0, v=0, step=None, grad_accum=0, grad_count=0)
     densify = jax.jit(jax.vmap(
@@ -1073,20 +1536,23 @@ def fit_partitions(g: Gaussians, cams: Camera, gts, masks, cfg: GSTrainCfg,
 
     def get_step():
         spec = ((sched.k_tiers, sched.tier_caps) if sched else None,
-                assign["impl"], assign["budget"])
+                assign["impl"], assign["budget"],
+                cfg.exchange, ex.budget if ex else None)
         if spec not in step_cache:
             step_cache[spec] = make_gs_train_step(
                 mesh, cfg, grid, extent, impl=impl, views=vb,
                 k_tiers=sched.k_tiers if sched else None,
                 tier_caps=sched.tier_caps if sched else None,
-                return_overflow=sched is not None, win_size=win_size,
-                assign_impl=assign["impl"], assign_budget=assign["budget"])
+                return_overflow=True, win_size=win_size,
+                assign_impl=assign["impl"], assign_budget=assign["budget"],
+                exchange=cfg.exchange,
+                exchange_budget=ex.budget if ex else None)
         return step_cache[spec]
 
     def save(step_no):
         ckpt.save(step_no, (jax.device_get(g_dev), jax.device_get(opt_dev)),
-                  extra={"schedule":
-                         sched.state_dict() if sched else None})
+                  extra={"schedule": sched.state_dict() if sched else None,
+                         "exchange": ex.state_dict() if ex else None})
 
     for i in range(start, steps):
         vi = (i * vb + np.arange(vb)) % V
@@ -1101,10 +1567,19 @@ def fit_partitions(g: Gaussians, cams: Camera, gts, masks, cfg: GSTrainCfg,
         out = get_step()(g_dev, opt_dev, batch)
         g_dev, opt_dev, loss = out[:3]
         losses.append(float(loss))
+        ov = out[3]
         if sched is not None:
             # a non-zero (psum'd) counter grows the caps for the NEXT
             # steps — a one-step blip, never a persistent silent truncation
-            sched.note_overflow(out[3], m_dev)
+            sched.note_overflow(ov["tiles"], m_dev)
+        if assign["impl"] == "sorted" \
+                and int(np.asarray(ov["assign"]).sum()) > 0:
+            # radii drifted past the sorted budget's probe slack between
+            # densify events: grow it geometrically (same honesty contract)
+            assign["budget"] = grow_tile_budget(
+                assign["budget"] or DEFAULT_TILE_BUDGET, grid.n_tiles)
+        if ex is not None:
+            ex.note_overflow(ov["exchange"], Nl)
         if densify_every and i >= densify_from \
                 and (i + 1) % densify_every == 0:
             ks = jax.random.split(key, 1 + Pn)
@@ -1118,6 +1593,15 @@ def fit_partitions(g: Gaussians, cams: Camera, gts, masks, cfg: GSTrainCfg,
             probe_assign(g_dev)  # splat sizes shifted: re-size the budget
             if sched is not None:
                 reprobe(g_dev)  # occupancy shifted: re-pick tiers/caps
+            reprobe_exchange(g_dev)  # overlap pattern shifted too
+        if rebalance_every and (i + 1) % rebalance_every == 0:
+            g_reb, opt_reb, moved = rebalance_partitions(
+                g_dev, opt_dev, mesh, threshold=rebalance_threshold)
+            if moved:
+                g_dev = jax.device_put(g_reb, g_sh)
+                opt_dev = jax.device_put(opt_reb, opt_sh)
+                # rows changed shards: per-edge overlap counts shifted
+                reprobe_exchange(g_dev)
         if ckpt is not None and ckpt_every and (i + 1) % ckpt_every == 0 \
                 and (i + 1) < steps:
             save(i + 1)

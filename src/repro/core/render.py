@@ -60,6 +60,13 @@ class RenderOut(NamedTuple):
     #: desired tier upward was full (0 when caps cover the scene; scalar, or
     #: (V,) for batched renders).  None on the dense path.
     overflow: Optional[jax.Array] = None
+    #: tile-ASSIGNMENT budget counter (scalar; (V,) for batched renders):
+    #: bbox candidate slots dropped past the sorted path's static
+    #: ``assign_budget`` (coarse pre-cull drops count here too).  Always 0
+    #: on the dense sweep.  Separate from ``overflow`` (tier capacities) so
+    #: drivers can grow the right static knob — see
+    #: ``tiling.grow_tile_budget`` / ``TierSchedule.note_overflow``.
+    assign_overflow: Optional[jax.Array] = None
 
 
 def _gather_feats(g: Gaussians, cam: Camera, grid: TileGrid, *, K: int,
@@ -70,14 +77,16 @@ def _gather_feats(g: Gaussians, cam: Camera, grid: TileGrid, *, K: int,
     """Shared first half of the render: project -> tile-assign (indices
     stop-gradiented: discrete assignment) -> per-tile feature gather.
 
-    -> (tile_feats (T, K, FEAT_DIM), idx (T, K), score (T, K))."""
+    -> (tile_feats (T, K, FEAT_DIM), idx (T, K), score (T, K),
+    assign_ov () int32 assignment-budget drop counter)."""
     splats = project(g, cam)
-    idx, score = assign_tiles(splats, grid, K=K, block=block, coarse=coarse,
-                              coarse_budget=coarse_budget, impl=assign_impl,
-                              tile_budget=assign_budget)
+    idx, score, assign_ov = assign_tiles(
+        splats, grid, K=K, block=block, coarse=coarse,
+        coarse_budget=coarse_budget, impl=assign_impl,
+        tile_budget=assign_budget, return_overflow=True)
     idx = lax.stop_gradient(idx)
     score = lax.stop_gradient(score)
-    return gather_tile_features(splats, idx, score), idx, score
+    return gather_tile_features(splats, idx, score), idx, score, assign_ov
 
 
 def _composite(img, bg):
@@ -188,16 +197,16 @@ def render_tiles(g: Gaussians, cam: Camera, grid: TileGrid, *, K: int = 64,
     crossover; "dense"/"sorted" pin one — see core.tiling.assign_tiles)
     and ``assign_budget`` the sorted path's static per-splat tile budget."""
     if k_tiers is None:
-        feats, idx, score = _gather_feats(g, cam, grid, K=K, coarse=coarse,
-                                          coarse_budget=coarse_budget,
-                                          assign_impl=assign_impl,
-                                          assign_budget=assign_budget)
+        feats, idx, score, _ = _gather_feats(g, cam, grid, K=K, coarse=coarse,
+                                             coarse_budget=coarse_budget,
+                                             assign_impl=assign_impl,
+                                             assign_budget=assign_budget)
         tiles = rasterize_tiles(
             feats, tile_origins(grid),
             tile_h=grid.tile_h, tile_w=grid.tile_w, impl=impl,
         )
         return tiles, idx, score
-    tiles, idx, score, _ = _render_tiles_tiered(
+    tiles, idx, score, _, _ = _render_tiles_tiered(
         g, cam, grid, impl=impl, coarse=coarse, coarse_budget=coarse_budget,
         k_tiers=k_tiers, tier_caps=tier_caps, assign_impl=assign_impl,
         assign_budget=assign_budget)
@@ -209,16 +218,17 @@ def _render_tiles_tiered(g, cam, grid, *, impl, coarse, coarse_budget,
                          assign_impl: str = DEFAULT_ASSIGN_IMPL,
                          assign_budget: Optional[int] = None):
     splats = project(g, cam)
-    idx, score = assign_tiles(splats, grid, K=tuple(k_tiers)[-1],
-                              coarse=coarse, coarse_budget=coarse_budget,
-                              impl=assign_impl, tile_budget=assign_budget)
+    idx, score, assign_ov = assign_tiles(
+        splats, grid, K=tuple(k_tiers)[-1],
+        coarse=coarse, coarse_budget=coarse_budget,
+        impl=assign_impl, tile_budget=assign_budget, return_overflow=True)
     idx = lax.stop_gradient(idx)
     score = lax.stop_gradient(score)
     k_tiers, tier_caps = _resolve_tiers(k_tiers, tier_caps, score)
     tiles, plan = _tiered_tiles(splat_features(splats), idx, score, grid,
                                 k_tiers=k_tiers, tier_caps=tier_caps,
                                 impl=impl)
-    return tiles, idx, score, plan
+    return tiles, idx, score, plan, assign_ov
 
 
 def render(g: Gaussians, cam: Camera, grid: TileGrid, *, K: int = 64,
@@ -243,17 +253,20 @@ def render(g: Gaussians, cam: Camera, grid: TileGrid, *, K: int = 64,
     crossover; both bit-identical whenever the sorted path's budget covers
     the scene; see core.tiling.assign_tiles)."""
     if k_tiers is None:
-        tiles, _, _ = render_tiles(g, cam, grid, K=K, impl=impl,
-                                   coarse=coarse, coarse_budget=coarse_budget,
-                                   assign_impl=assign_impl,
-                                   assign_budget=assign_budget)
-        return _composite(untile_image(tiles, grid), bg)
-    tiles, _, _, plan = _render_tiles_tiered(
+        feats, idx, score, assign_ov = _gather_feats(
+            g, cam, grid, K=K, coarse=coarse, coarse_budget=coarse_budget,
+            assign_impl=assign_impl, assign_budget=assign_budget)
+        tiles = rasterize_tiles(feats, tile_origins(grid),
+                                tile_h=grid.tile_h, tile_w=grid.tile_w,
+                                impl=impl)
+        out = _composite(untile_image(tiles, grid), bg)
+        return out._replace(assign_overflow=assign_ov)
+    tiles, _, _, plan, assign_ov = _render_tiles_tiered(
         g, cam, grid, impl=impl, coarse=coarse, coarse_budget=coarse_budget,
         k_tiers=k_tiers, tier_caps=tier_caps, assign_impl=assign_impl,
         assign_budget=assign_budget)
     out = _composite(untile_image(tiles, grid), bg)
-    return out._replace(overflow=plan.overflow)
+    return out._replace(overflow=plan.overflow, assign_overflow=assign_ov)
 
 
 def render_batch(g: Gaussians, cams: Camera, grid: TileGrid, *, K: int = 64,
@@ -292,36 +305,42 @@ def render_batch(g: Gaussians, cams: Camera, grid: TileGrid, *, K: int = 64,
 
     if k_tiers is None:
         def gather_one(cam: Camera):
-            return _gather_feats(g, cam, grid, K=K, coarse=coarse,
-                                 coarse_budget=coarse_budget, block=block,
-                                 assign_impl=assign_impl,
-                                 assign_budget=assign_budget)[0]
+            out = _gather_feats(g, cam, grid, K=K, coarse=coarse,
+                                coarse_budget=coarse_budget, block=block,
+                                assign_impl=assign_impl,
+                                assign_budget=assign_budget)
+            return out[0], out[3]
 
-        feats = jax.vmap(gather_one, in_axes=(CAM_VAXES,))(cams)  # (V,T,K,F)
+        feats, assign_ov = jax.vmap(
+            gather_one, in_axes=(CAM_VAXES,))(cams)            # (V,T,K,F)
         tiles = rasterize_tiles_batched(
             feats, tile_origins(grid),
             tile_h=grid.tile_h, tile_w=grid.tile_w, impl=impl,
         )                                                      # (V, T, 4, ...)
         img = jax.vmap(lambda t: untile_image(t, grid))(tiles)  # (V, H, W, 4)
-        return _composite(img, bg)
+        return _composite(img, bg)._replace(assign_overflow=assign_ov)
 
     Kmax = tuple(k_tiers)[-1]
 
     def gather_one_tiered(cam: Camera):
         splats = project(g, cam)
-        idx, score = assign_tiles(splats, grid, K=Kmax, block=block,
-                                  coarse=coarse, coarse_budget=coarse_budget,
-                                  impl=assign_impl, tile_budget=assign_budget)
+        idx, score, assign_ov = assign_tiles(
+            splats, grid, K=Kmax, block=block,
+            coarse=coarse, coarse_budget=coarse_budget,
+            impl=assign_impl, tile_budget=assign_budget,
+            return_overflow=True)
         return (splat_features(splats), lax.stop_gradient(idx),
-                lax.stop_gradient(score))
+                lax.stop_gradient(score), assign_ov)
 
-    feat, idx, score = jax.vmap(gather_one_tiered, in_axes=(CAM_VAXES,))(cams)
+    feat, idx, score, assign_ov = jax.vmap(
+        gather_one_tiered, in_axes=(CAM_VAXES,))(cams)
     k_tiers, tier_caps = _resolve_tiers(k_tiers, tier_caps, score)
     tiles, plan = _tiered_tiles_batched(feat, idx, score, grid,
                                         k_tiers=k_tiers, tier_caps=tier_caps,
                                         impl=impl)
     img = jax.vmap(lambda t: untile_image(t, grid))(tiles)
-    return _composite(img, bg)._replace(overflow=plan.overflow)
+    return _composite(img, bg)._replace(overflow=plan.overflow,
+                                        assign_overflow=assign_ov)
 
 
 @functools.lru_cache(maxsize=64)

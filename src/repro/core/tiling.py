@@ -523,6 +523,47 @@ def auto_tile_budget(max_count, n_tiles: int, *, slack: float = 1.5,
     return max(1, min(b, max(int(n_tiles), 1)))
 
 
+def window_overlap_mask(mx, my, rad, valid, grid: TileGrid, *,
+                        t0, n_local: int):
+    """Which splats' clipped tile bboxes can touch the contiguous row-major
+    flat-tile window ``[t0, t0 + n_local)``.
+
+    mx/my/rad/valid (..., N) splat columns; ``t0`` a (possibly traced)
+    scalar window offset or a (W,) vector of offsets (a new leading window
+    axis is prepended).  -> bool (..., N) (or (W, ..., N)).
+
+    Same bbox-row arithmetic as ``_expand_splat_tiles``'s window clamp: a
+    window is a contiguous row-major tile range, so its tiles live in rows
+    ``[t0 // nx, (t0 + n_local - 1) // nx]`` and a splat whose clipped bbox
+    rows intersect that span is a SUPERSET of the splats whose circles hit
+    any window tile — filtering by this mask provably drops no true hit.
+    This is the per-(src, dst)-edge overlap test of the sparse splat
+    exchange (core.distributed): each destination's sub-strip is one such
+    window.
+    """
+    _, _, y0, y1 = _bbox_bounds(mx, my, rad, grid)
+    t0 = jnp.asarray(t0, jnp.int32)
+    r0 = t0 // grid.nx
+    r1 = (t0 + n_local - 1) // grid.nx
+    if t0.ndim:
+        shape = t0.shape + (1,) * y0.ndim
+        r0 = r0.reshape(shape)
+        r1 = r1.reshape(shape)
+    return valid & (y0 <= r1) & (y1 >= r0)
+
+
+def grow_tile_budget(budget: int, n_tiles: int, *, growth: float = 2.0,
+                     round_to: int = 16) -> int:
+    """Geometric growth for a static per-splat tile budget that reported
+    overflow — the sorted-assignment mirror of ``TierSchedule.
+    note_overflow`` (drivers rebuild the step with the grown budget instead
+    of letting truncation persist).  Clamped to [1, n_tiles], where the
+    bbox expansion provably cannot drop."""
+    b = int(np.ceil(max(int(budget), 1) * growth))
+    b = -(-b // round_to) * round_to
+    return max(1, min(b, max(int(n_tiles), 1)))
+
+
 def _expand_splat_tiles(mx, my, rad, valid, grid: TileGrid, *,
                         budget: int, t0=None, n_local: Optional[int] = None):
     """Expand one splat table into per-splat candidate (tile, depth, idx)

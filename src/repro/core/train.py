@@ -19,6 +19,7 @@ from typing import NamedTuple, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 
 from repro.core.cameras import Camera, select
@@ -26,7 +27,8 @@ from repro.core.gaussians import Gaussians
 from repro.core.masking import gs_loss
 from repro.core.render import (occupancy_probe_jit, render_batch,
                                resolve_assignment)
-from repro.core.tiling import TierSchedule, TileGrid
+from repro.core.tiling import (DEFAULT_TILE_BUDGET, TierSchedule, TileGrid,
+                               grow_tile_budget)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -93,6 +95,15 @@ class GSTrainCfg:
     # distributed-step options (core/distributed.py; §Perf GS hillclimb)
     gather_mode: str = "f32"        # "f32" (paper baseline) | "split" (bf16)
     strip_budget: float = 1.0       # <1: per-strip candidate prefilter
+    # sparse-overlap splat exchange (core/distributed.py): replace the
+    # "part"-axis full-table all-gather with a lax.all_to_all under a
+    # static per-(src, dst)-edge budget — each device sends only the splats
+    # whose tile bboxes overlap the destination's sub-strip.
+    # ``exchange_budget=None`` lets fit_partitions probe the budget
+    # (distributed.probe_gs_exchange, with ExchangeSchedule slack) and grow
+    # it on overflow; an explicit int pins it.
+    exchange: bool = False
+    exchange_budget: Optional[int] = None
 
     def resolved_k_tiers(self) -> Optional[Tuple[int, ...]]:
         """The active K ladder, or None for dense rasterization.
@@ -187,9 +198,14 @@ def make_train_step(cfg: GSTrainCfg, grid: TileGrid, extent: float, *,
     always-exact (but unmeasured) full-grid caps; ``fit_partition`` passes
     measured caps from its ``TierSchedule`` instead.  With
     ``return_overflow=True`` the step returns ``(g, opt, loss, overflow)``
-    where overflow is the tiered dropped-tile counter summed over the view
-    batch (always 0 on the dense path) — the telemetry
-    ``TierSchedule.note_overflow`` consumes.  ``assign_impl`` /
+    where overflow is a dict of () int32 counters summed over the view
+    batch: ``"tiles"`` — the tiered dropped-tile counter (always 0 on the
+    dense path) that ``TierSchedule.note_overflow`` consumes — and
+    ``"assign"`` — the tile-ASSIGNMENT budget counter (sorted-path bbox
+    slots dropped past ``assign_budget``; always 0 on the dense sweep)
+    that the driver feeds to ``tiling.grow_tile_budget`` so radii drifting
+    past the probe slack between densify events grow the budget instead of
+    truncating silently.  ``assign_impl`` /
     ``assign_budget`` override the cfg's tile-assignment knobs —
     ``fit_partition`` passes host-probed values (a static budget sized
     from concrete bbox counts, or a demotion of "auto" to dense for
@@ -221,8 +237,13 @@ def make_train_step(cfg: GSTrainCfg, grid: TileGrid, extent: float, *,
             losses = jax.vmap(lambda p, t: per_view(p, t, None))(out.rgb, gt)
         else:
             losses = jax.vmap(per_view)(out.rgb, gt, mask)
-        overflow = (jnp.zeros((), jnp.int32) if out.overflow is None
-                    else out.overflow.sum().astype(jnp.int32))
+        overflow = {
+            "tiles": (jnp.zeros((), jnp.int32) if out.overflow is None
+                      else out.overflow.sum().astype(jnp.int32)),
+            "assign": (jnp.zeros((), jnp.int32)
+                       if out.assign_overflow is None
+                       else out.assign_overflow.sum().astype(jnp.int32)),
+        }
         return losses.mean(), overflow
 
     def step(g: Gaussians, opt: GSOptState, cam: Camera, gt, mask=None):
@@ -431,9 +452,19 @@ def fit_partition(g: Gaussians, cams: Camera, gts, masks, cfg: GSTrainCfg,
                 cfg, grid, extent,
                 k_tiers=sched.k_tiers if sched else None,
                 tier_caps=sched.tier_caps if sched else None,
-                return_overflow=sched is not None,
+                return_overflow=True,
                 assign_impl=assign["impl"], assign_budget=assign["budget"]))
         return step_cache[spec]
+
+    def note_assign_overflow(ov):
+        # the sorted path's static budget truncated candidates this step
+        # (radii drifted past the probe slack between densify events): grow
+        # it geometrically — the next get_step() rebuilds — mirroring
+        # TierSchedule.note_overflow.  Never silent truncation.
+        if assign["impl"] != "sorted" or int(np.asarray(ov).sum()) <= 0:
+            return
+        cur = assign["budget"] or DEFAULT_TILE_BUDGET
+        assign["budget"] = grow_tile_budget(cur, grid.n_tiles)
 
     probe_assign(g)
     if sched is not None and sched.tier_caps is None:
@@ -450,7 +481,8 @@ def fit_partition(g: Gaussians, cams: Camera, gts, masks, cfg: GSTrainCfg,
             # a non-zero counter grows the caps for the NEXT steps (this
             # step dropped a few tiles — rendered as background in the
             # loss — a one-step blip, not a persistent silent truncation)
-            sched.note_overflow(out[3], grid.n_tiles)
+            sched.note_overflow(out[3]["tiles"], grid.n_tiles)
+        note_assign_overflow(out[3]["assign"])
         if densify_every and i >= densify_from and (i + 1) % densify_every == 0:
             key, sub = jax.random.split(key)
             g, opt = densify(g, opt, sub)

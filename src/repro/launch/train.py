@@ -114,7 +114,9 @@ def run_gs(args):
         if args.ckpt_every == 0:
             args.ckpt_every = 2
 
-    cfg = GSTrainCfg(view_batch=args.view_batch or 1)
+    cfg = GSTrainCfg(view_batch=args.view_batch or 1,
+                     exchange=args.exchange,
+                     exchange_budget=args.exchange_budget)
     ds = get_gs_dataset(args.dataset, "full" if args.full else "cpu")
     n_views = args.views or ds.n_views
     points, colors, extent = build_scene(ds, args.seed)
@@ -167,10 +169,13 @@ def run_gs(args):
     masks = None if args.no_mask else jnp.asarray(np.stack(masks))
 
     kt = cfg.resolved_k_tiers()
+    table = "exchange" if cfg.exchange else "all-gather"
+    if cfg.exchange and cfg.exchange_budget:
+        table += f"(budget={cfg.exchange_budget})"
     print(f"[train-gs] dataset={args.dataset} parts={args.parts} "
           f"res={args.resolution} views={n_views} mesh={p}x{v} "
           f"({n_dev} devices) ghost={not args.no_ghost} "
-          f"mask={not args.no_mask} raster="
+          f"mask={not args.no_mask} table={table} raster="
           f"{'tiered ' + str(kt) if kt else 'dense K=' + str(cfg.assign_K)}")
 
     ckpt = CheckpointManager(args.ckpt_dir, keep=2)
@@ -185,6 +190,7 @@ def run_gs(args):
         extent=extent, key=jax.random.PRNGKey(args.seed),
         densify_every=args.densify_every, densify_from=args.densify_from,
         grid=grid, schedule=sched, ckpt=ckpt, ckpt_every=args.ckpt_every,
+        rebalance_every=args.rebalance_every,
         log_every=args.log_every)
     train_s = time.perf_counter() - t0
     # a restored checkpoint may already be PAST --steps; label everything
@@ -256,6 +262,16 @@ def main():
                          "widest 'view' axis the view batch supports)")
     ap.add_argument("--densify-every", type=int, default=0)
     ap.add_argument("--densify-from", type=int, default=100)
+    ap.add_argument("--exchange", action="store_true",
+                    help="sparse-overlap splat exchange instead of the "
+                         "full-table all-gather (probed edge budgets, "
+                         "psum'd overflow counters)")
+    ap.add_argument("--exchange-budget", type=int, default=None,
+                    help="pin the per-(src,dst) edge budget instead of "
+                         "probing it")
+    ap.add_argument("--rebalance-every", type=int, default=0,
+                    help="check per-shard live-splat skew every N steps "
+                         "and permute rows to rebalance (0 = off)")
     ap.add_argument("--no-ghost", action="store_true")
     ap.add_argument("--no-mask", action="store_true")
     # common

@@ -60,7 +60,14 @@ class CheckpointManager:
 
     def save(self, step: int, tree: Any, *, partition: Optional[int] = None,
              extra: Optional[dict] = None):
-        """Host-gather every leaf and atomically write one checkpoint."""
+        """Host-gather every leaf and atomically write one checkpoint.
+
+        ``extra`` is a JSON-able dict stored in manifest.json verbatim —
+        the drivers ride schedule state on it (``extra["schedule"]`` for
+        TierSchedule caps, ``extra["exchange"]`` for the sparse-exchange
+        edge budget) so a resumed run keeps its probed static shapes
+        instead of re-probing.
+        """
         final = self._step_dir(step, partition)
         tmp = final + ".tmp"
         if os.path.exists(tmp):

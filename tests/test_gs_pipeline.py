@@ -242,3 +242,61 @@ def test_ghost_mask_ablation_improves_merged_quality():
     # bound at the observed run-to-run variance, not a win requirement.
     assert ours.psnr >= broken.psnr - 0.9, (ours.psnr, broken.psnr)
     assert ours.ssim >= broken.ssim - 0.02, (ours.ssim, broken.ssim)
+
+
+# ---------------------------------------------------------------------------
+# sorted-assignment budget drift: counter -> geometric growth, never silent
+# ---------------------------------------------------------------------------
+
+
+def test_assign_budget_drift_counter_and_driver_growth(monkeypatch):
+    """ROADMAP item 5: radii drifting past the sorted budget's probe slack
+    between densify events must surface in the step's ``"assign"`` overflow
+    counter and make the driver GROW the budget (geometric, bounded
+    recompiles) — truncation never persists silently.  A starved budget
+    fires the counter; an ample one reports 0; ``fit_partition`` converges
+    to a quiet budget within a few growth events."""
+    from repro.core import train as train_mod
+    from repro.core.train import fit_partition
+
+    g_gt, cams, grid, extent = _tiny_scene()
+    # inflate radii so every visible splat's bbox spans several tiles — a
+    # 1-slot budget MUST truncate candidates (this is the drift scenario:
+    # scales are trained parameters, so a probed budget can go stale)
+    g_big = g_gt._replace(log_scales=g_gt.log_scales + 1.2)
+    gts = np.stack([np.asarray(render(g_big, select(cams, v), grid,
+                                      K=16).rgb) for v in range(3)])
+
+    cfg = GSTrainCfg(K=16, dense_k=16, assign_impl="sorted", assign_budget=1)
+    step = jax.jit(make_train_step(cfg, grid, extent, return_overflow=True))
+    opt = init_opt(g_big)
+    _, _, _, ov = step(g_big, opt, select(cams, 0), jnp.asarray(gts[0]))
+    assert int(ov["assign"]) > 0, "starved budget must fire the counter"
+    assert int(ov["tiles"]) == 0   # dense raster: tier counter stays quiet
+    ample = GSTrainCfg(K=16, dense_k=16, assign_impl="sorted",
+                       assign_budget=grid.n_tiles)
+    step_a = jax.jit(make_train_step(ample, grid, extent,
+                                     return_overflow=True))
+    _, _, _, ov_a = step_a(g_big, opt, select(cams, 0), jnp.asarray(gts[0]))
+    assert int(ov_a["assign"]) == 0, int(ov_a["assign"])
+
+    # the driver consumes the counter: grow_tile_budget is called with the
+    # current budget, the grown value feeds the rebuilt step, and growth
+    # STOPS once the budget covers the drifted radii
+    grown = []
+    real = train_mod.grow_tile_budget
+
+    def spy(budget, n_tiles, **kw):
+        out = real(budget, n_tiles, **kw)
+        grown.append((int(budget), int(out)))
+        return out
+
+    monkeypatch.setattr(train_mod, "grow_tile_budget", spy)
+    _, _, losses = fit_partition(g_big, cams, gts, None, cfg, steps=5,
+                                 extent=extent, grid=grid)
+    assert np.isfinite(losses).all()
+    assert grown, "driver never grew a starved budget"
+    assert len(grown) < 5, f"growth never converged: {grown}"
+    assert all(b1 > b0 for b0, b1 in grown), grown
+    budgets = [b0 for b0, _ in grown]
+    assert budgets == sorted(budgets), budgets

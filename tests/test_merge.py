@@ -146,3 +146,69 @@ def test_merge_default_part_ids_are_positional(three_parts):
     for k in Gaussians._fields:
         np.testing.assert_array_equal(np.asarray(getattr(a, k)),
                                       np.asarray(getattr(b, k)))
+
+
+# ---------------------------------------------------------------------------
+# Order invariance (property): the merged SCENE is a set, not a sequence
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # degraded fallback (see tests/_hyp.py)
+    from _hyp import given, settings, st
+
+
+@st.composite
+def merge_scenarios(draw):
+    """Random partition sets: 2-4 partitions of 1-6 rows, ~30% ghost rows
+    (source drawn over ALL partition ids — drawing the holder's own id
+    degenerates into an owned row, covering both branches), ~20% dead rows,
+    plus a random presentation order."""
+    n_parts = draw(st.integers(2, 4))
+    seed = draw(st.integers(0, 10_000))
+    rng = np.random.default_rng(seed)
+    parts, ids = [], list(range(n_parts))
+    for pid in ids:
+        n = int(rng.integers(1, 7))
+        ghosts = [(i, int(rng.integers(0, n_parts)))
+                  for i in range(n) if rng.uniform() < 0.3]
+        dead = tuple(i for i in range(n) if rng.uniform() < 0.2)
+        parts.append(make_part(jax.random.PRNGKey(seed * 31 + pid), n, pid,
+                               ghost_ids=ghosts, inactive=dead))
+    return parts, ids, [int(i) for i in rng.permutation(n_parts)]
+
+
+def _canon_rows(g):
+    """All fields flattened to one (capacity, D) float64 matrix, rows in a
+    content-determined (lexicographic) order — the set-of-gaussians view."""
+    mat = np.concatenate(
+        [np.asarray(getattr(g, k)).reshape(g.capacity, -1).astype(np.float64)
+         for k in Gaussians._fields], axis=1)
+    return mat[np.lexsort(mat.T[::-1])]
+
+
+@settings(max_examples=25, deadline=None)
+@given(merge_scenarios())
+def test_merge_order_invariance_composed_with_dedupe_oracle(scenario):
+    """merge_partitions(perm(parts), perm(ids)) is the same merged model up
+    to row order — and what each presentation keeps is EXACTLY the rows
+    dedupe_mask selects, so the property composes with the per-partition
+    oracle rather than merely self-agreeing."""
+    parts, ids, perm = scenario
+    merged = merge_partitions(parts, ids)
+    # dedupe-mask composition: the merged table IS the concatenation of
+    # each partition's mask-selected rows, in partition order
+    want = [np.asarray(g.means)[np.asarray(dedupe_mask(g, pid))]
+            for g, pid in zip(parts, ids)]
+    want = (np.concatenate(want) if sum(len(w) for w in want)
+            else np.zeros((0, 3), np.float32))
+    np.testing.assert_array_equal(np.asarray(merged.means), want)
+    # order invariance, all fields: permute parts AND ids together
+    merged_p = merge_partitions([parts[i] for i in perm],
+                                [ids[i] for i in perm])
+    assert merged_p.capacity == merged.capacity
+    np.testing.assert_array_equal(_canon_rows(merged_p), _canon_rows(merged))
+    # ... and through the padded variant's live rows
+    padded_p = merge_padded([parts[i] for i in perm], [ids[i] for i in perm])
+    live = np.asarray(padded_p.active)
+    assert int(live.sum()) == merged.capacity

@@ -419,3 +419,120 @@ def test_coarse_cull_under_vmap():
     for v in range(3):
         np.testing.assert_array_equal(
             np.asarray(scores_b[v]), np.asarray(assign_tiles(sp[v], grid, K=16)[1]))
+
+
+# ---------------------------------------------------------------------------
+# >32-bit packed-key fallback (_segment_topk_sort3)
+# ---------------------------------------------------------------------------
+
+
+def _sparse_assign_oracle(splats, grid, K):
+    """Numpy oracle over HIT tiles only: per valid splat enumerate its bbox
+    tiles, apply the exact circle/rect test, then per tile sort stably by
+    (depth, splat idx) and keep the first K.  Same semantics as the dense
+    sweep but O(hits) instead of O(T * N), so it reaches the 65k-tile grid
+    that genuinely exceeds the 32 packed key bits (where the dense sweep's
+    T*N cost is prohibitive)."""
+    mean = np.asarray(splats.mean2d)
+    rad = np.asarray(splats.radius)
+    depth = np.asarray(splats.depth)
+    valid = np.asarray(splats.valid)
+    per_tile = {}
+    for i in np.nonzero(valid)[0]:
+        x0 = int(np.clip(np.ceil((mean[i, 0] - rad[i]) / grid.tile_w) - 1,
+                         0, grid.nx - 1))
+        x1 = int(np.clip(np.floor((mean[i, 0] + rad[i]) / grid.tile_w),
+                         0, grid.nx - 1))
+        y0 = int(np.clip(np.ceil((mean[i, 1] - rad[i]) / grid.tile_h) - 1,
+                         0, grid.ny - 1))
+        y1 = int(np.clip(np.floor((mean[i, 1] + rad[i]) / grid.tile_h),
+                         0, grid.ny - 1))
+        for ty in range(y0, y1 + 1):
+            for tx in range(x0, x1 + 1):
+                lox, loy = tx * grid.tile_w, ty * grid.tile_h
+                cx = np.clip(mean[i, 0], lox, lox + grid.tile_w)
+                cy = np.clip(mean[i, 1], loy, loy + grid.tile_h)
+                if ((mean[i, 0] - cx) ** 2 + (mean[i, 1] - cy) ** 2
+                        <= rad[i] ** 2):
+                    per_tile.setdefault(ty * grid.nx + tx, []).append(i)
+    # enumeration order is splat-index ascending, so a stable depth sort
+    # realizes exactly the (score desc, idx asc) two-key order
+    return {t: np.array(ids)[np.argsort(depth[ids], kind="stable")][:K]
+            for t, ids in per_tile.items()}
+
+
+def test_sort3_fallback_exact_on_genuinely_exceeding_grid():
+    """A grid/N combo whose (tile, rank) key genuinely does NOT fit 32
+    bits must route to _segment_topk_sort3 and still match the exact
+    assignment semantics on every hit tile (and leave the rest empty)."""
+    from repro.core import tiling
+
+    grid = TileGrid(2048, 2048, 8, 8)                 # T = 65536 -> 17 bits
+    n = (1 << 15) + 1                                 # rank_bits = 16
+    rank_bits = max(1, (n - 1).bit_length())
+    assert grid.n_tiles.bit_length() + rank_bits > 32  # genuinely exceeding
+    splats = random_splats(21, n, 2048, 2048, rmax=3.0, invalid_frac=0.05)
+
+    # prove the dispatch really takes the fallback for THIS call
+    seen = []
+    orig = tiling._segment_topk_sort3
+
+    def spy(tile, depth, *, n_tiles, K):
+        seen.append(n_tiles)
+        return orig(tile, depth, n_tiles=n_tiles, K=K)
+
+    try:
+        tiling._segment_topk_sort3 = spy
+        budget = int(_bbox_tile_counts(splats, grid).max())
+        i_s, s_s, ov = assign_tiles_sorted(splats, grid, K=8,
+                                           tile_budget=budget,
+                                           return_overflow=True)
+    finally:
+        tiling._segment_topk_sort3 = orig
+    assert seen == [grid.n_tiles]
+    assert int(ov) == 0
+    i_s, s_s = np.asarray(i_s), np.asarray(s_s)
+    depth = np.asarray(splats.depth)
+
+    want = _sparse_assign_oracle(splats, grid, K=8)
+    live = s_s > NEG / 2
+    hit_tiles = np.nonzero(live.any(axis=1))[0]
+    assert set(hit_tiles) == set(want)                # no phantom tiles
+    assert len(want) > 100                            # scene is non-trivial
+    for t, ids in want.items():
+        np.testing.assert_array_equal(i_s[t][live[t]], ids)
+        np.testing.assert_array_equal(s_s[t][live[t]], -depth[ids])
+    # front-to-back everywhere, empty slots all NEG
+    assert (np.diff(np.asarray(s_s), axis=1) <= 1e-6).all()
+
+
+def test_sort3_forced_parity_sweep(monkeypatch):
+    """Force EVERY packed-path call through the sort3 fallback and re-run
+    the bit-identity sweep vs the dense oracle: the two top-k kernels are
+    interchangeable, so fallback activation can never change results."""
+    from repro.core import tiling
+
+    calls = []
+
+    def forced(tile, rank_of, perm, depth, *, n_tiles, K, rank_bits):
+        calls.append(n_tiles)
+        return tiling._segment_topk_sort3(tile, depth, n_tiles=n_tiles, K=K)
+
+    monkeypatch.setattr(tiling, "_segment_topk_packed", forced)
+    sweep = [
+        (0, 150, 32, 64, {}),
+        (11, 400, 64, 8, {}),                        # saturated K
+        (12, 500, 64, 4, dict(rmax=14.0, invalid_frac=0.0)),  # ties at K
+        (14, 200, 64, 16, dict(invalid_frac=0.6)),   # many dead splats
+    ]
+    for seed, n, res, K, kwargs in sweep:
+        grid = TileGrid(res, res, 8, 16)
+        splats = random_splats(seed, n, res, res, **kwargs)
+        i_d, s_d, ov_d = assign_tiles(splats, grid, K=K, return_overflow=True)
+        i_s, s_s, ov_s = assign_tiles_sorted(splats, grid, K=K,
+                                             tile_budget=grid.n_tiles,
+                                             return_overflow=True)
+        assert int(ov_d) == 0 and int(ov_s) == 0
+        np.testing.assert_array_equal(np.asarray(s_d), np.asarray(s_s))
+        np.testing.assert_array_equal(np.asarray(i_d), np.asarray(i_s))
+    assert len(calls) == len(sweep)                  # the forcing took

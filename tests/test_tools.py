@@ -1,0 +1,146 @@
+"""CI gate tools behave like gates: tools/check_bench.py fails on
+regressions AND on unbaselined benchmarks (with --allow-new as the
+explicit escape hatch), and tools/check_cov.py enforces the core/ line
+coverage floor from a coverage.xml report.  Run as subprocesses — the
+tools are argv -> exit-code programs and that interface is the contract.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def _summary(entries, mode="smoke"):
+    return {"schema": 1, "mode": mode,
+            "entries": [{"name": n, "config": {}, "wall_clock_s": w,
+                         "result": {}} for n, w in entries]}
+
+
+def _write(tmp_path, name, payload):
+    p = tmp_path / name
+    p.write_text(json.dumps(payload))
+    return str(p)
+
+
+def _check_bench(*args):
+    return subprocess.run(
+        [sys.executable, os.path.join(ROOT, "tools", "check_bench.py"),
+         *args], capture_output=True, text=True, timeout=60)
+
+
+def test_check_bench_passes_within_ratio(tmp_path):
+    bench = _write(tmp_path, "bench.json", _summary([("a", 1.0), ("b", 2.0)]))
+    base = _write(tmp_path, "base.json", _summary([("a", 1.1), ("b", 1.9)]))
+    out = _check_bench("--bench", bench, "--baseline", base)
+    assert out.returncode == 0, out.stdout
+    assert "PASS" in out.stdout
+
+
+def test_check_bench_fails_on_regression(tmp_path):
+    bench = _write(tmp_path, "bench.json", _summary([("a", 10.0)]))
+    base = _write(tmp_path, "base.json", _summary([("a", 1.0)]))
+    out = _check_bench("--bench", bench, "--baseline", base)
+    assert out.returncode == 1
+    assert "REGRESSED" in out.stdout and "FAIL" in out.stdout
+
+
+def test_check_bench_missing_baseline_entry_fails(tmp_path):
+    """A benchmark with no baseline is an ungated benchmark — it can
+    regress forever without tripping CI, so its presence must FAIL."""
+    bench = _write(tmp_path, "bench.json",
+                   _summary([("a", 1.0), ("new_bench", 3.0)]))
+    base = _write(tmp_path, "base.json", _summary([("a", 1.0)]))
+    out = _check_bench("--bench", bench, "--baseline", base)
+    assert out.returncode == 1, out.stdout
+    assert "no baseline for 'new_bench'" in out.stdout
+    assert "FAIL" in out.stdout
+
+
+def test_check_bench_allow_new_demotes_to_warning(tmp_path):
+    """--allow-new is the explicit escape hatch for the PR that introduces
+    a benchmark: the gate stays green, the message stays loud."""
+    bench = _write(tmp_path, "bench.json",
+                   _summary([("a", 1.0), ("new_bench", 3.0)]))
+    base = _write(tmp_path, "base.json", _summary([("a", 1.0)]))
+    out = _check_bench("--bench", bench, "--baseline", base, "--allow-new")
+    assert out.returncode == 0, out.stdout
+    assert "WARNING: no baseline for 'new_bench'" in out.stdout
+    assert "PASS" in out.stdout
+    # ...but --allow-new does NOT mask a real regression elsewhere
+    bench2 = _write(tmp_path, "bench2.json",
+                    _summary([("a", 9.0), ("new_bench", 3.0)]))
+    out2 = _check_bench("--bench", bench2, "--baseline", base, "--allow-new")
+    assert out2.returncode == 1
+
+
+def test_check_bench_update_writes_baseline(tmp_path):
+    bench = _write(tmp_path, "bench.json", _summary([("a", 1.0)]))
+    base = str(tmp_path / "base.json")
+    out = _check_bench("--bench", bench, "--baseline", base, "--update")
+    assert out.returncode == 0
+    assert json.load(open(base))["entries"][0]["name"] == "a"
+    # the freshly updated baseline gates its own run green
+    out2 = _check_bench("--bench", bench, "--baseline", base)
+    assert out2.returncode == 0
+
+
+COV_XML = """<?xml version="1.0" ?>
+<coverage line-rate="{total}">
+ <packages>
+  <package name="repro.core">
+   <classes>
+    <class filename="src/repro/core/tiling.py" line-rate="{core}">
+     <lines>{core_lines}</lines>
+    </class>
+    <class filename="src/repro/launch/train.py" line-rate="0.10">
+     <lines><line number="1" hits="1"/><line number="2" hits="0"/></lines>
+    </class>
+   </classes>
+  </package>
+ </packages>
+</coverage>
+"""
+
+
+def _cov_xml(tmp_path, core_hit, core_total):
+    lines = "".join(
+        f'<line number="{i + 1}" hits="{1 if i < core_hit else 0}"/>'
+        for i in range(core_total))
+    p = tmp_path / "coverage.xml"
+    p.write_text(COV_XML.format(total=0.5, core=core_hit / core_total,
+                                core_lines=lines))
+    return str(p)
+
+
+def _check_cov(*args):
+    return subprocess.run(
+        [sys.executable, os.path.join(ROOT, "tools", "check_cov.py"),
+         *args], capture_output=True, text=True, timeout=60)
+
+
+def test_check_cov_passes_above_floor(tmp_path):
+    xml = _cov_xml(tmp_path, core_hit=9, core_total=10)
+    out = _check_cov("--xml", xml, "--floor", "0.5")
+    assert out.returncode == 0, (out.stdout, out.stderr)
+    assert "PASS" in out.stdout and "90.0%" in out.stdout
+
+
+def test_check_cov_fails_below_floor(tmp_path):
+    xml = _cov_xml(tmp_path, core_hit=2, core_total=10)
+    out = _check_cov("--xml", xml, "--floor", "0.5")
+    assert out.returncode == 1, out.stdout
+    assert "FAIL" in out.stdout
+    # the launch/ file's 10%% line-rate must NOT have dragged the core
+    # number: scoping is by filename prefix
+    assert "20.0%" in out.stdout
+
+
+def test_check_cov_fails_when_scope_has_no_files(tmp_path):
+    xml = _cov_xml(tmp_path, core_hit=9, core_total=10)
+    out = _check_cov("--xml", xml, "--floor", "0.1",
+                     "--scope", "src/repro/nonexistent/")
+    assert out.returncode == 1
+    assert "no files" in out.stdout.lower()

@@ -25,9 +25,12 @@ and measurement share runner hardware (a dev-box baseline on a runner that
 is legitimately >2x slower reads as a regression).  The two files must
 also share the run MODE (smoke vs default/full) — mismatches fail loudly.
 
-Benchmarks present in the run but missing from the baseline (a new bench)
-only warn — commit an --update'd baseline alongside the new benchmark.
-Baseline entries missing from the run warn too (a bench was removed or
+Benchmarks present in the run but missing from the baseline FAIL the gate:
+an ungated benchmark is a silent coverage hole (it can regress forever
+without tripping CI).  The escape hatch for the PR that introduces a new
+benchmark is ``--allow-new`` — CI stays green while the run's artifact is
+used to commit an --update'd baseline alongside the new benchmark.
+Baseline entries missing from the run only warn (a bench was removed or
 renamed: update the baseline).
 """
 
@@ -59,6 +62,10 @@ def main():
                     help="fail when wall_clock_s exceeds baseline * ratio")
     ap.add_argument("--update", action="store_true",
                     help="rewrite the baseline from --bench and exit 0")
+    ap.add_argument("--allow-new", action="store_true",
+                    help="demote missing-baseline entries from FAIL to "
+                         "WARNING (the escape hatch for the PR that adds "
+                         "a benchmark; commit an --update'd baseline)")
     args = ap.parse_args()
 
     bench = load(args.bench)
@@ -79,13 +86,18 @@ def main():
             f"the ratio gate meaningless.  Re-run the benchmarks in the "
             f"baseline's mode, or refresh the baseline with --update.")
     base_by_name = {e["name"]: e for e in base["entries"]}
-    failures = []
+    failures, unbaselined = [], []
     for e in bench["entries"]:
         ref = base_by_name.pop(e["name"], None)
         if ref is None:
-            print(f"[check_bench] WARNING: no baseline for "
+            sev = "WARNING" if args.allow_new else "FAIL"
+            print(f"[check_bench] {sev}: no baseline for "
                   f"{e['name']!r} ({e['wall_clock_s']:.1f}s) — new "
-                  f"benchmark?  Refresh with --update.")
+                  f"benchmark?  Refresh with --update"
+                  + ("." if args.allow_new
+                     else " (or pass --allow-new on the PR adding it)."))
+            if not args.allow_new:
+                unbaselined.append(e["name"])
             continue
         ratio = e["wall_clock_s"] / max(ref["wall_clock_s"], 1e-9)
         status = "OK" if ratio <= args.max_ratio else "REGRESSED"
@@ -97,10 +109,19 @@ def main():
     for name in base_by_name:
         print(f"[check_bench] WARNING: baseline entry {name!r} missing "
               f"from this run — removed benchmark?  Refresh with --update.")
+    bad = False
     if failures:
         names = ", ".join(f"{n} ({r:.2f}x)" for n, r in failures)
         print(f"[check_bench] FAIL: wall-clock regression past "
               f"{args.max_ratio}x vs {args.baseline}: {names}")
+        bad = True
+    if unbaselined:
+        print(f"[check_bench] FAIL: unbaselined benchmark(s) "
+              f"{', '.join(repr(n) for n in unbaselined)} — refresh "
+              f"{args.baseline} with --update (or pass --allow-new on the "
+              f"PR adding them)")
+        bad = True
+    if bad:
         sys.exit(1)
     print(f"[check_bench] PASS: {len(bench['entries'])} benchmark(s) "
           f"within {args.max_ratio}x of baseline")

@@ -1,0 +1,80 @@
+"""CI coverage floor: parse a Cobertura-style ``coverage.xml`` (as written
+by ``pytest --cov=repro --cov-report=xml``) and fail when line coverage of
+the scoped files drops below the floor.
+
+    PYTHONPATH=src python -m pytest -q --cov=repro --cov-report=xml
+    python tools/check_cov.py --xml coverage.xml --floor 0.45
+
+Scoping is by filename prefix (default ``src/repro/core/``): the floor
+gates the numeric core — projection, tiling, raster, train, distributed —
+not the whole tree, so launcher/tooling churn can't dilute the number and
+an untested core can't hide behind well-covered glue.  Coverage is
+recomputed from the per-line ``hits`` attributes rather than trusting the
+report's ``line-rate`` aggregates, so partial/merged reports stay honest.
+
+An empty scope (no files match the prefix) is a FAIL, not a trivial pass:
+it means the report was produced without the code under gate (wrong
+--cov target, wrong working directory), which is exactly the silent
+failure mode this gate exists to catch.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import xml.etree.ElementTree as ET
+
+DEFAULT_SCOPE = "src/repro/core/"
+
+
+def _norm(path):
+    """Drop a leading ``src/`` so scope matching is stable whether the
+    report's filenames are repo-relative (``src/repro/...``) or source-root
+    relative (``repro/...`` with ``src`` in Cobertura's <sources>)."""
+    return path[4:] if path.startswith("src/") else path
+
+
+def scoped_line_counts(xml_path, scope):
+    """Return (covered, total, n_files) over <class> elements whose
+    filename starts with ``scope``, counting <line hits=...> entries."""
+    root = ET.parse(xml_path).getroot()
+    scope = _norm(scope)
+    covered = total = n_files = 0
+    for cls in root.iter("class"):
+        fname = _norm(cls.get("filename", ""))
+        if not fname.startswith(scope):
+            continue
+        n_files += 1
+        for line in cls.iter("line"):
+            total += 1
+            if int(line.get("hits", "0")) > 0:
+                covered += 1
+    return covered, total, n_files
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--xml", default="coverage.xml",
+                    help="Cobertura XML report from --cov-report=xml")
+    ap.add_argument("--floor", type=float, required=True,
+                    help="minimum line-coverage fraction, e.g. 0.45")
+    ap.add_argument("--scope", default=DEFAULT_SCOPE,
+                    help="filename prefix to gate (default: the core/)")
+    args = ap.parse_args()
+
+    covered, total, n_files = scoped_line_counts(args.xml, args.scope)
+    if n_files == 0 or total == 0:
+        print(f"[check_cov] FAIL: no files under scope {args.scope!r} in "
+              f"{args.xml} — wrong --cov target or working directory?")
+        sys.exit(1)
+    rate = covered / total
+    status = "PASS" if rate >= args.floor else "FAIL"
+    print(f"[check_cov] {status}: {args.scope} line coverage "
+          f"{100.0 * rate:.1f}% ({covered}/{total} lines, {n_files} "
+          f"files; floor {100.0 * args.floor:.1f}%)")
+    if rate < args.floor:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()
