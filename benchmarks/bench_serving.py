@@ -1,0 +1,137 @@
+"""Serving-path benchmark: pose-bucket cache + batched dispatch (PR 7).
+
+Measures requests/second through core/serving.GSRenderServer at request
+batch sizes V in {1, 4, 16}, steady-state best-of-reps with compilation
+excluded (a disjoint warmup rig compiles every jit before timing):
+
+  cold    fresh cache every rep — each request pays projection +
+          tile assignment + render (the miss path);
+  warm    the same rig re-served — every request hits the pose-bucket
+          cache and skips assignment entirely (the hit path);
+  shed    warm requests under forced load shedding — cached Kmax tables
+          sliced to the low serving K (the degraded-but-served path).
+
+The headline is warm/cold at V=16: the cache exists to delete the
+assignment phase from repeat views, so warm must clear ``--gate-floor``
+(default 1.5x) or the bench exits nonzero.  Saves JSON under
+experiments/benchmarks/serving.json; rides into BENCH_*.json via
+benchmarks/run.py (smoke tier).
+
+    PYTHONPATH=src python -m benchmarks.bench_serving [--smoke]
+        [--res 128] [--points 12000] [--reps 3] [--gate-floor 1.5]
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import save_result
+from repro.core.cameras import orbital_rig
+from repro.core.gaussians import from_points
+from repro.core.serving import GSRenderServer, ServeCfg
+from repro.core.tiling import TileGrid
+
+
+def _scene(n_points: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    pts = rng.uniform(0.0, 1.0, (n_points, 3))
+    cols = rng.uniform(0.0, 1.0, (n_points, 3))
+    spacing = 1.0 / max(n_points, 1) ** (1.0 / 3.0)
+    return from_points(jnp.asarray(pts, jnp.float32), jnp.asarray(cols),
+                       init_scale=0.6 * spacing, opacity=0.9)
+
+
+def _rig(n: int, res: int, *, radius: float = 2.2, seed_phase: float = 0.0):
+    # a tiny phase offset keeps warmup poses in DIFFERENT buckets from the
+    # timed poses, so warmup compiles jits without pre-filling the cache
+    return orbital_rig(n, (0.5 + seed_phase, 0.5, 0.5), radius,
+                       width=res, height=res)
+
+
+def _serve_rps(server: GSRenderServer, rig, *, reps: int,
+               cold: bool) -> float:
+    """Best-of-reps requests/s for one pass over ``rig``; ``cold`` drops
+    the cache before every rep so each request pays the miss path."""
+    V = int(rig.view.shape[0])
+    best = float("inf")
+    for _ in range(reps):
+        if cold:
+            server.clear_cache()
+        t0 = time.perf_counter()
+        results = server.serve(rig)
+        dt = time.perf_counter() - t0
+        assert len(results) == V
+        best = min(best, dt)
+    return V / best
+
+
+def run(*, res: int = 128, n_points: int = 12000, K: int = 64,
+        reps: int = 3, batches=(1, 4, 16), gate_floor: float = 1.5,
+        quick: bool = False):
+    if quick:
+        n_points, reps = 8000, 2
+    grid = TileGrid(res, res, 8, 16)
+    g = _scene(n_points)
+    results = {"res": res, "n_points": n_points, "K": K,
+               "n_tiles": grid.n_tiles, "batches": {}}
+    print(f"\n[serving] res={res} N={n_points} K={K} T={grid.n_tiles}")
+
+    ratio_at_gate = None
+    for V in batches:
+        cfg = ServeCfg(K=K, impl="ref", max_batch=V, lod_fracs=(1.0,))
+        server = GSRenderServer(g, grid, cfg, center=(0.5, 0.5, 0.5))
+        shed_cfg = ServeCfg(K=K, impl="ref", max_batch=V, lod_fracs=(1.0,),
+                            shed_at=0)
+        shed_server = GSRenderServer(g, grid, shed_cfg,
+                                     center=(0.5, 0.5, 0.5))
+        warmup = _rig(V, res, seed_phase=0.021)
+        rig = _rig(V, res)
+
+        server.serve(warmup)            # compile miss path
+        server.serve(warmup)            # compile hit path
+        cold = _serve_rps(server, rig, reps=reps, cold=True)
+        warm = _serve_rps(server, rig, reps=reps, cold=False)
+        shed_server.serve(warmup)
+        shed_server.serve(warmup)
+        shed = _serve_rps(shed_server, rig, reps=reps, cold=False)
+        assert shed_server.telemetry()["shed"] > 0    # shedding engaged
+        ratio = warm / cold
+        if V == max(batches):
+            ratio_at_gate = ratio
+        results["batches"][str(V)] = {
+            "cold_rps": cold, "warm_rps": warm, "shed_rps": shed,
+            "warm_over_cold": ratio,
+        }
+        print(f"  V={V:3d}  cold {cold:8.1f} req/s   warm {warm:8.1f} "
+              f"req/s   shed(warm) {shed:8.1f} req/s   warm/cold "
+              f"{ratio:.2f}x")
+
+    results["warm_over_cold_at_max_batch"] = ratio_at_gate
+    results["gate_floor"] = gate_floor
+    save_result("serving", results)
+    if ratio_at_gate is not None and ratio_at_gate < gate_floor:
+        raise SystemExit(
+            f"[serving] GATE: warm/cold {ratio_at_gate:.2f}x at "
+            f"V={max(batches)} under the {gate_floor:.2f}x floor — the "
+            f"cache stopped deleting the assignment phase")
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--res", type=int, default=128)
+    ap.add_argument("--points", type=int, default=12000)
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--gate-floor", type=float, default=1.5)
+    args = ap.parse_args()
+    run(res=args.res, n_points=args.points, reps=args.reps,
+        gate_floor=args.gate_floor, quick=args.smoke)
+
+
+if __name__ == "__main__":
+    main()

@@ -99,6 +99,13 @@ def main():
           lambda: bench_exchange.run(quick=quick or args.smoke,
                                      gate_floor=1.5))
 
+    from benchmarks import bench_serving
+    # warm/cold floor 1.5 at V=16: the pose-bucket cache must keep
+    # deleting the assignment phase from repeat views
+    bench("serving",
+          lambda: bench_serving.run(quick=quick or args.smoke,
+                                    gate_floor=1.5))
+
     if args.smoke:
         print(f"\n[benchmarks] smoke tier done in {time.time()-t0:.0f}s; "
               f"JSON under experiments/benchmarks/")

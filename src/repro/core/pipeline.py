@@ -118,16 +118,22 @@ def _render_batch_jit(grid: TileGrid, K: int, impl: str, bg: float,
                       k_tiers: Optional[tuple] = None,
                       tier_caps: Optional[tuple] = None,
                       assign_impl: str = DEFAULT_ASSIGN_IMPL,
-                      assign_budget: Optional[int] = None):
+                      assign_budget: Optional[int] = None,
+                      coarse_budget: Optional[int] = None):
     """Cached jitted render_batch: the seed's render_views rebuilt its jit
     closure per call, recompiling the renderer every time the pipeline
     rendered a new gaussian set (GT, per-partition GT, merged, boundary —
     4+2P compiles per run).  Keying on the static render config (incl. the
     tier schedule and caps — auto_tier_caps rounds caps so nearby scenes
-    share an entry — and the assignment impl/budget) makes every
-    same-shaped call after the first dispatch-only."""
+    share an entry — and the assignment impl + EVERY static budget: two
+    callers differing only in ``assign_budget`` or ``coarse_budget`` must
+    never share a compiled fn, since the budget is baked into the traced
+    graph) makes every same-shaped call after the first dispatch-only.
+    ``tests/test_batched_render.py::test_render_batch_jit_cache_keys_distinct``
+    pins the key."""
     return jax.jit(lambda gg, cc: render_batch(gg, cc, grid, K=K, impl=impl,
                                                bg=bg, coarse=coarse,
+                                               coarse_budget=coarse_budget,
                                                k_tiers=k_tiers,
                                                tier_caps=tier_caps,
                                                assign_impl=assign_impl,
@@ -137,6 +143,7 @@ def _render_batch_jit(grid: TileGrid, K: int, impl: str, bg: float,
 def render_views(g: Gaussians, cams: Camera, grid: TileGrid, *, K: int,
                  impl: str = "auto", bg: float = 1.0, batch: int = 8,
                  coarse: Optional[int] = None,
+                 coarse_budget: Optional[int] = None,
                  k_tiers: Optional[tuple] = None,
                  tier_caps: Optional[tuple] = None,
                  schedule: Optional[TierSchedule] = None,
@@ -171,7 +178,10 @@ def render_views(g: Gaussians, cams: Camera, grid: TileGrid, *, K: int,
 
     ``assign_impl``/``assign_budget`` pick the tile-assignment algorithm
     ("auto": sort-based on large grids, dense below the crossover; the
-    occupancy probes run with the same impl as the render they size).
+    occupancy probes run with the same impl as the render they size);
+    ``coarse_budget`` pins the coarse pre-cull's per-superblock candidate
+    budget (``coarse`` mode only — both budgets are part of the cached
+    jit's key, so distinct budgets never share a compiled fn).
     When the sorted path is in play and no budget is given,
     ``render.resolve_assignment`` probes the WHOLE rig's concrete bbox
     counts to size the static per-splat budget (with slack, so the
@@ -207,7 +217,7 @@ def render_views(g: Gaussians, cams: Camera, grid: TileGrid, *, K: int,
             tier_caps = auto_tier_caps(occ0, k_tiers, slack=1.25)
         tier_caps = tuple(int(c) for c in tier_caps)
     rfn = _render_batch_jit(grid, K, impl, bg, coarse, k_tiers, tier_caps,
-                            assign_impl, assign_budget)
+                            assign_impl, assign_budget, coarse_budget)
     rgbs, covs = [], []
     for s in range(0, V, batch):
         take = min(batch, V - s)
@@ -227,7 +237,8 @@ def render_views(g: Gaussians, cams: Camera, grid: TileGrid, *, K: int,
                     tier_caps = tuple(min(grid.n_tiles, max(8, 2 * c))
                                       for c in tier_caps)
                 rfn = _render_batch_jit(grid, K, impl, bg, coarse, k_tiers,
-                                        tier_caps, assign_impl, assign_budget)
+                                        tier_caps, assign_impl, assign_budget,
+                                        coarse_budget)
                 out = rfn(g, select(cams, vi))
                 ov = int(np.asarray(out.overflow).sum())
             if ov:

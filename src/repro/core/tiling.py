@@ -1200,3 +1200,59 @@ def tile_image(img, grid: TileGrid):
     t = img.reshape(grid.ny, th, grid.nx, tw, img.shape[-1])
     return t.transpose(0, 2, 4, 1, 3).reshape(
         grid.n_tiles, img.shape[-1], th, tw)
+
+
+# ---------------------------------------------------------------------------
+# Serving-cache helpers: pose-bucket keys + assignment-table reuse
+# ---------------------------------------------------------------------------
+
+#: default pose-quantization resolution for the serving assignment cache:
+#: bucket edge = 1/POSE_BINS in view-matrix / normalized-focal units, i.e.
+#: sub-millimeter pose snapping on a unit-scale scene — fine enough that
+#: snapped renders are visually identical, coarse enough that a camera
+#: jittering around a viewpoint keeps hitting one bucket.
+POSE_BINS = 1024.0
+
+
+def quantize_pose(view, fx, fy, *, bins: float = POSE_BINS):
+    """Quantize one camera pose onto a lattice of bucket edge ``1/bins``.
+
+    -> ``(key, (view', fx', fy'))`` where ``key`` is a hashable tuple of
+    int bucket coordinates (the 16 view-matrix entries + the two focals,
+    focals scaled into the same lattice by 1/1024 so pixel-unit focal
+    lengths quantize at a comparable relative resolution) and the primed
+    triple is the CANONICAL pose — the dequantized lattice point, float32.
+
+    The serving cache renders the canonical pose, not the requested one:
+    any two cameras inside one bucket therefore produce *bit-identical*
+    renders, and a cache HIT is bit-identical to the cold MISS that
+    populated the entry by construction (the (T, K) table was extracted
+    from the exact pose being rendered).  ``bins`` is the fidelity /
+    hit-rate knob — snapping error is <= 1/(2*bins) per matrix entry.
+    Entry-wise rounding leaves the rotation block orthonormal only to
+    O(1/bins); projection never re-orthonormalizes, so this is pure pose
+    noise, not a correctness hazard.
+    """
+    v = np.asarray(view, np.float64).reshape(4, 4)
+    qv = np.rint(v * bins)
+    qf = np.rint(np.asarray([fx, fy], np.float64) * (bins / 1024.0))
+    key = tuple(int(x) for x in qv.ravel()) + tuple(int(x) for x in qf)
+    canon_view = (qv / bins).astype(np.float32)
+    canon_f = (qf * (1024.0 / bins)).astype(np.float32)
+    return key, (canon_view, canon_f[0], canon_f[1])
+
+
+def slice_table(idx, score, k: int):
+    """Depth-``k`` prefix of a cached ``(..., K)`` assignment table.
+
+    ``assign_tiles`` emits every tile's list in the total order
+    (score desc, index asc), so the first ``k`` columns of a depth-K table
+    ARE the depth-``k`` assignment, bit for bit — one cached Kmax table
+    serves every ladder rung k <= Kmax without re-running assignment
+    (``tests/test_serving.py::test_slice_table_prefix_property`` pins
+    this against a direct K=k assignment).
+    """
+    if k > idx.shape[-1]:
+        raise ValueError(
+            f"slice_table: k={k} exceeds cached table depth {idx.shape[-1]}")
+    return idx[..., :k], score[..., :k]

@@ -232,6 +232,22 @@ def run_gs(args):
     print(f"[train-gs] PSNR {ps:.2f}  SSIM {ss:.4f}  "
           f"gaussians {int(np.asarray(merged.active).sum()):,}")
 
+    # train->serve handoff: the MERGED model as its own checkpoint (the
+    # per-partition tree above is the recovery path; the serving driver
+    # launch/serve_gs.py restores THIS one, shape-free) + the scene frame
+    # it needs to rebuild the grid/rig, + the final merged render so the
+    # round-trip test can pin restore-and-render == trainer output at 1e-6
+    mckpt = CheckpointManager(os.path.join(args.ckpt_dir, "merged"), keep=2)
+    mckpt.save(done, merged, extra={"scene": {
+        "dataset": args.dataset, "resolution": args.resolution,
+        "center": [float(c) for c in center], "radius": float(radius),
+        "extent": float(extent), "n_views": int(n_views), "K": int(cfg.K),
+        "tile_h": int(cfg.tile_h), "tile_w": int(cfg.tile_w),
+    }})
+    np.save(os.path.join(args.ckpt_dir, "render_final.npy"), renders)
+    print(f"[train-gs] merged checkpoint (step {done}) + final render "
+          f"saved under {args.ckpt_dir}")
+
 
 def main():
     ap = argparse.ArgumentParser()

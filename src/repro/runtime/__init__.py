@@ -1,4 +1,5 @@
 """Distributed runtime: checkpoint/restart (elastic), fault tolerance."""
 
-from repro.runtime.checkpoint import CheckpointManager
+from repro.runtime.checkpoint import (CheckpointManager, UNSHAPED,
+                                      unshaped_like)
 from repro.runtime.ft import Heartbeat, retry_step, bounded_staleness_merge

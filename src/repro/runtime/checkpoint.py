@@ -44,6 +44,37 @@ def _flatten_with_paths(tree):
     return leaves, treedef
 
 
+class _Unshaped:
+    """Shape-free template leaf: ``restore`` checks leaf shapes against the
+    ``like`` template only when the template leaf HAS a shape, so a tree of
+    these sentinels restores whatever the checkpoint holds.  This is the
+    serve-side loading idiom — a merged GS model's capacity is a training
+    outcome (densify/prune + merge compaction), so the serving process
+    cannot build a shaped template without reading the checkpoint first::
+
+        g, extra, step = mgr.restore_latest(unshaped_like(Gaussians))
+
+    Structure (leaf count / order) is still asserted; only shapes float.
+    """
+    __slots__ = ()
+
+    def __repr__(self):
+        return "UNSHAPED"
+
+
+UNSHAPED = _Unshaped()
+
+
+def unshaped_like(structure):
+    """A pytree of ``UNSHAPED`` sentinels matching ``structure``: pass a
+    template tree (leaf values ignored) or a NamedTuple CLASS with only
+    array fields (e.g. ``core.gaussians.Gaussians``)."""
+    if isinstance(structure, type) and issubclass(structure, tuple) \
+            and hasattr(structure, "_fields"):
+        return structure(*([UNSHAPED] * len(structure._fields)))
+    return jax.tree.map(lambda _: UNSHAPED, structure)
+
+
 class CheckpointManager:
     def __init__(self, root: str, *, keep: int = 3):
         self.root = root

@@ -110,3 +110,19 @@ def test_batched_step_with_masks_and_distinct_views_trains():
         gb, opt, l = step(gb, opt, select(cams, vi), gts, masks)
         losses.append(float(l))
     assert losses[-1] < 0.7 * losses[0], losses
+
+
+def test_render_batch_jit_cache_keys_distinct():
+    """Every static budget is part of the jit-cache key: callers differing
+    only in assign_budget or coarse_budget bake different budgets into the
+    traced graph and must never share a compiled fn (while identical
+    configs must — that cache is the whole point of _render_batch_jit)."""
+    from repro.core.pipeline import _render_batch_jit
+    grid = TileGrid(48, 48, 8, 16)
+    base = (grid, 16, "ref", 1.0, None, None, None, "dense")
+    f0 = _render_batch_jit(*base, None, None)
+    assert _render_batch_jit(*base, None, None) is f0
+    assert _render_batch_jit(*base, 4096, None) is not f0   # assign_budget
+    assert _render_batch_jit(*base, None, 512) is not f0    # coarse_budget
+    assert _render_batch_jit(*base, 4096, None) \
+        is _render_batch_jit(*base, 4096, None)

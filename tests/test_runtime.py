@@ -283,3 +283,73 @@ def test_elastic_restore_across_meshes(tmp_path):
 
     run(8, 4, "save")
     run(4, 2, "restore")
+
+
+def test_unshaped_restore(tmp_path):
+    """Shape-free templates (UNSHAPED sentinels) restore whatever the
+    checkpoint holds — the serve-side loading idiom, where the merged
+    model's capacity is a training outcome the server cannot predict."""
+    from repro.core.gaussians import Gaussians
+    from repro.runtime import UNSHAPED, unshaped_like
+
+    tree = make_tree()
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, tree)
+    got, _ = mgr.restore(1, unshaped_like(tree))
+    assert tree_eq(got, tree)
+
+    # NamedTuple-CLASS form: one sentinel per field, no instance needed
+    tmpl = unshaped_like(Gaussians)
+    assert isinstance(tmpl, Gaussians)
+    assert all(leaf is UNSHAPED for leaf in jax.tree.leaves(tmpl))
+
+    # structure (leaf count) is still asserted — only shapes float
+    with pytest.raises(AssertionError):
+        mgr.restore(1, unshaped_like({"one_leaf": 0}))
+
+
+@pytest.mark.slow
+def test_train_serve_roundtrip(tmp_path):
+    """launch/train.py --gs --smoke writes a merged checkpoint + final
+    render; a fresh process restores it shape-free and reproduces the
+    trainer's merged render to 1e-6, and the serving loader builds a
+    working server from the same tree."""
+    from repro.core.cameras import orbital_rig
+    from repro.core.gaussians import Gaussians
+    from repro.core.pipeline import render_views
+    from repro.core.serving import GSRenderServer
+    from repro.core.tiling import TileGrid
+    from repro.runtime import unshaped_like
+
+    src = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    ckpt = str(tmp_path / "gs")
+    env = dict(os.environ, PYTHONPATH=src)
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", "--gs", "--smoke",
+         "--host-devices", "4", "--steps", "3", "--ckpt-dir", ckpt],
+        capture_output=True, text=True, timeout=900, env=env)
+    assert out.returncode == 0, out.stderr[-2000:]
+
+    mgr = CheckpointManager(os.path.join(ckpt, "merged"))
+    g, extra, step = mgr.restore_latest(unshaped_like(Gaussians))
+    assert step is not None
+    meta = extra["scene"]
+    res = int(meta["resolution"])
+    grid = TileGrid(res, res, int(meta["tile_h"]), int(meta["tile_w"]))
+    cams = orbital_rig(int(meta["n_views"]), np.asarray(meta["center"]),
+                       float(meta["radius"]), width=res, height=res)
+    rgb, _ = render_views(g, cams, grid, K=int(meta["K"]))
+    want = np.load(os.path.join(ckpt, "render_final.npy"))
+    assert rgb.shape == want.shape
+    np.testing.assert_allclose(rgb, want, rtol=1e-6, atol=1e-6)
+
+    # serving restore path: same checkpoint -> a working batched server
+    server, extra2 = GSRenderServer.from_checkpoint(ckpt)
+    assert extra2["scene"] == meta
+    results = server.serve(orbital_rig(
+        2, np.asarray(meta["center"]), float(meta["radius"]),
+        width=res, height=res))
+    assert len(results) == 2
+    assert all(np.isfinite(r.rgb).all() for r in results)
+    assert server.telemetry()["misses"] == 2
