@@ -82,7 +82,12 @@ def _inner(*, res: int, n_local: int, views: int, reps: int):
     es = ExchangeSchedule()
     E = es.probe_budget(max_edge, n_local)
     F = splat_features(project(g_all, select(cams, 0))).shape[-1]
-    row_bytes = (F + 3) * 4                            # feat f32 + aux f32
+    # per-dtype row accounting: the wire dtype follows cfg.dtype_policy
+    # (core.dtypes) — f32 rows are (F + 3) * 4 bytes (feat + aux), bf16
+    # halves every lane (bench_dtype times the policies; here the bf16
+    # payload rides along so the exchange table reports both)
+    row_bytes = (F + 3) * 4
+    row_bytes_bf16 = (F + 3) * 2
     bytes_gather = N_DEV * views * n_local * row_bytes
     bytes_exchange = N_DEV * views * E * row_bytes
 
@@ -133,6 +138,8 @@ def _inner(*, res: int, n_local: int, views: int, reps: int):
         "overlap_frac": max_edge / n_local, "budget_frac": E / n_local,
         "payload_bytes_gather": bytes_gather,
         "payload_bytes_exchange": bytes_exchange,
+        "payload_bytes_gather_bf16": N_DEV * views * n_local * row_bytes_bf16,
+        "payload_bytes_exchange_bf16": N_DEV * views * E * row_bytes_bf16,
         "payload_reduction": bytes_gather / bytes_exchange,
         "t_step_gather_s": t_g, "t_step_exchange_s": t_e,
         "step_speedup": t_g / t_e, "loss": l_g}))

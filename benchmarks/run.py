@@ -26,8 +26,8 @@ def main():
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--smoke", action="store_true",
                     help="CI smoke tier: batched-render, tiered-raster, "
-                         "assignment and exchange microbenches only (a few "
-                         "min on CPU)")
+                         "assignment, exchange, dtype and serving "
+                         "microbenches only (a few min on CPU)")
     ap.add_argument("--skip-roofline", action="store_true")
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="write a machine-readable summary (name, config, "
@@ -98,6 +98,11 @@ def main():
     bench("exchange",
           lambda: bench_exchange.run(quick=quick or args.smoke,
                                      gate_floor=1.5))
+
+    from benchmarks import bench_dtype
+    # payload halving + checkpoint shrink are asserted inside the bench
+    # (exact dtype arithmetic, not a timing floor)
+    bench("dtype", lambda: bench_dtype.run(quick=quick or args.smoke))
 
     from benchmarks import bench_serving
     # warm/cold floor 1.5 at V=16: the pose-bucket cache must keep

@@ -71,6 +71,7 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.cameras import CAM_VAXES, Camera, select
+from repro.core.dtypes import cast_tables
 from repro.core.gaussians import Gaussians
 from repro.core.metrics import ssim_map
 from repro.core.projection import project
@@ -83,8 +84,9 @@ from repro.core.tiling import (DEFAULT_ASSIGN_IMPL, DEFAULT_TILE_BUDGET,
                                tile_occupancy, tile_tiers,
                                topk_by_score_then_index,
                                window_overlap_mask)
-from repro.core.train import (GSTrainCfg, GSOptState, densify_and_prune,
-                              group_lrs, init_opt)
+from repro.core.train import (GSTrainCfg, GSOptState, _check_resume_policy,
+                              densify_and_prune, group_lrs, init_opt)
+from repro.optim.compress import compress_grads
 from repro.kernels import rasterize_tiles
 from repro.kernels.ops import rasterize_tiles_tiered
 
@@ -296,8 +298,26 @@ def make_gs_forward(mesh, grid: TileGrid, *, K: int, impl: str = "auto",
                     assign_impl: str = DEFAULT_ASSIGN_IMPL,
                     assign_budget: Optional[int] = None,
                     exchange: bool = False,
-                    exchange_budget: Optional[int] = None):
+                    exchange_budget: Optional[int] = None,
+                    dtype_policy: str = "f32"):
     """shard_map'd distributed forward: (gaussians, cam, gt, mask) -> loss.
+
+    ``dtype_policy="bf16"`` (core/dtypes.py) casts BOTH local per-splat
+    tables to bf16 BEFORE the "part"-axis collective — the
+    all-gather/``all_to_all`` payload halves (and so does its transpose:
+    the backward psum-scatter reduces bf16) — and keeps the gathered
+    tables in bf16 through the per-tile feature gather; the rasterizer
+    promotes to f32 at entry and every accumulator (kernel planes, loss
+    partials, psums) stays f32.  The geometry the tile ASSIGNMENT consumes
+    (mean2d / radius / depth / valid) is promoted back to f32 right after
+    the collective — scoring runs in f32 arithmetic on bf16-ROUNDED
+    values, deterministic per policy, so exchange==gather parity holds
+    bit-for-bit within the bf16 policy (both paths move identically
+    rounded rows).  "f32" (default) is bit-identical to pre-policy builds:
+    ``cast_tables`` is the identity and the promotes are same-dtype
+    no-ops.  Under ``gather_mode="split"`` the policy additionally drops
+    the f32 ``geo`` half to bf16 (the split mode's own ``rest`` table is
+    bf16 under every policy).
 
     ``exchange=True`` swaps the table all-gather for the SPARSE-OVERLAP
     EXCHANGE (module docstring): the window is additionally split over the
@@ -502,6 +522,12 @@ def make_gs_forward(mesh, grid: TileGrid, *, K: int, impl: str = "auto",
                  splats.valid.astype(jnp.float32)], axis=-1)   # (Pl,Nl,3)
             tabs_l = (feat_l, aux_l)
 
+        # mixed-precision boundary: drop the wire tables to the policy's
+        # storage dtype BEFORE the collective (identity under "f32") —
+        # payload halves here, and the backward psum-scatter of the
+        # all-gather reduces in the same dtype (honest 2x both directions)
+        tabs_l = cast_tables(tabs_l, dtype_policy)
+
         fold = lambda x: x.reshape((-1,) + x.shape[2:])
         t0_strip = lax.axis_index(model) * Tl if model is not None else None
 
@@ -513,12 +539,16 @@ def make_gs_forward(mesh, grid: TileGrid, *, K: int, impl: str = "auto",
                 tabs_l = tuple(fold(x) for x in tabs_l)        # (R, Nl, C)
             Nl = tabs_l[0].shape[1]
             E = min(exchange_budget, Nl) if exchange_budget else Nl
-            mx_l, my_l = tabs_l[0][..., 0], tabs_l[0][..., 1]
+            # overlap geometry in f32 (promote is a no-op under "f32"):
+            # the send-side bbox test must run the same arithmetic as the
+            # receive-side assignment on the same rounded values
+            mx_l = tabs_l[0][..., 0].astype(jnp.float32)
+            my_l = tabs_l[0][..., 1].astype(jnp.float32)
             if gather_mode == "split":
-                rad_l = tabs_l[0][..., 2]          # geo radius, valid-masked
-                val_l = rad_l > 0
+                rad_l = tabs_l[0][..., 2].astype(jnp.float32)
+                val_l = rad_l > 0                  # geo radius, valid-masked
             else:
-                rad_l = tabs_l[1][..., 0]          # aux radius (raw)
+                rad_l = tabs_l[1][..., 0].astype(jnp.float32)  # aux (raw)
                 val_l = tabs_l[1][..., 2] > 0.5
             base = 0 if t0_strip is None else t0_strip
             t0_all = base + jnp.arange(n_data, dtype=jnp.int32) * sub
@@ -561,17 +591,22 @@ def make_gs_forward(mesh, grid: TileGrid, *, K: int, impl: str = "auto",
                 tabs = tuple(fold(x) for x in tabs)
             exchange_ov_l = jnp.zeros((), jnp.int32)
 
+        # assignment geometry promotes to f32 (no-op under "f32"): scoring
+        # and depth ordering run f32 arithmetic on the policy-rounded
+        # values; the kernel feature tables (feat / rest) STAY in the
+        # storage dtype — halved gather volume is the point
         if gather_mode == "split":
             geo, rest = tabs
+            geo = geo.astype(jnp.float32)
             mean_g = geo[..., 0:2]
             radius_g = geo[..., 2]
             depth_g = geo[..., 3]
             valid_g = radius_g > 0
         else:
             feat, aux = tabs
-            mean_g = feat[..., 0:2]
-            radius_g = aux[..., 0]
-            depth_g = aux[..., 1]
+            mean_g = feat[..., 0:2].astype(jnp.float32)
+            radius_g = aux[..., 0].astype(jnp.float32)
+            depth_g = aux[..., 1].astype(jnp.float32)
             valid_g = aux[..., 2] > 0.5
 
         # ---- stage 2 (pixel-parallel over "model"): my tile window — the
@@ -1178,6 +1213,20 @@ def make_gs_train_step(mesh, cfg: GSTrainCfg, grid: TileGrid, extent: float,
     ``exchange``/``exchange_budget`` (default: from cfg) select the
     sparse-overlap table exchange instead of the full all-gather — see
     make_gs_forward.
+
+    ``cfg.dtype_policy="bf16"`` runs the forward/backward with bf16 wire
+    tables (see make_gs_forward); the Adam state, loss and every update
+    stay f32 under every policy.
+
+    ``cfg.grad_compress != "none"`` wires optim.compress.compress_grads
+    over the per-partition gradient tree (quantise→dequantise with error
+    feedback, Seide et al. practice) and CHANGES THE STEP SIGNATURE to
+    ``step(g, opt, err, batch) -> (g, opt, err, loss[, overflow])``: the
+    error-feedback tree (zeros-like the trainables for "int8"; None for
+    the stateless "bf16") is carried by the caller across steps — and
+    through checkpoints by ``fit_partitions``.  With the default "none"
+    the signature, donation pattern and compiled program are exactly the
+    pre-knob ones.
     """
     if k_tiers is _FROM_CFG:
         k_tiers = cfg.resolved_k_tiers()
@@ -1200,7 +1249,8 @@ def make_gs_train_step(mesh, cfg: GSTrainCfg, grid: TileGrid, extent: float,
                           return_overflow=return_overflow, win_size=win_size,
                           assign_impl=assign_impl,
                           assign_budget=assign_budget,
-                          exchange=exchange, exchange_budget=exchange_budget)
+                          exchange=exchange, exchange_budget=exchange_budget,
+                          dtype_policy=cfg.dtype_policy)
 
     def loss_fn(tr, g, cam, gt, mask):
         out = fwd(g.with_trainable(tr), cam, gt, mask)
@@ -1209,10 +1259,9 @@ def make_gs_train_step(mesh, cfg: GSTrainCfg, grid: TileGrid, extent: float,
         z = jnp.zeros((), jnp.int32)
         return out, {"tiles": z, "assign": z, "exchange": z}
 
-    def step(g: Gaussians, opt: GSOptState, batch):
-        (loss, overflow), grads = jax.value_and_grad(loss_fn, has_aux=True)(
-            g.trainable(), g, batch["cam"], batch["gt_tiles"],
-            batch["mask_tiles"])
+    compress = cfg.grad_compress
+
+    def adam(g: Gaussians, opt: GSOptState, grads, loss, overflow):
         s = opt.step + 1
         bc1 = 1.0 - cfg.b1 ** s.astype(jnp.float32)
         bc2 = 1.0 - cfg.b2 ** s.astype(jnp.float32)
@@ -1229,17 +1278,47 @@ def make_gs_train_step(mesh, cfg: GSTrainCfg, grid: TileGrid, extent: float,
         new_opt = GSOptState(new_m, new_v, s,
                              opt.grad_accum + gnorm,
                              opt.grad_count + (gnorm > 0))
-        out = (g.with_trainable(new_tr), new_opt, loss)
+        return g.with_trainable(new_tr), new_opt, loss, overflow
+
+    def step(g: Gaussians, opt: GSOptState, batch):
+        (loss, overflow), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            g.trainable(), g, batch["cam"], batch["gt_tiles"],
+            batch["mask_tiles"])
+        g, opt, loss, overflow = adam(g, opt, grads, loss, overflow)
+        out = (g, opt, loss)
+        return out + (overflow,) if return_overflow else out
+
+    def step_compressed(g: Gaussians, opt: GSOptState, err, batch):
+        (loss, overflow), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            g.trainable(), g, batch["cam"], batch["gt_tiles"],
+            batch["mask_tiles"])
+        grads = jax.tree.map(lambda x: x.astype(jnp.float32), grads)
+        grads, err, _ = compress_grads(grads, compress, err)
+        g, opt, loss, overflow = adam(g, opt, grads, loss, overflow)
+        out = (g, opt, err, loss)
         return out + (overflow,) if return_overflow else out
 
     rep = NamedSharding(mesh, P())
     ov_sh = {"tiles": rep, "assign": rep, "exchange": rep}
-    out_sh = (g_sh, opt_sh, rep) + ((ov_sh,) if return_overflow else ())
+    if compress == "none":
+        out_sh = (g_sh, opt_sh, rep) + ((ov_sh,) if return_overflow else ())
+        return jax.jit(
+            step,
+            in_shardings=(g_sh, opt_sh, b_sh),
+            out_shardings=out_sh,
+            donate_argnums=(0, 1),
+        )
+    # err tree shards like the Adam moments (same trainables structure);
+    # the stateless "bf16" mode carries err=None (an empty pytree) through
+    # the same signature so both compressed modes share one calling shape
+    err_sh = opt_sh.m if compress == "int8" else None
+    out_sh = (g_sh, opt_sh, err_sh, rep) \
+        + ((ov_sh,) if return_overflow else ())
     return jax.jit(
-        step,
-        in_shardings=(g_sh, opt_sh, b_sh),
+        step_compressed,
+        in_shardings=(g_sh, opt_sh, err_sh, b_sh),
         out_shardings=out_sh,
-        donate_argnums=(0, 1),
+        donate_argnums=(0, 1, 2),
     )
 
 
@@ -1459,10 +1538,33 @@ def fit_partitions(g: Gaussians, cams: Camera, gts, masks, cfg: GSTrainCfg,
     g_sh, opt_sh, b_sh = gs_shardings(mesh, views=vb)
     opt = init_opt(g)       # layout-polymorphic: (P, N) accumulators here
 
+    # grad-compress error feedback (optim/compress.py): int8 carries a
+    # residual tree shaped like the trainables; "bf16" is stateless (err
+    # stays None through the compressed step's uniform signature); "none"
+    # keeps the original (g, opt, batch) step untouched
+    compress = cfg.grad_compress
+    err = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32),
+                       g.trainable()) if compress == "int8" else None
+    err_sh = opt_sh.m if compress == "int8" else None
+
+    def state_tree(gg, oo, ee):
+        # the int8 residual RIDES THE CHECKPOINT (it is step state: dropping
+        # it on resume would silently re-inject the accumulated error)
+        return (gg, oo, ee) if compress == "int8" else (gg, oo)
+
     start, losses = 0, []
     if ckpt is not None:
-        (g, opt), extra, latest = ckpt.restore_latest((g, opt))
+        latest = ckpt.latest_restorable_step()
         if latest is not None:
+            # config-compat peek BEFORE the tree restore: a grad_compress
+            # mismatch changes the leaf count, and a dtype_policy mismatch
+            # must fail loudly, not fork the loss curve silently
+            _check_resume_policy(ckpt.manifest_extra(latest), cfg)
+            restored, extra = ckpt.restore(latest, state_tree(g, opt, err))
+            if compress == "int8":
+                g, opt, err = restored
+            else:
+                g, opt = restored
             if sched is not None and extra.get("schedule"):
                 sched.load_state(extra["schedule"])
             if ex is not None and extra.get("exchange"):
@@ -1477,6 +1579,7 @@ def fit_partitions(g: Gaussians, cams: Camera, gts, masks, cfg: GSTrainCfg,
 
     g_dev = jax.device_put(g, g_sh)
     opt_dev = jax.device_put(opt, opt_sh)
+    err_dev = jax.device_put(err, err_sh) if compress == "int8" else None
 
     # tile-assignment resolution — the same render.resolve_assignment
     # policy as fit_partition (probe the WHOLE rig's concrete bbox counts
@@ -1550,9 +1653,25 @@ def fit_partitions(g: Gaussians, cams: Camera, gts, masks, cfg: GSTrainCfg,
         return step_cache[spec]
 
     def save(step_no):
-        ckpt.save(step_no, (jax.device_get(g_dev), jax.device_get(opt_dev)),
+        tree = jax.tree.map(jax.device_get,
+                            state_tree(g_dev, opt_dev, err_dev))
+        ckpt.save(step_no, tree,
                   extra={"schedule": sched.state_dict() if sched else None,
-                         "exchange": ex.state_dict() if ex else None})
+                         "exchange": ex.state_dict() if ex else None,
+                         "dtype_policy": cfg.dtype_policy,
+                         "grad_compress": cfg.grad_compress})
+
+    def reset_err():
+        # re-layout events (densify grow/prune, rebalance permutation)
+        # invalidate the per-row int8 residuals: rows moved or changed
+        # count, so the carried error no longer aligns.  Dropping it is
+        # bounded (one quantisation step of error, at rare events) and
+        # honest — stale residuals would inject noise into the WRONG rows.
+        nonlocal err_dev
+        if compress == "int8":
+            err_dev = jax.device_put(
+                jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32),
+                             g_dev.trainable()), err_sh)
 
     for i in range(start, steps):
         vi = (i * vb + np.arange(vb)) % V
@@ -1564,10 +1683,15 @@ def fit_partitions(g: Gaussians, cams: Camera, gts, masks, cfg: GSTrainCfg,
             "cam": jax.device_put(select(cams, jnp.asarray(vi)),
                                   b_sh["cam"]),
         }
-        out = get_step()(g_dev, opt_dev, batch)
-        g_dev, opt_dev, loss = out[:3]
+        if compress == "none":
+            out = get_step()(g_dev, opt_dev, batch)
+            g_dev, opt_dev, loss = out[:3]
+            ov = out[3]
+        else:
+            out = get_step()(g_dev, opt_dev, err_dev, batch)
+            g_dev, opt_dev, err_dev, loss = out[:4]
+            ov = out[4]
         losses.append(float(loss))
-        ov = out[3]
         if sched is not None:
             # a non-zero (psum'd) counter grows the caps for the NEXT
             # steps — a one-step blip, never a persistent silent truncation
@@ -1590,6 +1714,7 @@ def fit_partitions(g: Gaussians, cams: Camera, gts, masks, cfg: GSTrainCfg,
             # next donating pjit call
             g_dev = jax.device_put(g_dev, g_sh)
             opt_dev = jax.device_put(opt_dev, opt_sh)
+            reset_err()  # row count changed: residuals no longer aligned
             probe_assign(g_dev)  # splat sizes shifted: re-size the budget
             if sched is not None:
                 reprobe(g_dev)  # occupancy shifted: re-pick tiers/caps
@@ -1600,6 +1725,7 @@ def fit_partitions(g: Gaussians, cams: Camera, gts, masks, cfg: GSTrainCfg,
             if moved:
                 g_dev = jax.device_put(g_reb, g_sh)
                 opt_dev = jax.device_put(opt_reb, opt_sh)
+                reset_err()  # rows permuted across shards
                 # rows changed shards: per-edge overlap counts shifted
                 reprobe_exchange(g_dev)
         if ckpt is not None and ckpt_every and (i + 1) % ckpt_every == 0 \

@@ -1,0 +1,82 @@
+"""Mixed-precision dtype policy: bf16 tables, f32 accumulators.
+
+One knob — ``dtype_policy`` ("f32" | "bf16", default "f32") — threaded from
+``GSTrainCfg`` through the render/distributed/serving stacks.  Its contract:
+
+  * "f32"   everything stays float32 (bit-identical to the pre-policy
+            code: ``cast_tables`` returns its input untouched, and the
+            ``astype(float32)`` promotes at the kernel boundary are elided
+            by JAX for same-dtype inputs, so the compiled program is the
+            exact pre-policy program).
+  * "bf16"  STORAGE and WIRE dtypes drop to bfloat16: the gathered /
+            exchanged per-splat feature tables (core/distributed.py) and
+            the per-tile (T, K, F) kernel feature blocks (core/render.py)
+            are cast at the boundary — halving the "part"-axis
+            all-gather / ``all_to_all`` payload and the kernel's gather
+            volume — while every ACCUMULATOR stays f32: the rasterizer
+            promotes its inputs back to f32 at entry
+            (kernels/ops.rasterize_tiles) and composites in f32 VREG
+            planes, the loss partials, psums and the Adam state never
+            leave f32.  bf16 keeps f32's 8-bit exponent, so the cast can
+            round (2^-9 relative) but never overflow — there is no loss
+            scaling to get wrong, and no silent saturation to count.
+
+The conversion helpers follow the mesh-transformer-jax idiom (SNIPPETS.md
+snippet 1): cast at the boundary by *dtype predicate* over a pytree, so
+bool masks / int32 ids ride through untouched.
+
+Tolerance ladder (what the per-dtype test matrix pins, see
+docs/mixed-precision.md and tests/test_kernel_rasterize.py): f32 parity
+pins stay at 1e-6; bf16 parity vs the f32 oracle gets explicit tolerances
+derived from the 8-bit mantissa (unit roundoff 2^-9 ~ 2e-3 relative on
+every table entry, amplified by the conic quadratic form and the
+front-to-back alpha product) — documented next to each assert.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+#: supported dtype policies, in ladder order (f32 is the parity oracle)
+POLICIES = ("f32", "bf16")
+
+
+def check_policy(policy: str) -> str:
+    """Validate (and return) a dtype policy; loud on unknown values."""
+    if policy not in POLICIES:
+        raise ValueError(
+            f"unknown dtype_policy {policy!r}; expected one of {POLICIES}")
+    return policy
+
+
+def table_dtype(policy: str):
+    """The storage/wire dtype feature tables are held in under ``policy``."""
+    check_policy(policy)
+    return jnp.bfloat16 if policy == "bf16" else jnp.float32
+
+
+def cast_tables(tree, policy: str):
+    """Cast the float32 leaves of ``tree`` to the policy's storage dtype.
+
+    The one boundary-cast entry point: IDENTITY under "f32" (returns the
+    input tree object untouched — no convert ops enter the jaxpr, which is
+    what keeps the default policy bit-identical to pre-policy builds).
+    Non-f32 leaves (bool validity masks, int32 ids, already-bf16 tables)
+    pass through unchanged.
+    """
+    check_policy(policy)
+    if policy == "f32":
+        return tree
+    return jax.tree.map(
+        lambda x: x.astype(jnp.bfloat16) if x.dtype == jnp.float32 else x,
+        tree)
+
+
+def to_f32(tree):
+    """Promote bf16 leaves back to f32 (the mesh-transformer-jax ``to_f32``
+    idiom): compute-side of the boundary.  Leaves already f32 (or non-float)
+    are returned untouched, so this is also identity under the f32 policy."""
+    return jax.tree.map(
+        lambda x: x.astype(jnp.float32) if x.dtype == jnp.bfloat16 else x,
+        tree)

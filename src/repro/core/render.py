@@ -29,6 +29,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core.cameras import CAM_VAXES, Camera, select
+from repro.core.dtypes import cast_tables
 from repro.core.gaussians import Gaussians
 from repro.core.projection import project
 from repro.core.tiling import (
@@ -73,12 +74,21 @@ def _gather_feats(g: Gaussians, cam: Camera, grid: TileGrid, *, K: int,
                   coarse: Optional[int], coarse_budget: Optional[int],
                   block: int = 4096,
                   assign_impl: str = DEFAULT_ASSIGN_IMPL,
-                  assign_budget: Optional[int] = None):
+                  assign_budget: Optional[int] = None,
+                  dtype_policy: str = "f32"):
     """Shared first half of the render: project -> tile-assign (indices
     stop-gradiented: discrete assignment) -> per-tile feature gather.
 
     -> (tile_feats (T, K, FEAT_DIM), idx (T, K), score (T, K),
-    assign_ov () int32 assignment-budget drop counter)."""
+    assign_ov () int32 assignment-budget drop counter).
+
+    ``dtype_policy="bf16"`` casts the gathered (T, K, F) feature block to
+    bf16 at this boundary (halving the kernel's feature footprint; the
+    rasterizer promotes back to f32 at entry and accumulates in f32 —
+    core.dtypes contract).  Projection and tile ASSIGNMENT stay f32 under
+    every policy: assignment is index bookkeeping, not payload, and
+    keeping it exact means the bf16 image differs from the f32 oracle only
+    by input rounding — never by a swapped splat list."""
     splats = project(g, cam)
     idx, score, assign_ov = assign_tiles(
         splats, grid, K=K, block=block, coarse=coarse,
@@ -86,7 +96,9 @@ def _gather_feats(g: Gaussians, cam: Camera, grid: TileGrid, *, K: int,
         tile_budget=assign_budget, return_overflow=True)
     idx = lax.stop_gradient(idx)
     score = lax.stop_gradient(score)
-    return gather_tile_features(splats, idx, score), idx, score, assign_ov
+    feats = cast_tables(gather_tile_features(splats, idx, score),
+                        dtype_policy)
+    return feats, idx, score, assign_ov
 
 
 def _composite(img, bg):
@@ -185,7 +197,8 @@ def render_tiles(g: Gaussians, cam: Camera, grid: TileGrid, *, K: int = 64,
                  k_tiers: Optional[Sequence[int]] = None,
                  tier_caps: Optional[Sequence[int]] = None,
                  assign_impl: str = DEFAULT_ASSIGN_IMPL,
-                 assign_budget: Optional[int] = None):
+                 assign_budget: Optional[int] = None,
+                 dtype_policy: str = "f32"):
     """-> (tiles (T, 4, th, tw), idx (T, K'), score (T, K')).
 
     Differentiable w.r.t. gaussians (tile index lists are stop-gradiented:
@@ -200,7 +213,8 @@ def render_tiles(g: Gaussians, cam: Camera, grid: TileGrid, *, K: int = 64,
         feats, idx, score, _ = _gather_feats(g, cam, grid, K=K, coarse=coarse,
                                              coarse_budget=coarse_budget,
                                              assign_impl=assign_impl,
-                                             assign_budget=assign_budget)
+                                             assign_budget=assign_budget,
+                                             dtype_policy=dtype_policy)
         tiles = rasterize_tiles(
             feats, tile_origins(grid),
             tile_h=grid.tile_h, tile_w=grid.tile_w, impl=impl,
@@ -209,14 +223,15 @@ def render_tiles(g: Gaussians, cam: Camera, grid: TileGrid, *, K: int = 64,
     tiles, idx, score, _, _ = _render_tiles_tiered(
         g, cam, grid, impl=impl, coarse=coarse, coarse_budget=coarse_budget,
         k_tiers=k_tiers, tier_caps=tier_caps, assign_impl=assign_impl,
-        assign_budget=assign_budget)
+        assign_budget=assign_budget, dtype_policy=dtype_policy)
     return tiles, idx, score
 
 
 def _render_tiles_tiered(g, cam, grid, *, impl, coarse, coarse_budget,
                          k_tiers, tier_caps,
                          assign_impl: str = DEFAULT_ASSIGN_IMPL,
-                         assign_budget: Optional[int] = None):
+                         assign_budget: Optional[int] = None,
+                         dtype_policy: str = "f32"):
     splats = project(g, cam)
     idx, score, assign_ov = assign_tiles(
         splats, grid, K=tuple(k_tiers)[-1],
@@ -225,7 +240,11 @@ def _render_tiles_tiered(g, cam, grid, *, impl, coarse, coarse_budget,
     idx = lax.stop_gradient(idx)
     score = lax.stop_gradient(score)
     k_tiers, tier_caps = _resolve_tiers(k_tiers, tier_caps, score)
-    tiles, plan = _tiered_tiles(splat_features(splats), idx, score, grid,
+    # bf16 policy casts the (N, F) feature TABLE (not the per-tier gathers):
+    # the tier compaction then moves half the bytes too, matching the
+    # distributed path's cast-before-collective placement
+    feat = cast_tables(splat_features(splats), dtype_policy)
+    tiles, plan = _tiered_tiles(feat, idx, score, grid,
                                 k_tiers=k_tiers, tier_caps=tier_caps,
                                 impl=impl)
     return tiles, idx, score, plan, assign_ov
@@ -238,8 +257,13 @@ def render(g: Gaussians, cam: Camera, grid: TileGrid, *, K: int = 64,
            k_tiers: Optional[Sequence[int]] = None,
            tier_caps: Optional[Sequence[int]] = None,
            assign_impl: str = DEFAULT_ASSIGN_IMPL,
-           assign_budget: Optional[int] = None) -> RenderOut:
+           assign_budget: Optional[int] = None,
+           dtype_policy: str = "f32") -> RenderOut:
     """Full-image render with background composite (paper bg is white).
+
+    ``dtype_policy="bf16"`` stores the kernel feature tables in bf16
+    (compositing still accumulates f32 — see core.dtypes); "f32" (default)
+    is bit-identical to builds that predate the knob.
 
     ``k_tiers=(16, 64, 256)``-style schedules switch to occupancy-tiered
     rasterization (K is then ignored; K' = k_tiers[-1] bounds per-tile
@@ -255,7 +279,8 @@ def render(g: Gaussians, cam: Camera, grid: TileGrid, *, K: int = 64,
     if k_tiers is None:
         feats, idx, score, assign_ov = _gather_feats(
             g, cam, grid, K=K, coarse=coarse, coarse_budget=coarse_budget,
-            assign_impl=assign_impl, assign_budget=assign_budget)
+            assign_impl=assign_impl, assign_budget=assign_budget,
+            dtype_policy=dtype_policy)
         tiles = rasterize_tiles(feats, tile_origins(grid),
                                 tile_h=grid.tile_h, tile_w=grid.tile_w,
                                 impl=impl)
@@ -264,7 +289,7 @@ def render(g: Gaussians, cam: Camera, grid: TileGrid, *, K: int = 64,
     tiles, _, _, plan, assign_ov = _render_tiles_tiered(
         g, cam, grid, impl=impl, coarse=coarse, coarse_budget=coarse_budget,
         k_tiers=k_tiers, tier_caps=tier_caps, assign_impl=assign_impl,
-        assign_budget=assign_budget)
+        assign_budget=assign_budget, dtype_policy=dtype_policy)
     out = _composite(untile_image(tiles, grid), bg)
     return out._replace(overflow=plan.overflow, assign_overflow=assign_ov)
 
@@ -277,7 +302,8 @@ def render_batch(g: Gaussians, cams: Camera, grid: TileGrid, *, K: int = 64,
                  k_tiers: Optional[Sequence[int]] = None,
                  tier_caps: Optional[Sequence[int]] = None,
                  assign_impl: str = DEFAULT_ASSIGN_IMPL,
-                 assign_budget: Optional[int] = None) -> RenderOut:
+                 assign_budget: Optional[int] = None,
+                 dtype_policy: str = "f32") -> RenderOut:
     """View-batched render: cams carries a leading V axis on view/fx/fy.
 
     Projection -> tile assignment -> feature gather are vmapped over the
@@ -308,7 +334,8 @@ def render_batch(g: Gaussians, cams: Camera, grid: TileGrid, *, K: int = 64,
             out = _gather_feats(g, cam, grid, K=K, coarse=coarse,
                                 coarse_budget=coarse_budget, block=block,
                                 assign_impl=assign_impl,
-                                assign_budget=assign_budget)
+                                assign_budget=assign_budget,
+                                dtype_policy=dtype_policy)
             return out[0], out[3]
 
         feats, assign_ov = jax.vmap(
@@ -329,7 +356,8 @@ def render_batch(g: Gaussians, cams: Camera, grid: TileGrid, *, K: int = 64,
             coarse=coarse, coarse_budget=coarse_budget,
             impl=assign_impl, tile_budget=assign_budget,
             return_overflow=True)
-        return (splat_features(splats), lax.stop_gradient(idx),
+        return (cast_tables(splat_features(splats), dtype_policy),
+                lax.stop_gradient(idx),
                 lax.stop_gradient(score), assign_ov)
 
     feat, idx, score, assign_ov = jax.vmap(
@@ -350,7 +378,8 @@ def render_batch(g: Gaussians, cams: Camera, grid: TileGrid, *, K: int = 64,
 
 def render_batch_tables(g: Gaussians, cams: Camera, grid: TileGrid,
                         idx, score, *, impl: str = "auto",
-                        bg: float = 1.0) -> RenderOut:
+                        bg: float = 1.0,
+                        dtype_policy: str = "f32") -> RenderOut:
     """View-batched render from a PRECOMPUTED assignment table.
 
     ``idx``/``score`` (V, T, K) are the tables ``assign_tables_jit``
@@ -368,6 +397,7 @@ def render_batch_tables(g: Gaussians, cams: Camera, grid: TileGrid,
     """
     feat = jax.vmap(lambda cam: splat_features(project(g, cam)),
                     in_axes=(CAM_VAXES,))(cams)               # (V, N, F)
+    feat = cast_tables(feat, dtype_policy)   # bf16 storage under the policy
     idx = lax.stop_gradient(idx)
     score = lax.stop_gradient(score)
     tile_feats = jax.vmap(gather_features_at)(feat, idx, score)
@@ -379,13 +409,17 @@ def render_batch_tables(g: Gaussians, cams: Camera, grid: TileGrid,
 
 
 @functools.lru_cache(maxsize=64)
-def render_tables_jit(grid: TileGrid, impl: str, bg: float):
+def render_tables_jit(grid: TileGrid, impl: str, bg: float,
+                      dtype_policy: str = "f32"):
     """Cached jitted ``render_batch_tables`` closure, keyed on the static
-    render config; V / N / table-K variation retraces inside the one jit.
-    The serving batcher's hot path — every coalesced request batch
-    dispatches through here with tables from the pose-bucket cache."""
+    render config — INCLUDING the dtype policy, so an f32 and a bf16
+    server can never share a compiled program; V / N / table-K variation
+    retraces inside the one jit.  The serving batcher's hot path — every
+    coalesced request batch dispatches through here with tables from the
+    pose-bucket cache."""
     return jax.jit(lambda gg, cc, idx, score: render_batch_tables(
-        gg, cc, grid, idx, score, impl=impl, bg=bg))
+        gg, cc, grid, idx, score, impl=impl, bg=bg,
+        dtype_policy=dtype_policy))
 
 
 @functools.lru_cache(maxsize=64)

@@ -181,6 +181,13 @@ class ServeCfg:
     lod_round_to: int = 256
     assign_impl: str = DEFAULT_ASSIGN_IMPL
     assign_budget: Optional[int] = None
+    dtype_policy: str = "f32"         # "bf16" halves the cached (T, K)
+                                      # tables; compositing stays f32
+                                      # (core.dtypes contract)
+
+    def __post_init__(self):
+        from repro.core.dtypes import check_policy
+        check_policy(self.dtype_policy)
 
     def resolved_ladder(self) -> Tuple[int, ...]:
         """Serving K ladder, ascending, topped by ``K`` (the GSTrainCfg
@@ -311,12 +318,17 @@ class GSRenderServer:
         the grid and the LOD ladder; cfg.K defaults to the training K.
         ``overrides`` are ServeCfg field replacements applied over the
         meta-defaulted cfg (CLI idiom; mutually exclusive with ``cfg``)."""
-        from repro.runtime.checkpoint import CheckpointManager, unshaped_like
+        from repro.runtime.checkpoint import (CheckpointManager,
+                                              dequantize_cold, unshaped_like)
         if cfg is not None and overrides:
             raise ValueError("pass cfg= or field overrides, not both")
         mgr = CheckpointManager(os.path.join(ckpt_dir, cls.MERGED_SUBDIR),
                                 keep=2)
         g, extra, step = mgr.restore_latest(unshaped_like(Gaussians))
+        # int8 cold-attribute checkpoints (launch/train.py --ckpt-quantize)
+        # ride their per-tensor scales on extra["quant"]; no-op otherwise
+        if step is not None:
+            g = dequantize_cold(g, extra.get("quant"))
         if step is None:
             raise FileNotFoundError(
                 f"no merged checkpoint under {ckpt_dir}/{cls.MERGED_SUBDIR} "
@@ -481,7 +493,8 @@ class GSRenderServer:
         score = np.stack([t[1] for t in take])
         idx, score = slice_table(idx, score, k)       # shed rungs: prefix
         cams = self._stack_cams(reqs, pad)
-        out = render_tables_jit(self.grid, cfg.impl, cfg.bg)(
+        out = render_tables_jit(self.grid, cfg.impl, cfg.bg,
+                                dtype_policy=cfg.dtype_policy)(
             self.ladder[rung], cams, jnp.asarray(idx), jnp.asarray(score))
         self._telemetry["batches"] += 1
         rgb = np.asarray(out.rgb)

@@ -104,6 +104,26 @@ class GSTrainCfg:
     # it on overflow; an explicit int pins it.
     exchange: bool = False
     exchange_budget: Optional[int] = None
+    # mixed precision (core/dtypes.py): "f32" (default; bit-identical to
+    # pre-policy builds) | "bf16" — feature tables / collective payloads
+    # store bf16, every accumulator (kernel planes, loss, Adam state)
+    # stays f32.  Parity per policy is pinned by the per-dtype tolerance
+    # ladder in tests/ (docs/mixed-precision.md).
+    dtype_policy: str = "f32"
+    # gradient compression for the DISTRIBUTED step (optim/compress.py):
+    # "none" | "bf16" (stateless round-trip, 2x wire) | "int8" (per-tensor
+    # scale + error feedback, 4x wire).  With a mode != "none" the
+    # make_gs_train_step signature gains an error-feedback tree that
+    # fit_partitions carries in step state and through checkpoints.
+    grad_compress: str = "none"
+
+    def __post_init__(self):
+        from repro.core.dtypes import check_policy
+        check_policy(self.dtype_policy)
+        if self.grad_compress not in ("none", "bf16", "int8"):
+            raise ValueError(
+                f"unknown grad_compress {self.grad_compress!r}; expected "
+                f"'none', 'bf16' or 'int8'")
 
     def resolved_k_tiers(self) -> Optional[Tuple[int, ...]]:
         """The active K ladder, or None for dense rasterization.
@@ -183,6 +203,33 @@ def _as_view_batch(cam: Camera, gt, mask):
 _FROM_CFG = object()
 
 
+def _check_resume_policy(extra: dict, cfg: GSTrainCfg):
+    """Refuse to resume across a dtype-policy / grad-compress boundary.
+
+    A checkpoint trains forward under the SAME numerics it was written
+    with: silently switching dtype_policy mid-run would fork the loss
+    curve with no record, and switching grad_compress changes the step
+    state layout (the int8 error-feedback tree).  Checkpoints that predate
+    the knobs carry no record and are treated as the defaults
+    ("f32"/"none").  Both drivers (fit_partition / fit_partitions) call
+    this on every restore — the CLI surfaces it as a loud, documented
+    error rather than a silent divergence."""
+    saved_pol = extra.get("dtype_policy", "f32")
+    if saved_pol != cfg.dtype_policy:
+        raise ValueError(
+            f"checkpoint was written under dtype_policy={saved_pol!r} but "
+            f"this run uses {cfg.dtype_policy!r}; resume must keep the "
+            f"policy — rerun with --dtype-policy {saved_pol} or point "
+            f"--ckpt-dir at a fresh directory")
+    saved_gc = extra.get("grad_compress", "none")
+    if saved_gc != cfg.grad_compress:
+        raise ValueError(
+            f"checkpoint was written under grad_compress={saved_gc!r} but "
+            f"this run uses {cfg.grad_compress!r}; resume must keep the "
+            f"mode (the error-feedback state rides the checkpoint) — rerun "
+            f"with --grad-compress {saved_gc} or use a fresh --ckpt-dir")
+
+
 def make_train_step(cfg: GSTrainCfg, grid: TileGrid, extent: float, *,
                     k_tiers=_FROM_CFG, tier_caps: Optional[tuple] = None,
                     return_overflow: bool = False,
@@ -231,7 +278,8 @@ def make_train_step(cfg: GSTrainCfg, grid: TileGrid, extent: float, *,
                            bg=cfg.bg, coarse=cfg.coarse,
                            k_tiers=k_tiers, tier_caps=tier_caps,
                            assign_impl=assign_impl,
-                           assign_budget=assign_budget)
+                           assign_budget=assign_budget,
+                           dtype_policy=cfg.dtype_policy)
         per_view = partial(gs_loss, lambda_dssim=cfg.lambda_dssim)
         if mask is None:
             losses = jax.vmap(lambda p, t: per_view(p, t, None))(out.rgb, gt)
@@ -412,6 +460,7 @@ def fit_partition(g: Gaussians, cams: Camera, gts, masks, cfg: GSTrainCfg,
         (g, opt), extra, latest = ckpt.restore_latest((g, opt),
                                                       partition=partition)
         if latest is not None:
+            _check_resume_policy(extra, cfg)
             if sched is not None and extra.get("schedule"):
                 sched.load_state(extra["schedule"])
             start = latest
@@ -492,7 +541,9 @@ def fit_partition(g: Gaussians, cams: Camera, gts, masks, cfg: GSTrainCfg,
         if ckpt is not None and ckpt_every and (i + 1) % ckpt_every == 0:
             ckpt.save(i + 1, (g, opt), partition=partition,
                       extra={"schedule":
-                             sched.state_dict() if sched else None})
+                             sched.state_dict() if sched else None,
+                             "dtype_policy": cfg.dtype_policy,
+                             "grad_compress": cfg.grad_compress})
         if log_every and (i + 1) % log_every == 0:
             print(f"  step {i+1:5d}  loss {losses[-1]:.4f} "
                   f"active {int(g.active.sum())}")

@@ -63,7 +63,20 @@ def resolve_impl(impl: str) -> str:
 def rasterize_tiles(feats, origins, *, tile_h: int, tile_w: int,
                     impl: str = "auto"):
     """feats (T, K, F) -> (T, 4, th, tw) [r, g, b, coverage]. Differentiable
-    w.r.t. feats under every impl."""
+    w.r.t. feats under every impl.
+
+    Mixed-precision boundary: feature blocks may arrive in a reduced
+    storage dtype (core.dtypes casts them at the gather/exchange boundary
+    under dtype_policy="bf16"); the compositor contract is f32 ACCUMULATION
+    regardless, so inputs are promoted here — the single funnel all three
+    impls (and the batched/tiered dispatchers below) share, keeping
+    ref == interpret == pallas semantics per dtype.  For f32 inputs the
+    promote is elided (same-dtype convert), so the default policy compiles
+    the exact pre-policy program.  Output is always f32; the backward pass
+    rounds the feature cotangents back to the input dtype at this same
+    boundary (the transpose of the promote)."""
+    feats = feats.astype(jnp.float32)
+    origins = origins.astype(jnp.float32)
     impl = resolve_impl(impl)
     if impl == "ref":
         return ref_impl.rasterize_tiles_ref(feats, origins,

@@ -116,7 +116,9 @@ def run_gs(args):
 
     cfg = GSTrainCfg(view_batch=args.view_batch or 1,
                      exchange=args.exchange,
-                     exchange_budget=args.exchange_budget)
+                     exchange_budget=args.exchange_budget,
+                     dtype_policy=args.dtype_policy,
+                     grad_compress=args.grad_compress)
     ds = get_gs_dataset(args.dataset, "full" if args.full else "cpu")
     n_views = args.views or ds.n_views
     points, colors, extent = build_scene(ds, args.seed)
@@ -176,7 +178,8 @@ def run_gs(args):
           f"res={args.resolution} views={n_views} mesh={p}x{v} "
           f"({n_dev} devices) ghost={not args.no_ghost} "
           f"mask={not args.no_mask} table={table} raster="
-          f"{'tiered ' + str(kt) if kt else 'dense K=' + str(cfg.assign_K)}")
+          f"{'tiered ' + str(kt) if kt else 'dense K=' + str(cfg.assign_K)} "
+          f"dtype={cfg.dtype_policy} grad-compress={cfg.grad_compress}")
 
     ckpt = CheckpointManager(args.ckpt_dir, keep=2)
     latest = ckpt.latest_restorable_step()
@@ -238,12 +241,22 @@ def run_gs(args):
     # it needs to rebuild the grid/rig, + the final merged render so the
     # round-trip test can pin restore-and-render == trainer output at 1e-6
     mckpt = CheckpointManager(os.path.join(args.ckpt_dir, "merged"), keep=2)
-    mckpt.save(done, merged, extra={"scene": {
+    merged_extra = {"scene": {
         "dataset": args.dataset, "resolution": args.resolution,
         "center": [float(c) for c in center], "radius": float(radius),
         "extent": float(extent), "n_views": int(n_views), "K": int(cfg.K),
         "tile_h": int(cfg.tile_h), "tile_w": int(cfg.tile_w),
-    }})
+    }}
+    merged_save = merged
+    if args.ckpt_quantize == "int8":
+        # cold attributes (SH color, opacity logit) as int8 with per-tensor
+        # scales riding extra["quant"]; serving dequantizes on restore
+        from repro.runtime.checkpoint import quantize_cold
+        merged_save, quant_meta = quantize_cold(merged)
+        merged_extra["quant"] = quant_meta
+        print("[train-gs] merged checkpoint cold attributes quantized "
+              f"(int8, fields={list(quant_meta['fields'])})")
+    mckpt.save(done, merged_save, extra=merged_extra)
     np.save(os.path.join(args.ckpt_dir, "render_final.npy"), renders)
     print(f"[train-gs] merged checkpoint (step {done}) + final render "
           f"saved under {args.ckpt_dir}")
@@ -290,6 +303,22 @@ def main():
                          "and permute rows to rebalance (0 = off)")
     ap.add_argument("--no-ghost", action="store_true")
     ap.add_argument("--no-mask", action="store_true")
+    ap.add_argument("--dtype-policy", default="f32",
+                    choices=["f32", "bf16"],
+                    help="GS storage/wire dtype: bf16 halves gathered/"
+                         "exchanged splat tables and collective payload; "
+                         "compositing, loss and optimizer stay f32. Resume "
+                         "across a policy change fails loudly.")
+    ap.add_argument("--grad-compress", default="none",
+                    choices=["none", "bf16", "int8"],
+                    help="GS gradient wire compression (optim/compress.py); "
+                         "int8 carries error feedback in step state and "
+                         "through checkpoints")
+    ap.add_argument("--ckpt-quantize", default="none",
+                    choices=["none", "int8"],
+                    help="quantize merged-checkpoint cold attributes "
+                         "(SH color, opacity logit) to int8 with per-tensor "
+                         "scales; geometry stays f32")
     # common
     ap.add_argument("--steps", type=int, default=50)
     ap.add_argument("--seed", type=int, default=0)

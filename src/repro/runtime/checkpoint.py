@@ -181,6 +181,19 @@ class CheckpointManager:
                 return s
         return None
 
+    def manifest_extra(self, step: int,
+                       partition: Optional[int] = None) -> dict:
+        """The ``extra`` dict of a committed checkpoint WITHOUT restoring
+        its tree.  The resume-compatibility peek: drivers whose step-state
+        LAYOUT depends on config (grad_compress error feedback changes the
+        leaf count) must read the recorded config and raise the documented
+        mismatch error BEFORE the leaf-count assert in ``restore`` could
+        fire an opaque one."""
+        d = self._step_dir(step, partition)
+        assert os.path.exists(os.path.join(d, "_COMPLETE")), d
+        with open(os.path.join(d, "manifest.json")) as f:
+            return json.load(f)["extra"]
+
     def restore_latest(self, like: Any, *, partition: Optional[int] = None,
                        shardings: Any = None):
         """Restore the newest RESTORABLE checkpoint: (tree, extra, step).
@@ -226,3 +239,52 @@ class CheckpointManager:
         else:
             out = jax.tree.map(jnp.asarray, out)
         return out, manifest["extra"]
+
+
+# ---------------------------------------------------------------------------
+# Quantized cold-attribute checkpointing (int8 per-tensor scale)
+# ---------------------------------------------------------------------------
+
+#: merged-model fields cold enough for int8 storage: degree-0 SH color and
+#: the opacity logit.  GEOMETRY (means/scales/quats) stays f32 — position
+#: error is a rendering error at every pixel a splat touches, while color /
+#: opacity error is bounded by the 8-bit step of a per-tensor scale.
+COLD_QUANT_FIELDS = ("colors", "opacity_logit")
+
+
+def quantize_cold(tree, fields=COLD_QUANT_FIELDS):
+    """-> (tree with ``fields`` as int8, JSON-able meta for ``extra``).
+
+    Symmetric int8 per-tensor scale (scale = max|x| / 127, the
+    optim/compress.py convention): each named leaf is stored as int8 with
+    its f32 scale recorded in the returned meta dict — pass the meta as
+    ``extra={"quant": meta}`` on save so ``dequantize_cold`` (and
+    serving's ``from_checkpoint``) can restore.  Quantization error per
+    element is <= scale/2 = max|x|/254.  Fields are a NamedTuple's
+    attribute names (the merged ``Gaussians``); untouched leaves keep
+    their dtype, so the checkpoint byte win is exactly 3 bytes per
+    quantized element."""
+    meta = {"mode": "int8", "fields": {}}
+    repl = {}
+    for name in fields:
+        x = np.asarray(jax.device_get(getattr(tree, name)), np.float32)
+        scale = float(max(np.abs(x).max(), 1e-12) / 127.0)
+        q = np.clip(np.round(x / scale), -127, 127).astype(np.int8)
+        repl[name] = q
+        meta["fields"][name] = scale
+    return tree._replace(**repl), meta
+
+
+def dequantize_cold(tree, meta: dict):
+    """Invert ``quantize_cold`` using the scales recorded in ``meta``
+    (``extra["quant"]``).  Leaves restore to f32; a tree saved WITHOUT
+    quantization passes through untouched when ``meta`` is falsy."""
+    if not meta:
+        return tree
+    if meta.get("mode") != "int8":
+        raise ValueError(f"unknown checkpoint quant mode: {meta.get('mode')!r}")
+    repl = {}
+    for name, scale in meta["fields"].items():
+        q = getattr(tree, name)
+        repl[name] = jnp.asarray(q, jnp.float32) * jnp.float32(scale)
+    return tree._replace(**repl)

@@ -1,0 +1,95 @@
+"""Unit tests for optim/compress.py (gradient wire compression).
+
+The module predates its first caller (core.distributed.make_gs_train_step
+wires it behind GSTrainCfg.grad_compress); these tests pin its contract
+directly so the driver integration can rely on it:
+
+  * "none"  is an identity passthrough (same leaves, ratio 1.0)
+  * "bf16"  is a stateless fp32->bf16->fp32 round-trip (ratio 2.0) whose
+            per-element error is bounded by the bf16 unit roundoff
+  * "int8"  quantises with a per-tensor scale (ratio 4.0) and CARRIES the
+            residual: cumulative dequantised output over steps equals the
+            cumulative true gradient minus only the final residual
+  * unknown modes raise loudly
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim.compress import compress_grads
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    ka, kb = jax.random.split(k)
+    return {
+        "a": jax.random.normal(ka, (33, 7), jnp.float32),
+        "b": 1e-3 * jax.random.normal(kb, (128,), jnp.float32),
+    }
+
+
+def test_none_is_identity():
+    g = _tree()
+    out, err, ratio = compress_grads(g, "none", err_state=None)
+    assert ratio == 1.0
+    assert err is None
+    # identity, not a copy: the driver's "none" path must stay zero-cost
+    assert out is g
+
+
+def test_bf16_round_trip():
+    g = _tree()
+    out, err, ratio = compress_grads(g, "bf16", err_state=None)
+    assert ratio == 2.0
+    assert err is None           # stateless: no residual to carry
+    for name in g:
+        o, x = np.asarray(out[name]), np.asarray(g[name])
+        assert o.dtype == np.float32   # decompressed back to f32
+        # bf16 keeps f32's exponent; 8-bit mantissa -> relative error
+        # <= 2^-9 per element (round-to-nearest unit roundoff)
+        assert np.all(np.abs(o - x) <= np.abs(x) * 2.0 ** -8 + 1e-12)
+        # and it actually quantised: exact only where bf16-representable
+        assert o == pytest.approx(x, rel=2.0 ** -8)
+
+
+def test_int8_error_feedback_carries_residual():
+    g = _tree()
+    # step 1: err_state=None must zeros-init internally
+    d1, e1, ratio = compress_grads(g, "int8", err_state=None)
+    assert ratio == 4.0
+    for name in g:
+        # per-tensor scale = max|g|/127 -> error <= scale/2 per element
+        scale = float(np.abs(np.asarray(g[name])).max()) / 127.0
+        assert np.abs(np.asarray(d1[name] - g[name])).max() <= 0.5 * scale \
+            + 1e-7
+        # residual is exactly what the wire dropped
+        np.testing.assert_allclose(np.asarray(e1[name]),
+                                   np.asarray(g[name] - d1[name]),
+                                   rtol=0, atol=1e-7)
+    # step 2 with the SAME gradient: the carried residual compensates, so
+    # cumulative dequantised == cumulative true gradient - final residual
+    # (the error-feedback invariant that makes long-run bias vanish)
+    d2, e2, _ = compress_grads(g, "int8", err_state=e1)
+    for name in g:
+        lhs = np.asarray(d1[name] + d2[name] + e2[name])
+        rhs = np.asarray(g[name] + g[name])
+        np.testing.assert_allclose(lhs, rhs, rtol=0, atol=1e-5)
+
+
+def test_int8_zero_init_matches_explicit_zeros():
+    g = _tree(1)
+    zeros = jax.tree.map(lambda x: jnp.zeros_like(x), g)
+    d_none, e_none, _ = compress_grads(g, "int8", err_state=None)
+    d_zero, e_zero, _ = compress_grads(g, "int8", err_state=zeros)
+    for name in g:
+        np.testing.assert_array_equal(np.asarray(d_none[name]),
+                                      np.asarray(d_zero[name]))
+        np.testing.assert_array_equal(np.asarray(e_none[name]),
+                                      np.asarray(e_zero[name]))
+
+
+def test_unknown_mode_raises():
+    with pytest.raises(ValueError):
+        compress_grads(_tree(), "fp4", err_state=None)

@@ -148,6 +148,114 @@ def test_backward_parity_sweep(T, K, th, tw):
     assert np.isfinite(np.asarray(g_k)).all()
 
 
+#: per-dtype parity matrix (PR 8): bf16-policy feature tables through every
+#: impl, across the K regimes {1, 16, 64} and the production (8, 128) tile,
+#: with dead and saturated splats mixed in (same conditioning as GRAD_SWEEP)
+DTYPE_SWEEP = [
+    # (T, K, th, tw)
+    (2, 1, 8, 16),
+    (2, 16, 8, 16),
+    (3, 64, 8, 16),
+    (2, 64, 8, 128),   # production tile shape
+]
+
+
+def _bf16_case(seed, T, K, th, tw):
+    """(f32 feats, bf16 feats, origins, gout) with dead + saturated splats."""
+    feats, origins = make_tile_inputs(seed, T, K, th, tw, dead_frac=0.25)
+    f = np.array(feats)
+    r = np.random.default_rng(seed + 100)
+    sat = (r.uniform(size=(T, K)) < 0.2) & (f[..., 8] > 0)
+    f[..., 8] = np.where(sat, 3.0, f[..., 8])
+    feats = jnp.asarray(f)
+    gout = jnp.asarray(r.normal(size=(T, 4, th, tw)), jnp.float32)
+    return feats, feats.astype(jnp.bfloat16), origins, gout
+
+
+@pytest.mark.dtype
+@pytest.mark.parametrize("impl", ["ref", "interpret"])
+@pytest.mark.parametrize("T,K,th,tw", DTYPE_SWEEP)
+def test_bf16_policy_forward(T, K, th, tw, impl):
+    """bf16 feature tables: exact impl-parity + bounded error vs f32 truth.
+
+    Two rungs of the tolerance ladder, asserted separately because they
+    bound DIFFERENT things:
+
+      exact rung (1e-5): a bf16 table through any impl must equal the f32
+        oracle on the PROMOTED table — ops.rasterize_tiles promotes once at
+        entry, before any impl divergence, so the only differences left are
+        the same float-associativity noise the f32 sweep pins at 1e-5.
+        This is the invariant that keeps ref == interpret == pallas per
+        dtype (swapping impl under the bf16 policy never changes math).
+
+      truth rung (measured): vs the f32 oracle on the UNROUNDED table the
+        error is dominated by bf16 rounding of mean2d at coordinate
+        magnitude ~W: ulp(W) = W * 2^-8, i.e. a <= 0.5 px center shift on
+        the production strip (W = 256).  Measured over 6 seeds per shape:
+        worst-pixel <= 0.44, mean <= 0.008 (pixels in [0, 1]).  Asserted
+        with margin at 0.5 / 0.02 — NOT a tight bound, a regression tripwire
+        for the policy's real cost.
+    """
+    feats, fb, origins, _ = _bf16_case(21, T, K, th, tw)
+    out_b = ops.rasterize_tiles(fb, origins, tile_h=th, tile_w=tw, impl=impl)
+    assert out_b.dtype == jnp.float32  # f32 accumulation regardless of input
+    ref_promoted = ref_impl.rasterize_tiles_ref(
+        fb.astype(jnp.float32), origins, tile_h=th, tile_w=tw)
+    np.testing.assert_allclose(out_b, ref_promoted, rtol=1e-5, atol=1e-5)
+    ref_truth = ref_impl.rasterize_tiles_ref(feats, origins,
+                                             tile_h=th, tile_w=tw)
+    err = np.abs(np.asarray(out_b) - np.asarray(ref_truth))
+    assert err.max() <= 0.5, f"worst-pixel {err.max():.3f}"
+    assert err.mean() <= 0.02, f"mean {err.mean():.4f}"
+
+
+@pytest.mark.dtype
+@pytest.mark.parametrize("T,K,th,tw", DTYPE_SWEEP)
+def test_bf16_policy_gradient(T, K, th, tw):
+    """bf16-policy gradients: impl-parity + direction agreement vs f32.
+
+    The custom-VJP boundary rounds feature cotangents back to the input
+    dtype (the transpose of the entry promote), so both legs see
+    bf16-rounded gradients:
+
+      impl parity (2e-3): interpret vs ref on the SAME bf16 table — both
+        compute the cotangent in f32 and round it identically at the
+        boundary; residual differences are f32 associativity noise that
+        lands the two sides on opposite sides of a bf16 rounding boundary,
+        i.e. at most ~1 bf16 ulp of the gradient magnitude (measured
+        worst-case 9.8e-4 across the sweep).
+
+      truth (cosine >= 0.95): vs the f32 gradient the pointwise error is
+        forward-divergence dominated (the 0.5 px mean2d shift moves which
+        pixels a splat touches), so elementwise tolerances are
+        meaningless; what training needs is the DIRECTION.  Measured
+        cosine >= 0.964 across the sweep (6 seeds/shape); asserted 0.95.
+        Skipped when the f32 gradient is ~0 (all-dead seeds).
+    """
+    feats, fb, origins, gout = _bf16_case(21, T, K, th, tw)
+
+    def loss(x, impl):
+        return jnp.vdot(
+            ops.rasterize_tiles(x, origins, tile_h=th, tile_w=tw, impl=impl),
+            gout)
+
+    gb_ref = jax.grad(lambda x: loss(x, "ref"))(fb)
+    gb_int = jax.grad(lambda x: loss(x, "interpret"))(fb)
+    assert gb_ref.dtype == jnp.bfloat16  # cotangent rounded at the boundary
+    np.testing.assert_allclose(np.asarray(gb_ref, np.float32),
+                               np.asarray(gb_int, np.float32),
+                               rtol=2e-3, atol=2e-3)
+    g32 = jax.grad(lambda x: loss(x, "ref"))(feats)
+    a = np.asarray(gb_ref[..., :9], np.float32).ravel()
+    b = np.asarray(g32[..., :9]).ravel()
+    if np.linalg.norm(b) > 1e-3:
+        cos = float(a @ b / (np.linalg.norm(a) * np.linalg.norm(b)))
+        assert cos >= 0.95, f"gradient cosine {cos:.4f}"
+    # padding lanes carry no gradient under any dtype
+    assert np.abs(np.asarray(gb_ref[..., 9:], np.float32)).max() == 0.0
+    assert np.isfinite(np.asarray(gb_ref, np.float32)).all()
+
+
 def test_backward_empty_slots_zero_grad():
     feats, origins = make_tile_inputs(3, 2, 8, 8, 16, dead_frac=1.0)
     g = jax.grad(
