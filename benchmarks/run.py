@@ -111,6 +111,13 @@ def main():
           lambda: bench_serving.run(quick=quick or args.smoke,
                                     gate_floor=1.5))
 
+    from benchmarks import bench_timeseries
+    # warm-started timesteps must reach the cold run's final loss in
+    # <= 60% of its steps, and densify_cap must hold the live-splat
+    # count flat across timesteps (both gates live inside the bench)
+    bench("timeseries",
+          lambda: bench_timeseries.run(quick=quick or args.smoke))
+
     if args.smoke:
         print(f"\n[benchmarks] smoke tier done in {time.time()-t0:.0f}s; "
               f"JSON under experiments/benchmarks/")

@@ -1476,7 +1476,9 @@ def fit_partitions(g: Gaussians, cams: Camera, gts, masks, cfg: GSTrainCfg,
                    impl: str = "auto", win_size: int = 7,
                    rebalance_every: int = 0,
                    rebalance_threshold: float = 1.5,
-                   ckpt=None, ckpt_every: int = 0, log_every: int = 0):
+                   ckpt=None, ckpt_every: int = 0, log_every: int = 0,
+                   warm_start=None, densify_cap: Optional[int] = None,
+                   exchange_schedule=None):
     """Distributed tier-schedule driver: train every partition of the
     batched (P, N) layout in ONE SPMD program on ``mesh``, running the same
     probe -> train -> densify -> re-probe lifecycle as the single-device
@@ -1517,6 +1519,16 @@ def fit_partitions(g: Gaussians, cams: Camera, gts, masks, cfg: GSTrainCfg,
     stream, and continues from that step; ``ckpt_every`` saves (g, opt) +
     schedules periodically and a final checkpoint always lands at
     ``steps``.  ``losses`` covers only the steps this call actually ran.
+
+    Warm start (timeseries): ``warm_start=(state_tree, extra, step)`` is an
+    in-memory resume — ``state_tree`` is a ``(g, opt[, err])`` host tree,
+    ``extra`` the checkpoint-extra dict whose ``schedule``/``exchange``
+    states are loaded (so init probes are SKIPPED, same contract as a disk
+    resume), and ``step`` the global step the seed was saved at (the caller
+    passes ``steps = step + n`` to run n more).  The int8 error-feedback
+    residual is always re-zeroed at the boundary.  A restorable on-disk
+    checkpoint takes precedence.  ``densify_cap=`` bounds the LIVE splat
+    count per partition during densify (see ``GSTrainCfg.densify_cap``).
     """
     if grid is None:
         grid = TileGrid(cams.width, cams.height, cfg.tile_h, cfg.tile_w)
@@ -1528,8 +1540,11 @@ def fit_partitions(g: Gaussians, cams: Camera, gts, masks, cfg: GSTrainCfg,
     sched = schedule if schedule is not None else cfg.tier_schedule()
     m_dev = folded_tile_count(mesh, grid, Pn, views=vb,
                               exchange=cfg.exchange)
-    ex = ExchangeSchedule(budget=cfg.exchange_budget) if cfg.exchange \
-        else None
+    # exchange_schedule= mirrors schedule=: the caller keeps the handle, so
+    # a timeseries driver can carry probed/grown budgets across timesteps
+    ex = exchange_schedule if exchange_schedule is not None else (
+        ExchangeSchedule(budget=cfg.exchange_budget) if cfg.exchange
+        else None)
     ex_pinned = cfg.exchange_budget is not None
     n_data = dict(zip(mesh.axis_names, mesh.devices.shape))[_axes(mesh).data]
     Nl = g.means.shape[1] // n_data
@@ -1570,6 +1585,24 @@ def fit_partitions(g: Gaussians, cams: Camera, gts, masks, cfg: GSTrainCfg,
             if ex is not None and extra.get("exchange"):
                 ex.load_state(extra["exchange"])
             start = latest
+    if start == 0 and warm_start is not None:
+        # warm start = an IN-MEMORY resume: the timeseries driver hands us
+        # the previous timestep's merged state + schedule extras, and we
+        # take the exact resume path (restored caps/budgets, no init
+        # re-probe, densify-key fast-forward below).  An on-disk checkpoint
+        # for THIS run wins — it is strictly newer than the warm seed.
+        wtree, wextra, wstep = warm_start
+        wextra = wextra or {}
+        _check_resume_policy(wextra, cfg)
+        g, opt = wtree[0], wtree[1]
+        # err stays zeros: the int8 error-feedback residual never crosses
+        # a timestep boundary (same reset contract as densify/rebalance —
+        # the new timestep's field moved under the rows)
+        if sched is not None and wextra.get("schedule"):
+            sched.load_state(wextra["schedule"])
+        if ex is not None and wextra.get("exchange"):
+            ex.load_state(wextra["exchange"])
+        start = wstep
     # fast-forward the densify key stream consumed before ``start`` so a
     # resumed run splits the same keys as an uninterrupted one
     for i in range(start):
@@ -1631,8 +1664,10 @@ def fit_partitions(g: Gaussians, cams: Camera, gts, masks, cfg: GSTrainCfg,
         probe_gs_exchange(ex, mesh, grid, g_dev, probe_cams, views=vb)
 
     opt_vax = GSOptState(m=0, v=0, step=None, grad_accum=0, grad_count=0)
+    dcfg = dataclasses.replace(cfg, densify_cap=densify_cap) \
+        if densify_cap is not None else cfg
     densify = jax.jit(jax.vmap(
-        partial(densify_and_prune, cfg=cfg, extent=extent),
+        partial(densify_and_prune, cfg=dcfg, extent=extent),
         in_axes=(0, opt_vax, 0), out_axes=(0, opt_vax)))
 
     step_cache = {}

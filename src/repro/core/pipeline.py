@@ -11,6 +11,7 @@ and the quality-ablation tests drive this module.
 
 from __future__ import annotations
 
+import concurrent.futures
 import dataclasses
 import functools
 import time
@@ -70,8 +71,10 @@ class PipelineResult:
     boundary_frac: float = 0.0
 
 
-def build_scene(ds: GSDataset, seed: int = 0):
-    points, colors = point_cloud_for(ds.volume, ds.n_points, seed=seed)
+def build_scene(ds: GSDataset, seed: int = 0, t: float = 0.0):
+    """``t`` extracts the time-evolved field's isosurface (timeseries
+    driver); ``t=0`` is bit-identical to the static scene."""
+    points, colors = point_cloud_for(ds.volume, ds.n_points, seed=seed, t=t)
     extent = float(np.linalg.norm(points.max(0) - points.min(0)))
     return points, colors, extent
 
@@ -250,6 +253,102 @@ def render_views(g: Gaussians, cams: Camera, grid: TileGrid, *, K: int,
         rgbs.append(np.asarray(out.rgb[:take]))
         covs.append(np.asarray(out.coverage[:take]))
     return np.concatenate(rgbs), np.concatenate(covs)
+
+
+@dataclasses.dataclass
+class TimestepData:
+    """Everything the distributed driver consumes for one timestep."""
+    t: float
+    points: np.ndarray
+    colors: np.ndarray
+    extent: float
+    parts: List[PartitionData]
+    g0: Gaussians                   # fresh batched (P, N) init: cold-start
+    #                                 state AND the restore/warm template
+    gts: np.ndarray                 # (P, V, H, W, 3) bg=0 training targets
+    masks: Optional[np.ndarray]     # (P, V, H, W) bool, or None
+
+
+def prepare_timestep(ds: GSDataset, cams: Camera, grid: TileGrid, *,
+                     t: float = 0.0, seed: int = 0, n_parts: int = 2,
+                     capacity: int, K: int = 48, use_ghost: bool = True,
+                     use_mask: bool = True) -> TimestepData:
+    """Host-side ingest for ONE timestep of the timeseries driver:
+    extraction -> partition (+ghosts) -> fresh equal-capacity (P, N) init
+    -> per-partition bg=0 GT renders -> coverage masks.
+
+    This is exactly ``launch/train.py --gs``'s per-scene prep, factored out
+    so the streaming loop can run timestep t+1's ingest on a background
+    thread (``TimestepPrefetcher``) while timestep t trains on the devices.
+    The camera rig and tile grid are FIXED across the series (passed in,
+    built once from the t=0 scene), so every timestep's GT tensors share
+    one shape; ``capacity`` is likewise series-constant — the warm-started
+    state must keep its (P, N) layout — and a partition that outgrows it
+    fails loudly rather than silently dropping points.
+    """
+    points, colors, extent = build_scene(ds, seed, t=t)
+    ghost_w = ds.ghost_frac * extent if use_ghost else 0.0
+    parts, _ = partition_points(points, colors, n_parts,
+                                ghost_width=ghost_w)
+    over = [(pd.part_id, len(pd.points)) for pd in parts
+            if len(pd.points) > capacity]
+    if over:
+        raise ValueError(
+            f"timestep t={t}: partition(s) {over} exceed the series "
+            f"capacity {capacity} — raise the dataset capacity_factor (the "
+            f"(P, N) layout is fixed across the series by the warm-started "
+            f"state)")
+    g0 = jax.tree.map(lambda *xs: jnp.stack(xs),
+                      *[init_partition_gaussians(pd, capacity=capacity)
+                        for pd in parts])
+    gts, masks = [], []
+    for pd in parts:
+        part_gt, part_cov = render_views(
+            gt_gaussians(pd.points, pd.colors), cams, grid, K=K, bg=0.0)
+        gts.append(part_gt)
+        if use_mask:
+            masks.append(coverage_masks(part_cov))
+    return TimestepData(
+        t=t, points=points, colors=colors, extent=extent, parts=parts,
+        g0=g0, gts=np.stack(gts),
+        masks=np.stack(masks) if use_mask else None)
+
+
+class TimestepPrefetcher:
+    """One-slot background ingest: ``submit`` schedules a
+    ``prepare_timestep`` call on a single worker thread, ``get`` blocks for
+    (and clears) the result.  While timestep t trains on the devices, the
+    worker extracts/partitions/renders t+1 on the host — jax dispatch is
+    thread-safe, so the GT renders interleave with training dispatches and
+    the ingest latency hides behind the training wall-clock.  One slot is
+    deliberate: prefetching more than one timestep ahead would hold extra
+    (P, V, H, W, 3) GT tensors alive for no latency win."""
+
+    def __init__(self):
+        self._pool = concurrent.futures.ThreadPoolExecutor(max_workers=1)
+        self._fut = None
+
+    def submit(self, fn, /, *args, **kwargs):
+        if self._fut is not None:
+            raise RuntimeError("prefetch slot already occupied — get() the "
+                               "pending timestep first")
+        self._fut = self._pool.submit(fn, *args, **kwargs)
+
+    def get(self):
+        if self._fut is None:
+            raise RuntimeError("nothing prefetched — submit() first")
+        fut, self._fut = self._fut, None
+        return fut.result()
+
+    def close(self):
+        self._pool.shutdown(wait=True)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
 
 
 def run_pipeline(cfg: PipelineCfg) -> PipelineResult:

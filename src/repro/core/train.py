@@ -89,6 +89,12 @@ class GSTrainCfg:
     densify_grad_thresh: float = 5e-6
     percent_dense: float = 0.01     # split/clone size boundary (x extent)
     max_new: int = 512              # per densify event (static budget)
+    # hard ceiling on LIVE splats per partition (GeoGaussian-style
+    # ``num_max``): densify stops adding children once the live count
+    # reaches the cap, so memory stays bounded over long / timeseries
+    # runs.  None = uncapped (the pre-timeseries behaviour).  Prune still
+    # runs below the cap; the cap only gates GROWTH.
+    densify_cap: Optional[int] = None
     prune_opacity: float = 0.005
     prune_scale: float = 0.5        # x extent: prune absurdly large splats
     split_shrink: float = 1.6
@@ -333,7 +339,11 @@ def make_train_step(cfg: GSTrainCfg, grid: TileGrid, extent: float, *,
 def densify_and_prune(g: Gaussians, opt: GSOptState, key, cfg: GSTrainCfg,
                       extent: float):
     """One densify event. Static shapes throughout: up to ``cfg.max_new``
-    sources act; children land in free slots found via fixed-size nonzero."""
+    sources act; children land in free slots found via fixed-size nonzero.
+    ``cfg.densify_cap`` additionally bounds the LIVE count: only enough
+    children to reach the cap are admitted (the valid (src, free) pairs
+    form a prefix of the fixed-size nonzero output, so the cap is a prefix
+    mask — static shapes preserved)."""
     cap = g.capacity
     M = min(cfg.max_new, cap)
     avg = opt.grad_accum / jnp.maximum(opt.grad_count, 1.0)
@@ -346,6 +356,10 @@ def densify_and_prune(g: Gaussians, opt: GSOptState, key, cfg: GSTrainCfg,
     src_idx = jnp.nonzero(hot, size=M, fill_value=-1)[0]
     free_idx = jnp.nonzero(~g.active, size=M, fill_value=-1)[0]
     ok = (src_idx >= 0) & (free_idx >= 0)
+    if cfg.densify_cap is not None:
+        headroom = jnp.maximum(
+            jnp.int32(cfg.densify_cap) - g.active.sum().astype(jnp.int32), 0)
+        ok = ok & (jnp.arange(M) < headroom)
     # OOB dest indices are dropped by .at[...] mode="drop"
     dest = jnp.where(ok, free_idx, cap)
     src = jnp.where(ok, src_idx, 0)
@@ -418,7 +432,8 @@ def fit_partition(g: Gaussians, cams: Camera, gts, masks, cfg: GSTrainCfg,
                   view_batch: Optional[int] = None,
                   schedule: Optional[TierSchedule] = None,
                   ckpt=None, ckpt_every: int = 0,
-                  partition: Optional[int] = None):
+                  partition: Optional[int] = None,
+                  densify_cap: Optional[int] = None):
     """Train one partition for ``steps`` steps cycling over its camera set.
 
     gts: (V, H, W, 3); masks: (V, H, W) bool or None.  Returns
@@ -450,7 +465,11 @@ def fit_partition(g: Gaussians, cams: Camera, gts, masks, cfg: GSTrainCfg,
     if key is None:
         key = jax.random.PRNGKey(0)
     sched = schedule if schedule is not None else cfg.tier_schedule()
-    densify = jax.jit(partial(densify_and_prune, cfg=cfg, extent=extent))
+    # densify_cap= overrides the cfg knob (the timeseries driver passes a
+    # computed cap); only the densify closure sees the replaced cfg
+    dcfg = dataclasses.replace(cfg, densify_cap=densify_cap) \
+        if densify_cap is not None else cfg
+    densify = jax.jit(partial(densify_and_prune, cfg=dcfg, extent=extent))
     opt = init_opt(g)
     n_views = gts.shape[0]
     vb = max(1, min(view_batch or cfg.view_batch, n_views))

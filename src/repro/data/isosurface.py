@@ -59,12 +59,16 @@ def extract_isosurface(field, iso, *, max_points: int):
 _RES_CACHE = {}
 
 
-def point_cloud_for(name: str, n_points: int, *, seed: int = 0):
+def point_cloud_for(name: str, n_points: int, *, seed: int = 0,
+                    t: float = 0.0):
     """Extract ~n_points isosurface points from the named analytic volume.
 
     -> (points (n, 3) float32, colors (n, 3) float32).  Deterministic.
     Crossing count scales ~ R^2 x surface complexity; we search R once per
-    (name, n_points) and memoise.
+    (name, n_points) and memoise.  ``t`` samples the time-evolved field
+    (``volumes.make_volume(..., t=t)``) at the SAME cached resolution R —
+    the R search always probes t=0, so every timestep of a series extracts
+    from an identical grid and point counts stay comparable across t.
     """
     key = (name, n_points)
     if key not in _RES_CACHE:
@@ -80,7 +84,7 @@ def point_cloud_for(name: str, n_points: int, *, seed: int = 0):
         R = int(np.clip(np.sqrt(n_points / c) * 64, 16, 1024))
         _RES_CACHE[key] = R
     R = _RES_CACHE[key]
-    field, iso = V.make_volume(name, R)
+    field, iso = V.make_volume(name, R, t=t)
     f = field - iso
     pts = []
     for ax in range(3):

@@ -82,10 +82,33 @@ VOLUMES = {
 }
 
 
-def make_volume(name: str, res: int):
-    """-> (field (res,res,res) float32 numpy, iso value)."""
+def make_volume(name: str, res: int, t: float = 0.0):
+    """-> (field (res,res,res) float32 numpy, iso value).
+
+    ``t`` evolves the field in time (the timeseries driver's analytic
+    stand-in for a simulation dumping one snapshot per step): a bounded
+    travelling multi-mode displacement advects the isosurface smoothly and
+    deterministically, so successive timesteps share large-scale structure
+    — exactly the regime warm-starting exploits — while every crossing
+    moves.  ``t=0`` is bit-identical to the static field (the guard skips
+    the perturbation entirely), so all pre-timeseries callers and caches
+    are unaffected.
+    """
     f, iso = VOLUMES[name](res)
-    return f.astype(np.float32), float(iso)
+    f = f.astype(np.float32)
+    if t:
+        tt = float(t)
+        x, y, z = _grid(res)
+        w = (np.sin(2 * np.pi * (2.0 * x + 0.61 * tt))
+             * np.sin(2 * np.pi * (3.0 * y - 0.83 * tt))
+             * np.cos(2 * np.pi * (1.0 * z + 0.47 * tt)))
+        w += 0.5 * np.sin(2 * np.pi * (5.0 * x - 0.31 * tt)) \
+            * np.sin(2 * np.pi * (4.0 * y + 0.53 * tt))
+        # tanh bounds the amplitude so late timesteps deform, never destroy,
+        # the surface (the field's own structure stays dominant)
+        f = f + (0.06 * np.tanh(tt)) * w.astype(np.float32)
+        f = f.astype(np.float32)
+    return f, float(iso)
 
 
 def height_colors(points: np.ndarray) -> np.ndarray:

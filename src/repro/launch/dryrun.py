@@ -198,6 +198,45 @@ def lower_gs_cell(cell: str, mesh, *, opt: bool = False):
     return lowered, meta, float(raster + proj + loss)
 
 
+def lower_gs_train_cell(dataset: str, mesh, *, res: int = 64,
+                        n_parts: int = 2, view_batch: int = 0,
+                        tier: str = "cpu"):
+    """Lower the PRODUCTION GS train step — the same tiered
+    ``make_gs_train_step`` the distributed driver (``fit_partitions``) and
+    the timeseries loop dispatch every step — on a ("part", "view") mesh.
+
+    Unlike ``lower_gs_cell`` (dense-K, analysis-friendly flop model, dryrun
+    meshes) this profiles what training actually runs: occupancy-tiered
+    rasterization (strip-sized caps: the always-exact shape, an upper bound
+    on any probed-cap step), the view-minibatch forward, and the trainer's
+    collective layout.  -> (lowered, meta).
+    """
+    from repro.configs.gs_datasets import get_gs_dataset
+    from repro.core.distributed import (gs_batch_specs, gs_state_specs,
+                                        make_gs_train_step)
+    from repro.core.tiling import TileGrid
+    from repro.core.train import GSTrainCfg
+
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    vb = view_batch or sizes.get("view", 1)
+    cfg = GSTrainCfg(view_batch=vb)
+    ds = get_gs_dataset(dataset, tier)
+    mult = sizes.get("part", 1)           # N is sharded over "part"
+    n_per_part = -(-int(ds.n_points * ds.capacity_factor)
+                   // n_parts // mult) * mult
+    grid = TileGrid(res, res, cfg.tile_h, cfg.tile_w)
+    step = make_gs_train_step(mesh, cfg, grid, extent=1.0, impl="ref",
+                              views=vb, return_overflow=True)
+    g, opt = gs_state_specs(n_parts, n_per_part)
+    batch = gs_batch_specs(n_parts, grid, views=vb)
+    meta = {
+        "dataset": dataset, "resolution": res, "n_parts": n_parts,
+        "gaussians_per_part": n_per_part, "view_batch": vb,
+        "k_tiers": cfg.resolved_k_tiers(), "tiles": grid.n_tiles,
+    }
+    return step.lower(g, opt, batch), meta
+
+
 def run_cell(arch: str, shape: str, mesh, mesh_tag: str, out_dir: str,
              force: bool = False, gs_opt: bool = False) -> str:
     os.makedirs(f"{out_dir}/{mesh_tag}", exist_ok=True)

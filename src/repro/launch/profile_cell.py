@@ -10,16 +10,27 @@ if os.environ.get("REPRO_DRYRUN_DEVICES"):
 
     python -m repro.launch.profile_cell --arch minicpm-2b --shape train_4k \
         [--gs gs-richtmyer-meshkov] [--top 20] [--by flops]
+
+``--gs-train DATASET`` profiles the PRODUCTION trainer instead of the
+dense dry-run cell: the tiered ``make_gs_train_step`` that
+``fit_partitions`` (and the ``--timeseries`` loop, once per timestep)
+dispatches, lowered on the real ("part", "view") mesh — so per-timestep
+profiles attribute the step the devices actually run:
+
+    REPRO_DRYRUN_DEVICES=4 python -m repro.launch.profile_cell \
+        --gs-train sphere_shell --gs-res 32 --top 10
 """
 
 import argparse
+import math
 import re
 from collections import Counter
 
 import jax
 
 from repro.launch import hlo_analysis as H
-from repro.launch.dryrun import lower_gs_cell, lower_lm_cell, make_meshes
+from repro.launch.dryrun import (lower_gs_cell, lower_gs_train_cell,
+                                 lower_lm_cell, make_meshes)
 from repro.configs import get_spec
 
 OPNAME_RE = re.compile(r'op_name="([^"]*)"')
@@ -66,16 +77,35 @@ def main():
     ap.add_argument("--arch", default="minicpm-2b")
     ap.add_argument("--shape", default="train_4k")
     ap.add_argument("--gs", default="")
+    ap.add_argument("--gs-train", default="",
+                    help="profile the production tiered GS train step for "
+                         "this dataset (sphere_shell/kingsnake/...) on a "
+                         "('part','view') mesh")
+    ap.add_argument("--gs-res", type=int, default=64)
+    ap.add_argument("--gs-parts", type=int, default=2)
+    ap.add_argument("--gs-view-batch", type=int, default=2)
     ap.add_argument("--mesh", default="single")
     ap.add_argument("--top", type=int, default=20)
     ap.add_argument("--by", default="hbm", choices=["hbm", "flops"])
     args = ap.parse_args()
 
-    mesh = make_meshes(args.mesh)[args.mesh]
-    if args.gs:
+    if args.gs_train:
+        n = len(jax.devices())
+        v = math.gcd(max(1, args.gs_view_batch), n)
+        mesh = jax.make_mesh((n // v, v), ("part", "view"))
+        lowered, meta = lower_gs_train_cell(
+            args.gs_train, mesh, res=args.gs_res, n_parts=args.gs_parts,
+            view_batch=args.gs_view_batch)
+        name = (f"gs-train-{args.gs_train} res={meta['resolution']} "
+                f"parts={meta['n_parts']} N/part="
+                f"{meta['gaussians_per_part']} k_tiers={meta['k_tiers']}")
+        args.mesh = f"{n // v}x{v} part,view"
+    elif args.gs:
+        mesh = make_meshes(args.mesh)[args.mesh]
         lowered, _, _ = lower_gs_cell(args.gs, mesh)
         name = args.gs
     else:
+        mesh = make_meshes(args.mesh)[args.mesh]
         lowered = lower_lm_cell(get_spec(args.arch), args.shape, mesh)
         name = f"{args.arch}__{args.shape}"
     txt = lowered.compile().as_text()

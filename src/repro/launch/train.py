@@ -262,6 +262,227 @@ def run_gs(args):
           f"saved under {args.ckpt_dir}")
 
 
+def run_gs_timeseries(args):
+    """Time-series training loop (``--gs --timeseries``): timesteps
+    t=0..T-1 of the evolving volume, each warm-started from the previous
+    timestep's committed state via the resume path (restored TierSchedule
+    caps + ExchangeSchedule budgets, NO init re-probe), with delta
+    checkpoints between timesteps and timestep t+1's host ingest
+    (extraction -> partition -> GT renders -> masks) prefetched on a
+    background thread while timestep t trains on the devices.
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs.gs_datasets import get_gs_dataset
+    from repro.core import merge as merge_mod
+    from repro.core import metrics
+    from repro.core.cameras import orbital_rig
+    from repro.core.distributed import ExchangeSchedule, fit_partitions
+    from repro.core.pipeline import (TimestepPrefetcher, build_scene,
+                                     gt_gaussians, prepare_timestep,
+                                     render_views)
+    from repro.core.tiling import TileGrid
+    from repro.core.train import GSTrainCfg, init_opt
+    from repro.runtime import CheckpointManager
+
+    if args.smoke:
+        args.dataset = "sphere_shell"
+        args.parts = 2
+        args.resolution = min(args.resolution, 32)
+        args.views = args.views or 4
+        args.view_batch = args.view_batch or 2
+        args.timesteps = min(args.timesteps, 2)
+        if args.densify_every == 0:
+            args.densify_every, args.densify_from = 2, 1
+        if args.densify_cap is None:
+            args.densify_cap = 4096
+
+    cfg = GSTrainCfg(view_batch=args.view_batch or 1,
+                     exchange=args.exchange,
+                     exchange_budget=args.exchange_budget,
+                     dtype_policy=args.dtype_policy,
+                     grad_compress=args.grad_compress)
+    ds = get_gs_dataset(args.dataset, "full" if args.full else "cpu")
+    n_views = args.views or ds.n_views
+    T, S = args.timesteps, args.steps
+
+    # series-fixed frame: rig, grid, capacity all come from the t=0 scene
+    # so every timestep shares ONE (P, N)/(P, V, H, W) layout — the
+    # warm-started state and the delta diffs both depend on it
+    points, colors, extent = build_scene(ds, args.seed, t=0.0)
+    center = 0.5 * (points.max(0) + points.min(0))
+    radius = 1.6 * extent / 2 + 1e-3
+    W = H = args.resolution
+    grid = TileGrid(W, H, cfg.tile_h, cfg.tile_w)
+    cams = orbital_rig(n_views, center, radius, width=W, height=H)
+
+    n_dev = len(jax.devices())
+    if args.mesh:
+        p, v = (int(x) for x in args.mesh.lower().split("x"))
+        if p * v != n_dev:
+            raise SystemExit(f"--mesh {args.mesh} needs {p * v} devices, "
+                             f"have {n_dev} (try --host-devices {p * v})")
+    else:
+        v = math.gcd(max(1, min(cfg.view_batch, n_views)), n_dev)
+        p = n_dev // v
+    mesh = jax.make_mesh((p, v), ("part", "view"))
+
+    from repro.core.partition import partition_points
+    parts0, _ = partition_points(
+        points, colors, args.parts,
+        ghost_width=ds.ghost_frac * extent if not args.no_ghost else 0.0)
+    base = max(len(pd.points) for pd in parts0)
+    # capacity_factor slack covers both densify growth AND per-timestep
+    # extraction drift (prepare_timestep fails loudly if a later timestep
+    # outgrows it)
+    cap = int(base * ds.capacity_factor) if args.densify_every else base
+    cap = -(-cap // p) * p
+
+    print(f"[train-gs-ts] dataset={args.dataset} timesteps={T} dt={args.dt} "
+          f"steps/timestep={S} parts={args.parts} res={args.resolution} "
+          f"mesh={p}x{v} ({n_dev} devices) capacity={cap} "
+          f"densify_cap={args.densify_cap} "
+          f"dtype={cfg.dtype_policy} grad-compress={cfg.grad_compress}")
+
+    # delta-checkpoint chain: one manager, keep=0 (deltas need their whole
+    # base chain on disk), full save at timestep 0, per-field sparse row
+    # diffs after that.  A restart resumes at the last COMMITTED timestep.
+    tck = CheckpointManager(os.path.join(args.ckpt_dir, "timeseries"),
+                            keep=0)
+    latest = tck.latest_restorable_step()
+    t_start = 0 if latest is None else latest // S
+    if t_start:
+        print(f"[train-gs-ts] restarting at timestep {t_start} "
+              f"(chain committed through step {latest})")
+
+    def prep(t_idx):
+        return prepare_timestep(
+            ds, cams, grid, t=t_idx * args.dt, seed=args.seed,
+            n_parts=args.parts, capacity=cap, K=cfg.K,
+            use_ghost=not args.no_ghost, use_mask=not args.no_mask)
+
+    warm = None          # (host state tree, extra, global step)
+    td = None
+    g1 = None
+    key = jax.random.PRNGKey(args.seed)
+    with TimestepPrefetcher() as pf:
+        pf.submit(prep, t_start)
+        for t in range(t_start, T):
+            td = pf.get()
+            if t + 1 < T:
+                # streaming ingest: t+1's host prep overlaps t's training
+                pf.submit(prep, t + 1)
+            if warm is None and t > 0:
+                # restart path: rebuild the warm seed from the committed
+                # delta chain (exactly what a fresh process has)
+                like = (jax.device_get(td.g0),
+                        jax.device_get(init_opt(td.g0)))
+                warm = (*tck.restore_delta(t * S, like), t * S)
+            if t > 0:
+                src = warm[1].get("timestep", t - 1)
+                print(f"[train-gs-ts] timestep {t}: warm-start from "
+                      f"timestep {src} (step {warm[2]}) — schedule + "
+                      f"exchange restored, no init probe")
+            else:
+                print(f"[train-gs-ts] timestep 0: cold start")
+
+            sched = cfg.tier_schedule()
+            ex = ExchangeSchedule(budget=cfg.exchange_budget) \
+                if cfg.exchange else None
+            t0 = time.perf_counter()
+            g1, opt1, losses = fit_partitions(
+                td.g0, cams, jnp.asarray(td.gts),
+                None if td.masks is None else jnp.asarray(td.masks),
+                cfg, mesh=mesh, steps=(t + 1) * S, extent=td.extent,
+                key=key, densify_every=args.densify_every,
+                # densify_from stays SERIES-absolute: the per-call key
+                # fast-forward then replays exactly the densify keys a
+                # continuous (or disk-resumed) run would have consumed, so
+                # a repeated static timestep is bit-on the resume oracle
+                densify_from=args.densify_from, grid=grid,
+                schedule=sched, exchange_schedule=ex,
+                rebalance_every=args.rebalance_every,
+                log_every=args.log_every, warm_start=warm,
+                densify_cap=args.densify_cap)
+            dt_s = time.perf_counter() - t0
+            live = int(np.asarray(g1.active).sum())
+            print(f"[train-gs-ts] timestep {t} (t={td.t:.3f}): "
+                  f"steps {t * S}->{(t + 1) * S} ({dt_s:.1f}s)  "
+                  f"final loss {losses[-1]:.4f}  live splats {live:,}")
+
+            # commit the timestep: full checkpoint for the chain head,
+            # sparse row-delta against the previous timestep after that
+            tree = jax.tree.map(jax.device_get, (g1, opt1))
+            extra = {"timestep": t, "t": float(td.t),
+                     "schedule": sched.state_dict() if sched else None,
+                     "exchange": ex.state_dict() if ex else None,
+                     "dtype_policy": cfg.dtype_policy,
+                     "grad_compress": cfg.grad_compress}
+            if t == 0:
+                tck.save(S, tree, extra=extra)
+            else:
+                tck.save_delta((t + 1) * S, tree, base_step=t * S,
+                               extra=extra)
+            warm = (tree, extra, (t + 1) * S)
+
+    if g1 is None:
+        # the chain is already complete: reload the final timestep for the
+        # merge/eval tail below
+        td = prep(T - 1)
+        like = (jax.device_get(td.g0), jax.device_get(init_opt(td.g0)))
+        (g1, _), _ = tck.restore_delta(T * S, like)
+        print(f"[train-gs-ts] chain already complete at timestep {T - 1}; "
+              f"skipping to merge")
+
+    # merge + eval + serving checkpoint for the FINAL timestep (same tail
+    # as the single-snapshot driver, labelled with the series step)
+    done = T * S
+    host = jax.device_get(g1)
+    part_list = [jax.tree.map(lambda x: x[i], host)
+                 for i in range(args.parts)]
+    pckpt = CheckpointManager(os.path.join(args.ckpt_dir, "partitions"),
+                              keep=2)
+    for pid, gp in enumerate(part_list):
+        pckpt.save(done, gp, partition=pid,
+                   extra={"dataset": args.dataset, "timestep": T - 1})
+
+    merged = merge_mod.merge_partitions(part_list,
+                                        [pd.part_id for pd in td.parts])
+    gt_imgs, _ = render_views(gt_gaussians(td.points, td.colors), cams,
+                              grid, K=cfg.K)
+    renders, _ = render_views(merged, cams, grid, K=cfg.K)
+    ps = float(np.mean([metrics.psnr(jnp.asarray(renders[i]),
+                                     jnp.asarray(gt_imgs[i]))
+                        for i in range(n_views)]))
+    ss = float(np.mean([metrics.ssim(jnp.asarray(renders[i]),
+                                     jnp.asarray(gt_imgs[i]))
+                        for i in range(n_views)]))
+    print(f"[train-gs-ts] timestep {T - 1} PSNR {ps:.2f}  SSIM {ss:.4f}  "
+          f"gaussians {int(np.asarray(merged.active).sum()):,}")
+
+    mckpt = CheckpointManager(os.path.join(args.ckpt_dir, "merged"), keep=2)
+    merged_extra = {"scene": {
+        "dataset": args.dataset, "resolution": args.resolution,
+        "center": [float(c) for c in center], "radius": float(radius),
+        "extent": float(td.extent), "n_views": int(n_views),
+        "K": int(cfg.K), "tile_h": int(cfg.tile_h),
+        "tile_w": int(cfg.tile_w),
+    }, "timestep": T - 1, "t": float(td.t)}
+    merged_save = merged
+    if args.ckpt_quantize == "int8":
+        from repro.runtime.checkpoint import quantize_cold
+        merged_save, quant_meta = quantize_cold(merged)
+        merged_extra["quant"] = quant_meta
+        print("[train-gs-ts] merged checkpoint cold attributes quantized "
+              f"(int8, fields={list(quant_meta['fields'])})")
+    mckpt.save(done, merged_save, extra=merged_extra)
+    np.save(os.path.join(args.ckpt_dir, "render_final.npy"), renders)
+    print(f"[train-gs-ts] merged checkpoint (step {done}) + final render "
+          f"saved under {args.ckpt_dir}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--gs", action="store_true")
@@ -314,6 +535,23 @@ def main():
                     help="GS gradient wire compression (optim/compress.py); "
                          "int8 carries error feedback in step state and "
                          "through checkpoints")
+    ap.add_argument("--timeseries", action="store_true",
+                    help="GS: train timesteps t=0..T-1 of the evolving "
+                         "volume; each timestep warm-starts from the "
+                         "previous one's committed state (restored "
+                         "schedule/exchange, no init re-probe) with delta "
+                         "checkpoints between timesteps and next-timestep "
+                         "ingest prefetched during training")
+    ap.add_argument("--timesteps", type=int, default=4,
+                    help="number of timesteps T for --timeseries")
+    ap.add_argument("--dt", type=float, default=0.1,
+                    help="simulation-time spacing between timesteps "
+                         "(volume fields evolve as t = index * dt)")
+    ap.add_argument("--densify-cap", type=int, default=None,
+                    help="hard ceiling on LIVE splats per partition: "
+                         "densify stops growing at the cap, so memory "
+                         "stays bounded across timesteps (GeoGaussian-"
+                         "style num_max; default: uncapped)")
     ap.add_argument("--ckpt-quantize", default="none",
                     choices=["none", "int8"],
                     help="quantize merged-checkpoint cold attributes "
@@ -334,7 +572,12 @@ def main():
         os.environ["XLA_FLAGS"] = (
             f"--xla_force_host_platform_device_count={args.host_devices} "
             + os.environ.get("XLA_FLAGS", ""))
-    (run_gs if args.gs else run_lm)(args)
+    if args.gs and args.timeseries:
+        run_gs_timeseries(args)
+    elif args.gs:
+        run_gs(args)
+    else:
+        run_lm(args)
 
 
 if __name__ == "__main__":

@@ -20,6 +20,13 @@ Design points for 1000+-node runs (DESIGN.md §6):
     each partition saves its own tree under ``partition_<k>/`` and a failed
     node retrains/restores alone — failure recovery cost is O(1/n).
   * retention: ``keep`` newest checkpoints are kept, older ones pruned.
+  * delta checkpoints (timeseries lineage): ``save_delta`` stores per-leaf
+    sparse ROW diffs against a committed base step (``idx_*.npy`` +
+    ``rows_*.npy``; full per-leaf fallback when the diff is dense or the
+    shape changed) and ``restore_delta`` resolves the chain — with a loud
+    refusal when a base is missing or no longer the manifest the delta was
+    diffed against (sha256 fingerprint).  Use ``keep=0`` on managers that
+    hold delta chains so retention cannot prune a base away.
 
 On a real multi-host pod, `jax.experimental.multihost_utils` gathers would
 replace ``jax.device_get`` and only process 0 would write; the layout and
@@ -28,6 +35,7 @@ commit protocol stay identical (single-process here).
 
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import shutil
@@ -221,6 +229,12 @@ class CheckpointManager:
         assert os.path.exists(os.path.join(d, "_COMPLETE")), d
         with open(os.path.join(d, "manifest.json")) as f:
             manifest = json.load(f)
+        if "delta" in manifest:
+            raise ValueError(
+                f"checkpoint step {step} under {self.root} is a DELTA "
+                f"checkpoint (diffed against base step "
+                f"{manifest['delta']['base_step']}); restore it with "
+                f"restore_delta, which resolves the base chain")
         leaves, treedef = _flatten_with_paths(like)
         assert len(leaves) == manifest["n_leaves"], (
             f"leaf count mismatch: have {len(leaves)}, "
@@ -232,6 +246,189 @@ class CheckpointManager:
             assert want is None or want == arr.shape, (
                 f"leaf {i}: shape {arr.shape} != expected {want}")
             arrs.append(arr)
+        out = jax.tree.unflatten(treedef, arrs)
+        if shardings is not None:
+            out = jax.tree.map(
+                lambda a, s: jax.device_put(a, s), out, shardings)
+        else:
+            out = jax.tree.map(jnp.asarray, out)
+        return out, manifest["extra"]
+
+    # ------------------------------------------------------------------
+    # Delta checkpoints (timeseries lineage: per-leaf sparse row diffs)
+    # ------------------------------------------------------------------
+
+    def _manifest_digest(self, step: int,
+                         partition: Optional[int] = None) -> str:
+        """sha256 of a committed checkpoint's raw manifest.json bytes —
+        the base-identity fingerprint recorded inside every delta."""
+        path = os.path.join(self._step_dir(step, partition), "manifest.json")
+        with open(path, "rb") as f:
+            return hashlib.sha256(f.read()).hexdigest()
+
+    def save_delta(self, step: int, tree: Any, *, base_step: int,
+                   partition: Optional[int] = None,
+                   extra: Optional[dict] = None):
+        """Atomically write ``tree`` as a DELTA against the committed
+        checkpoint at ``base_step``: per-leaf sparse ROW diffs (indices +
+        changed rows along the leading axis) instead of full arrays.
+
+        The timeseries idiom: timestep t's state differs from t-1's mostly
+        in the rows training actually moved, so the delta is small; leaves
+        whose shape/dtype changed (or whose diff is dense enough that the
+        row encoding would not win) fall back to a full per-leaf copy —
+        ``restore_delta`` round-trips EXACTLY either way, including int8
+        cold-quantized fields (bit-compared like any other dtype).
+
+        The delta manifest records ``base_step`` plus the sha256 of the
+        base's manifest.json; ``restore_delta`` refuses to apply a delta
+        whose base is missing or was replaced.  Deltas may CHAIN (the base
+        may itself be a delta).  Retention is the caller's concern: this
+        method never prunes, and a manager holding a delta chain should be
+        built with ``keep=0`` so ``save`` cannot prune a base away.
+
+        Raises ValueError when the base is missing/incomplete or the tree
+        structure does not match the base's.
+        """
+        base_dir = self._step_dir(base_step, partition)
+        if not os.path.exists(os.path.join(base_dir, "_COMPLETE")):
+            raise ValueError(
+                f"save_delta(step={step}): base checkpoint step "
+                f"{base_step} is missing or incomplete under {self.root} — "
+                f"a delta needs its base committed first")
+        with open(os.path.join(base_dir, "manifest.json")) as f:
+            base_manifest = json.load(f)
+        leaves, treedef = _flatten_with_paths(tree)
+        if len(leaves) != base_manifest["n_leaves"] \
+                or str(treedef) != base_manifest["treedef"]:
+            raise ValueError(
+                f"save_delta(step={step}): tree structure does not match "
+                f"base step {base_step} ({len(leaves)} leaves vs "
+                f"{base_manifest['n_leaves']}) — delta checkpoints diff "
+                f"like against like")
+
+        final = self._step_dir(step, partition)
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp, exist_ok=True)
+        manifest = {
+            "step": step,
+            "time": time.time(),
+            "treedef": str(treedef),
+            "n_leaves": len(leaves),
+            "extra": extra or {},
+            "delta": {
+                "base_step": base_step,
+                "base_digest": self._manifest_digest(base_step, partition),
+            },
+            "leaves": [],
+        }
+        # materialize the base leaves THROUGH its own chain (the base may
+        # itself be a delta, whose dir holds only idx/rows files)
+        base_arrs, _ = self._resolve_leaves(base_step, partition)
+        for i, leaf in enumerate(leaves):
+            arr = np.asarray(jax.device_get(leaf))
+            base_arr = base_arrs[i]
+            meta = {"shape": list(arr.shape), "dtype": str(arr.dtype)}
+            rows = None
+            if base_arr is not None and arr.shape == base_arr.shape \
+                    and arr.dtype == base_arr.dtype and arr.ndim >= 1:
+                # NaN-conservative: a NaN row always compares unequal, so
+                # it is re-saved — exactness beats a smaller diff
+                changed = (arr != base_arr).reshape(arr.shape[0], -1).any(1)
+                idx = np.flatnonzero(changed)
+                rows = arr[idx]
+                if idx.nbytes + rows.nbytes >= arr.nbytes:
+                    rows = None           # dense diff: full copy is smaller
+            if rows is None:
+                np.save(os.path.join(tmp, f"arr_{i:06d}.npy"), arr)
+                meta["delta"] = "full"
+            else:
+                np.save(os.path.join(tmp, f"idx_{i:06d}.npy"), idx)
+                np.save(os.path.join(tmp, f"rows_{i:06d}.npy"), rows)
+                meta["delta"] = "rows"
+                meta["n_rows"] = int(idx.size)
+            manifest["leaves"].append(meta)
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        with open(os.path.join(tmp, "_COMPLETE"), "w") as f:
+            f.write("ok")
+        os.makedirs(os.path.dirname(final) or ".", exist_ok=True)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        return final
+
+    def _resolve_leaves(self, step: int, partition: Optional[int] = None):
+        """-> (host numpy leaf list, manifest), resolving delta chains
+        recursively; no template needed (shapes come from the manifests)."""
+        d = self._step_dir(step, partition)
+        if not os.path.exists(os.path.join(d, "_COMPLETE")):
+            raise ValueError(
+                f"checkpoint step {step} is missing or incomplete under "
+                f"{self.root}" + ("" if partition is None
+                                  else f" (partition {partition})"))
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        n = manifest["n_leaves"]
+        if "delta" not in manifest:
+            return [np.load(os.path.join(d, f"arr_{i:06d}.npy"))
+                    for i in range(n)], manifest
+
+        info = manifest["delta"]
+        base_step = info["base_step"]
+        base_dir = self._step_dir(base_step, partition)
+        if not os.path.exists(os.path.join(base_dir, "_COMPLETE")):
+            raise ValueError(
+                f"delta checkpoint step {step} needs base step "
+                f"{base_step}, but {base_dir} is missing or incomplete "
+                f"— the delta chain must be retained (build the "
+                f"manager with keep=0 for timeseries lineage)")
+        digest = self._manifest_digest(base_step, partition)
+        if digest != info["base_digest"]:
+            raise ValueError(
+                f"delta checkpoint step {step} was diffed against a "
+                f"DIFFERENT base: step {base_step}'s manifest digest "
+                f"{digest[:12]}... != recorded "
+                f"{info['base_digest'][:12]}... — the base was "
+                f"overwritten or replaced; refusing to apply the delta")
+        arrs, _ = self._resolve_leaves(base_step, partition)
+        for i, meta in enumerate(manifest["leaves"]):
+            if meta["delta"] == "full":
+                arrs[i] = np.load(os.path.join(d, f"arr_{i:06d}.npy"))
+            else:
+                arr = np.array(arrs[i])          # writable copy of the base
+                idx = np.load(os.path.join(d, f"idx_{i:06d}.npy"))
+                if idx.size:
+                    arr[idx] = np.load(os.path.join(d, f"rows_{i:06d}.npy"))
+                arrs[i] = arr
+        return arrs, manifest
+
+    def _load_leaves(self, step: int, like: Any,
+                     partition: Optional[int] = None):
+        """``_resolve_leaves`` + structure/shape checks against ``like``."""
+        arrs, manifest = self._resolve_leaves(step, partition)
+        leaves, treedef = _flatten_with_paths(like)
+        assert len(leaves) == manifest["n_leaves"], (
+            f"leaf count mismatch: have {len(leaves)}, "
+            f"checkpoint {manifest['n_leaves']}")
+        for i, (ref, arr) in enumerate(zip(leaves, arrs)):
+            want = tuple(ref.shape) if hasattr(ref, "shape") else None
+            assert want is None or want == arr.shape, (
+                f"leaf {i}: shape {arr.shape} != expected {want}")
+        return arrs, treedef, manifest
+
+    def restore_delta(self, step: int, like: Any, *,
+                      partition: Optional[int] = None, shardings: Any = None):
+        """Restore the checkpoint at ``step``, applying its delta chain:
+        full checkpoints load directly, deltas load their base (itself
+        possibly a delta) and overwrite the recorded rows — the result is
+        bit-identical to the tree ``save_delta`` was given.  Returns
+        ``(tree, extra)`` like ``restore``.  Loud ValueError when any base
+        in the chain is missing, incomplete or no longer the manifest the
+        delta was diffed against."""
+        arrs, treedef, manifest = self._load_leaves(step, like, partition)
         out = jax.tree.unflatten(treedef, arrs)
         if shardings is not None:
             out = jax.tree.map(

@@ -3,6 +3,9 @@ regressions AND on unbaselined benchmarks (with --allow-new as the
 explicit escape hatch), and tools/check_cov.py enforces the core/ line
 coverage floor from a coverage.xml report.  Run as subprocesses — the
 tools are argv -> exit-code programs and that interface is the contract.
+tools/bench_trajectory.py (the cross-commit perf history appender) and
+launch/profile_cell.py --gs-train (per-instruction attribution of the
+production GS train step) are pinned the same way.
 """
 
 import json
@@ -10,7 +13,10 @@ import os
 import subprocess
 import sys
 
+import pytest
+
 ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+SRC = os.path.join(ROOT, "src")
 
 
 def _summary(entries, mode="smoke"):
@@ -144,3 +150,73 @@ def test_check_cov_fails_when_scope_has_no_files(tmp_path):
                      "--scope", "src/repro/nonexistent/")
     assert out.returncode == 1
     assert "no files" in out.stdout.lower()
+
+
+# ---------------------------------------------------------------------------
+# tools/bench_trajectory.py: append-only perf history
+# ---------------------------------------------------------------------------
+
+
+def _bench_trajectory(*args, cwd):
+    return subprocess.run(
+        [sys.executable, os.path.join(ROOT, "tools", "bench_trajectory.py"),
+         *args], capture_output=True, text=True, timeout=60, cwd=cwd)
+
+
+def test_bench_trajectory_appends_and_trims(tmp_path):
+    bench = _write(tmp_path, "bench.json", _summary([("a", 1.0), ("b", 2.0)]))
+    traj = str(tmp_path / "traj.json")
+    # first append CREATES the trajectory
+    out = _bench_trajectory("--bench", bench, "--trajectory", traj,
+                            "--label", "run-one", cwd=str(tmp_path))
+    assert out.returncode == 0, (out.stdout, out.stderr)
+    data = json.load(open(traj))
+    assert data["schema"] == 1 and len(data["runs"]) == 1
+    assert data["runs"][0]["meta"]["label"] == "run-one"
+    assert [e["name"] for e in data["runs"][0]["entries"]] == ["a", "b"]
+    # appends grow; --max-runs trims OLDEST first
+    for i in range(3):
+        _bench_trajectory("--bench", bench, "--trajectory", traj,
+                          "--label", f"run-{i + 2}", "--max-runs", "3",
+                          cwd=str(tmp_path))
+    data = json.load(open(traj))
+    assert [r["meta"]["label"] for r in data["runs"]] \
+        == ["run-2", "run-3", "run-4"]
+
+
+def test_bench_trajectory_rejects_malformed_inputs(tmp_path):
+    good = _write(tmp_path, "bench.json", _summary([("a", 1.0)]))
+    bad_bench = _write(tmp_path, "bad_bench.json", {"entries": []})
+    out = _bench_trajectory("--bench", bad_bench, cwd=str(tmp_path))
+    assert out.returncode != 0
+    assert "not a schema-1 benchmark summary" in out.stderr
+
+    bad_traj = _write(tmp_path, "bad_traj.json", {"schema": 1, "runs": "x"})
+    out = _bench_trajectory("--bench", good, "--trajectory", bad_traj,
+                            cwd=str(tmp_path))
+    assert out.returncode != 0
+    assert "not a schema-1 benchmark trajectory" in out.stderr
+
+
+# ---------------------------------------------------------------------------
+# launch/profile_cell.py --gs-train: attribution of the production GS step
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_profile_cell_gs_train_smoke():
+    """``--gs-train`` lowers the tiered make_gs_train_step on the real
+    ("part", "view") mesh and attributes its HLO — argv -> exit code 0
+    with the per-device total line (the timeseries per-timestep profiling
+    entry point, run here on 4 forced host devices)."""
+    env = dict(os.environ, REPRO_DRYRUN_DEVICES="4")
+    env["PYTHONPATH"] = SRC + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.profile_cell",
+         "--gs-train", "sphere_shell", "--gs-res", "32", "--top", "5"],
+        capture_output=True, text=True, timeout=900, env=env)
+    assert out.returncode == 0, (out.stdout[-2000:], out.stderr[-3000:])
+    assert "gs-train-sphere_shell" in out.stdout
+    assert "part,view" in out.stdout
+    assert "GB per device" in out.stdout

@@ -1,0 +1,80 @@
+"""Append a benchmark run summary to the committed trajectory file.
+
+    python tools/bench_trajectory.py --bench BENCH_SMOKE.json \
+        [--trajectory BENCH_TRAJECTORY.json] [--label "..."] [--max-runs 200]
+
+``BENCH_TRAJECTORY.json`` is the perf history the single-run gate
+(tools/check_bench.py) cannot give: one appended record per bench-job run
+— ``{"schema": 1, "runs": [{"mode", "meta", "entries"}, ...]}`` — where
+``entries`` is the run's schema-1 summary (benchmarks/run.py --json) and
+``meta`` records provenance (git sha / CI run id from the GITHUB_* env
+when present, plus an optional --label).  The committed file is the base
+history; CI appends its fresh run and uploads the grown file as an
+artifact, so slow drifts that stay under the 2x single-run gate are still
+visible across commits.  Oldest runs are trimmed past --max-runs.
+
+Exit code is the contract (tests/test_tools.py style): 0 on append,
+nonzero on a malformed summary or trajectory.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def _load_summary(path):
+    with open(path) as f:
+        data = json.load(f)
+    if data.get("schema") != 1 or "entries" not in data:
+        raise SystemExit(f"{path}: not a schema-1 benchmark summary")
+    return data
+
+
+def _load_trajectory(path):
+    if not os.path.exists(path):
+        return {"schema": 1, "runs": []}
+    with open(path) as f:
+        data = json.load(f)
+    if data.get("schema") != 1 or not isinstance(data.get("runs"), list):
+        raise SystemExit(f"{path}: not a schema-1 benchmark trajectory "
+                         f"(expected {{'schema': 1, 'runs': [...]}})")
+    return data
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bench", default="BENCH_SMOKE.json",
+                    help="summary produced by benchmarks.run --json")
+    ap.add_argument("--trajectory", default="BENCH_TRAJECTORY.json",
+                    help="trajectory file to append to (created if missing)")
+    ap.add_argument("--label", default="",
+                    help="free-form provenance note for this run")
+    ap.add_argument("--max-runs", type=int, default=200,
+                    help="keep only the newest N runs")
+    args = ap.parse_args(argv)
+
+    bench = _load_summary(args.bench)
+    traj = _load_trajectory(args.trajectory)
+    meta = {k: os.environ[e] for k, e in
+            (("sha", "GITHUB_SHA"), ("run_id", "GITHUB_RUN_ID"),
+             ("ref", "GITHUB_REF_NAME")) if os.environ.get(e)}
+    if args.label:
+        meta["label"] = args.label
+    traj["runs"].append({"mode": bench.get("mode"), "meta": meta,
+                         "entries": bench["entries"]})
+    if args.max_runs > 0:
+        traj["runs"] = traj["runs"][-args.max_runs:]
+    with open(args.trajectory, "w") as f:
+        json.dump(traj, f, indent=1)
+        f.write("\n")
+    names = [e["name"] for e in bench["entries"]]
+    print(f"[bench_trajectory] appended run #{len(traj['runs'])} "
+          f"({len(names)} entries: {', '.join(names)}) -> "
+          f"{args.trajectory}")
+
+
+if __name__ == "__main__":
+    sys.exit(main())
