@@ -162,7 +162,7 @@ def run(*, reps: int = 3, quick: bool = False, gate_floor: float = 1.0):
         ]
         train_cfg = dict(n_points=48000, res=512, steps=2)
 
-    print(f"\n[assign] dense O(T*N) sweep vs sorted O(N*B log) scatter, "
+    print("\n[assign] dense O(T*N) sweep vs sorted O(N*B log) scatter, "
           f"K={K}, reps={reps}")
     results = {"K": K, "reps": reps, "configs": {}}
     for name, c in configs:

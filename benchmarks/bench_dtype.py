@@ -187,15 +187,15 @@ def run(*, res: int = 128, n_local: int = 512, views: int = 4,
     r = json.loads(proc.stdout.rstrip().rsplit("RESULT ", 1)[1])
 
     mb = 1.0 / (1024 * 1024)
-    print(f"  gathered-table payload: f32 "
+    print("  gathered-table payload: f32 "
           f"{r['payload_bytes_f32'] * mb:7.2f} MiB  bf16 "
           f"{r['payload_bytes_bf16'] * mb:7.2f} MiB  "
           f"({r['payload_ratio']:.0f}x smaller — every wire lane halves)")
     print(f"  train step: f32 {r['t_step_f32_s'] * 1e3:8.2f} ms  bf16 "
           f"{r['t_step_bf16_s'] * 1e3:8.2f} ms  (host-device collectives "
-          f"are memcpy-emulated — payload is the headline)")
+          "are memcpy-emulated — payload is the headline)")
     print(f"  loss gap f32 vs bf16: {r['loss_rel_gap']:.2e} relative "
-          f"(parity asserted in-process before timing)")
+          "(parity asserted in-process before timing)")
     print(f"  merged checkpoint: f32 {r['ckpt_bytes_f32'] * mb:6.2f} MiB  "
           f"int8-cold {r['ckpt_bytes_int8'] * mb:6.2f} MiB  "
           f"({r['ckpt_reduction']:.2f}x smaller)")

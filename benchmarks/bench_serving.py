@@ -117,7 +117,7 @@ def run(*, res: int = 128, n_points: int = 12000, K: int = 64,
         raise SystemExit(
             f"[serving] GATE: warm/cold {ratio_at_gate:.2f}x at "
             f"V={max(batches)} under the {gate_floor:.2f}x floor — the "
-            f"cache stopped deleting the assignment phase")
+            "cache stopped deleting the assignment phase")
     return results
 
 

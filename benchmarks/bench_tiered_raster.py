@@ -45,7 +45,6 @@ from repro.core.render import _tiered_tiles, render
 from repro.core.tiling import (TileGrid, assign_tiles, auto_tier_caps,
                                gather_features_at, splat_features,
                                tile_occupancy, tile_origins)
-from repro.data.isosurface import point_cloud_for
 from repro.kernels import rasterize_tiles
 
 
@@ -178,7 +177,7 @@ def run(*, res: int = 256, n_points: int = 20000, reps: int = 3,
     save_result("tiered_raster", results)
     if not ok:
         raise SystemExit(
-            f"tiered_raster acceptance FAILED: dense ratio "
+            "tiered_raster acceptance FAILED: dense ratio "
             f"{results['dense']['speedup']:.2f}x (floor "
             f"{1.0/dense_slack:.2f}x), truncation {e_tier:.2e} vs "
             f"{e_dense:.2e}")

@@ -43,8 +43,7 @@ from repro.core.cameras import orbital_rig
 from repro.core.distributed import fit_partitions
 from repro.core.pipeline import build_scene, prepare_timestep
 from repro.core.tiling import TileGrid
-from repro.core.train import GSTrainCfg, init_opt
-from repro.data.isosurface import point_cloud_for
+from repro.core.train import GSTrainCfg
 
 
 def _fit(td, cams, grid, cfg, mesh, *, steps, key, warm=None,
@@ -152,7 +151,7 @@ def run(*, steps: int = 24, res: int = 32, n_views: int = 4,
             f"densify_cap={cap} — the cap no longer bounds memory")
     if len(set(live_capped)) != 1:
         raise SystemExit(
-            f"[timeseries] GATE: capped live count drifted across "
+            "[timeseries] GATE: capped live count drifted across "
             f"timesteps ({live_capped}) — expected flat at the cap")
     return results
 

@@ -10,11 +10,8 @@ clearly labelled as such.
 
 from __future__ import annotations
 
-import dataclasses
 import json
 import os
-import time
-from typing import Optional
 
 import numpy as np
 

@@ -54,7 +54,7 @@ def run(dataset="kingsnake", parts=4, steps=150, resolution=64, views=12,
     db = rows["full"]["boundary_psnr"] - rows["none"]["boundary_psnr"]
     print(f"-> ghosts+masks vs neither: {d:+.2f} dB global, {db:+.2f} dB on "
           f"boundary pixels ({100*rows['full']['boundary_frac']:.1f}% of "
-          f"image — where Fig. 2's gaps/streaks live)")
+          "image — where Fig. 2's gaps/streaks live)")
     save_result("quality_ablation", dict(dataset=dataset, parts=parts,
                                          steps=steps, resolution=resolution,
                                          rows=rows))

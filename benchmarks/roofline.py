@@ -124,7 +124,7 @@ def summarize(dir: str = "experiments/dryrun", *, full_notes=True,
     for c in gs_multi:
         lines.append(f"  {c['arch']}: pod-spanning collective bytes = "
                      f"{c['hlo']['pod_spanning_bytes']:.0f} "
-                     f"(paper independence: scalar loss metric only)")
+                     "(paper independence: scalar loss metric only)")
     if out_json:
         with open(out_json, "w") as f:
             json.dump({"single": single, "multi": multi}, f, indent=1)

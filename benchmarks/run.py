@@ -120,7 +120,7 @@ def main():
 
     if args.smoke:
         print(f"\n[benchmarks] smoke tier done in {time.time()-t0:.0f}s; "
-              f"JSON under experiments/benchmarks/")
+              "JSON under experiments/benchmarks/")
         dump()
         return
 
@@ -143,7 +143,7 @@ def main():
 
     print("\n" + "=" * 78)
     print(f"[benchmarks] done in {(time.time()-t0)/60:.1f} min; JSON under "
-          f"experiments/benchmarks/")
+          "experiments/benchmarks/")
     dump()
 
 

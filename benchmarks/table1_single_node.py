@@ -16,18 +16,16 @@ from __future__ import annotations
 import argparse
 import time
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import fmt_minutes, save_result
 from repro.configs.gs_datasets import get_gs_dataset
-from repro.core.cameras import orbital_rig, select
+from repro.core.cameras import orbital_rig
 from repro.core.gaussians import from_points
 from repro.core.pipeline import build_scene, gt_gaussians, render_views
 from repro.core.tiling import TileGrid
 from repro.core.train import GSTrainCfg, fit_partition
-from repro.data.isosurface import point_cloud_for
 
 
 def measure_step_time(points, colors, extent, res, *, steps, K=32,
@@ -86,7 +84,7 @@ def run(datasets=("kingsnake", "rayleigh_taylor"), resolutions=(48, 64),
     print(f"[table1] work model: t/step = {coef[0]:.2e}*N + "
           f"{coef[1]:.2e}*pix + {coef[2]:.2e}")
     print(f"[table1] extrapolated minutes to {step_budget} steps at paper "
-          f"scale (labelled extrapolation):")
+          "scale (labelled extrapolation):")
     for ds_name, n_paper in (("kingsnake", 4e6), ("rayleigh_taylor", 18.2e6)):
         for res in (1024, 2048):
             for g in gpus:

@@ -26,7 +26,6 @@ import os
 import re
 import subprocess
 import sys
-import time
 
 from benchmarks.common import fmt_minutes, parallel_time, save_result
 from repro.core.pipeline import PipelineCfg, run_pipeline
@@ -125,7 +124,7 @@ def run_mesh_sweep(shapes, *, n=4096, res=64, views=4, steps=5):
             continue
         out[(p, v)] = float(m.group(1))
     if out:
-        print(f"\n[table4] mesh-shape sweep — tiered ('part', 'view') step "
+        print("\n[table4] mesh-shape sweep — tiered ('part', 'view') step "
               f"({n} splats, {views} views @ {res}^2, host CPU devices)")
         print(f"{'mesh':>8s} {'devices':>8s} {'step_ms':>9s}")
         for (p, v), ms in out.items():
@@ -155,7 +154,7 @@ def run(datasets=("rayleigh_taylor", "richtmyer_meshkov"),
                 psnr=res.psnr, ssim=res.ssim,
                 n_gaussians=res.n_gaussians)
 
-    print(f"\n[table4] multi-node scaling — wall = max over partitions "
+    print("\n[table4] multi-node scaling — wall = max over partitions "
           f"({steps} steps @ {resolution}^2, CPU tier; paper Table IV)")
     print(f"{'dataset':20s} {'nodes':>5s} {'wall':>9s} {'speedup':>8s} "
           f"{'PSNR':>7s} {'SSIM':>7s}")

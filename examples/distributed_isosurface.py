@@ -13,7 +13,6 @@ Fig. 2 comparison is visible in numbers.  Checkpoints land per partition
 
 import argparse
 
-import numpy as np
 
 from repro.core.pipeline import PipelineCfg, run_pipeline
 from repro.core.train import GSTrainCfg
@@ -45,7 +44,7 @@ def main():
 
     kt = train_cfg.resolved_k_tiers()
     raster = (f"tiered k_tiers={kt} (TierSchedule re-probes caps per "
-              f"densify)" if kt else f"dense K={train_cfg.assign_K}")
+              "densify)" if kt else f"dense K={train_cfg.assign_K}")
     print(f"[pipeline] {args.dataset}: {args.parts} partitions, "
           f"{args.steps} steps @ {args.resolution}^2, {args.views} views, "
           f"rasterizer: {raster}")
@@ -53,7 +52,7 @@ def main():
     print(f"[pipeline] ghosts+masks:  PSNR {ours.psnr:6.2f}  "
           f"SSIM {ours.ssim:.4f}  grad_sim {ours.grad_sim:.4f}  "
           f"splats {ours.n_gaussians:,}")
-    print(f"[pipeline] per-partition train seconds: "
+    print("[pipeline] per-partition train seconds: "
           f"{[round(t, 1) for t in ours.train_seconds]}")
 
     ckpt = CheckpointManager(args.ckpt_dir, keep=1)
@@ -68,7 +67,7 @@ def main():
         print(f"[pipeline] ablated (no GC/mask): PSNR {broken.psnr:6.2f}  "
               f"SSIM {broken.ssim:.4f}   <- Fig. 2b artifacts")
         print(f"[pipeline] delta: +{ours.psnr - broken.psnr:.2f} dB PSNR "
-              f"from ghost cells + background masks")
+              "from ghost cells + background masks")
 
 
 if __name__ == "__main__":

@@ -9,7 +9,6 @@ orbital ground-truth renders, and reports PSNR/SSIM of held-out views.
 
 import time
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

@@ -112,7 +112,7 @@ def _axes(mesh) -> MeshAxes:
     data = "part" if "part" in names else ("data" if "data" in names else None)
     if data is None:
         raise ValueError(
-            f"mesh must carry a gaussian axis named 'part' (or legacy "
+            "mesh must carry a gaussian axis named 'part' (or legacy "
             f"'data'); got axes {names}")
     ax = MeshAxes(pod="pod" if "pod" in names else None, data=data,
                   model="model" if "model" in names else None,
@@ -121,7 +121,7 @@ def _axes(mesh) -> MeshAxes:
     extra = [n for n in names if n not in known]
     if extra:
         raise ValueError(f"unknown mesh axes {extra}; expected a subset of "
-                         f"('pod', 'part'|'data', 'model', 'view')")
+                         "('pod', 'part'|'data', 'model', 'view')")
     return ax
 
 
@@ -321,24 +321,46 @@ def make_gs_forward(mesh, grid: TileGrid, *, K: int, impl: str = "auto",
 
     ``exchange=True`` swaps the table all-gather for the SPARSE-OVERLAP
     EXCHANGE (module docstring): the window is additionally split over the
-    gaussian axis into per-device sub-windows (the strip's tile count must
-    divide by that axis' size), each source packs only its splats whose
-    bboxes overlap each destination's sub-window into ``exchange_budget``
-    static slots per (src, dst) edge, and one ``lax.all_to_all`` over
-    "part" moves them.  ``exchange_budget=None`` defaults to the local
-    table size (always exact, payload == all_gather — pass a probed budget
-    from ``probe_gs_exchange`` for the sparse win); a starved budget drops
-    the overflowing splats from the receiver's table and FIRES the psum'd
+    gaussian axis into per-device sub-windows of ``ceil(Tl / n_part)``
+    tiles (a strip whose tile count does not divide pads the trailing
+    sub-windows with degenerate tiles that hit no splat and are masked out
+    of the loss — the padded step still matches the gather path's loss
+    exactly, because the masked partials never count pad pixels), each
+    source packs only its splats whose bboxes overlap each destination's
+    sub-window into static per-(src, dst)-edge slots, and the packed slabs
+    move over "part".  ``exchange_budget`` is either a scalar — every edge
+    gets the same slot count, moved via one uniform ``lax.all_to_all`` —
+    or an (n_part, n_part) int matrix ``B[src, dst]`` of per-edge budgets
+    (``ExchangeSchedule``/``probe_gs_exchange(per_edge=True)``), realized
+    as a RAGGED exchange: ``lax.all_to_all`` requires uniform chunks, so
+    the matrix is carried by a ppermute ladder — one shifted permute per
+    ring offset k, whose static slab height is the worst edge ON THAT
+    SHIFT (``max_src B[src, (src+k) % n]``) — and each source additionally
+    masks its slab past its OWN edge budget, so the per-edge cap is exact
+    and the per-device wire payload is ``sum_k max_src B[src, (src+k)%n]``
+    rows instead of ``n_part * max_edge``.  Received slabs are re-packed
+    src-major (traced offsets from the static per-shift sizes), keeping
+    the table an order-preserving subsequence of the all-gather table — so
+    the two-key (score, index) top-k still selects identical splats and
+    exchange==gather parity holds at float association whenever the
+    per-edge overflow counters are zero.  ``exchange_budget=None``
+    defaults to the local table size (always exact, payload == all_gather
+    — pass a probed budget for the sparse win); a starved edge drops its
+    overflowing splats from the receiver's table and FIRES the psum'd
     ``"exchange"`` overflow counter (see ``return_overflow``) — the output
     stays well-formed, and the ``fit_partitions`` driver grows the budget.
     Each device rasterizes (and pays loss partials for) only its own
     sub-window, so per-device rasterization work also drops by the
     gaussian-axis size relative to the gather path's redundant strips.
     Incompatible with ``strip_budget < 1.0`` (the prefilter is the gather
-    path's halfway optimization; exchange subsumes it).  With
-    ``return_tiles=True`` the tiles come back UNFLATTENED as
-    ([V,] P, T, 4, th, tw) — the flat (P*T,) layout of the gather path
-    would interleave sub-windows non-contiguously.
+    path's halfway optimization; exchange subsumes it — a loud,
+    deliberate validation, not a TODO).  With ``return_tiles=True`` the
+    tiles come back UNFLATTENED as ([V,] P, T, 4, th, tw) — the flat
+    (P*T,) layout of the gather path would interleave sub-windows
+    non-contiguously, so return_tiles DOES still require the strip tile
+    count to divide by the gaussian-axis size (pad sub-windows cannot
+    reassemble into the (P, T) tile layout; the loss-only path has no such
+    restriction).
 
     ``assign_impl`` selects the strip-local tile assignment: "auto" (the
     default — sort-based scatter on grids past the measured tile-count
@@ -432,18 +454,23 @@ def make_gs_forward(mesh, grid: TileGrid, *, K: int, impl: str = "auto",
     assert T % n_model == 0, (T, n_model)
     Tl = T // n_model
     n_data = sizes[data]
-    sub = Tl
+    sub, pad = Tl, 0
+    ex_budget_mat = None
     if exchange:
         if strip_budget < 1.0:
             raise ValueError(
-                f"exchange=True subsumes the strip prefilter; "
+                "exchange=True subsumes the strip prefilter; "
                 f"strip_budget must stay 1.0 (got {strip_budget})")
-        if Tl % n_data:
+        sub = -(-Tl // n_data)                  # ceil: pad, never refuse
+        pad = sub * n_data - Tl
+        if pad and return_tiles:
             raise ValueError(
-                f"exchange=True splits each {Tl}-tile window over the "
-                f"'{data}' axis (size {n_data}); the window tile count "
-                f"must divide by it")
-        sub = Tl // n_data
+                f"return_tiles with exchange=True needs the {Tl}-tile "
+                f"window to divide by the '{data}' axis (size {n_data}): "
+                "padded sub-windows cannot reassemble into the (P, T) "
+                "tile layout (the loss-only path pads instead)")
+        if exchange_budget is not None and np.ndim(exchange_budget) != 0:
+            ex_budget_mat = check_budget_matrix(exchange_budget, n_data)
     tile0 = _tile_axes(ax)
     if k_tiers is not None:
         k_tiers = tuple(int(k) for k in k_tiers)
@@ -481,10 +508,30 @@ def make_gs_forward(mesh, grid: TileGrid, *, K: int, impl: str = "auto",
     if return_tiles:
         out_specs += (tiles_spec,)
     if return_overflow:
-        out_specs += ({"tiles": P(), "assign": P(), "exchange": P()},)
+        ov_spec = {"tiles": P(), "assign": P(), "exchange": P()}
+        if ex_budget_mat is not None:
+            # per-edge telemetry (replicated (n, n) matrices): psum'd
+            # dropped-splat counts and the pmax'd in-step demand probe
+            ov_spec["exchange_edges"] = P()
+            ov_spec["exchange_demand"] = P()
+        out_specs += (ov_spec,)
     out_specs = out_specs if len(out_specs) > 1 else P()
 
     lo_full, hi_full = tile_bounds(grid)            # (T, 2) host constants
+    lo_pad = hi_pad = None
+    if exchange and pad:
+        # padded per-strip rect tables: each strip's Tl real tiles followed
+        # by `pad` degenerate rects (lo > hi) no circle can hit — pad slots
+        # assign nothing, rasterize to zeros and are loss-masked below
+        lo_np, hi_np = np.asarray(lo_full), np.asarray(hi_full)
+        lo_w = np.full((n_model * n_data * sub, 2), 1e9, np.float32)
+        hi_w = np.full((n_model * n_data * sub, 2), -1e9, np.float32)
+        for mi in range(n_model):
+            lo_w[mi * n_data * sub: mi * n_data * sub + Tl] = \
+                lo_np[mi * Tl: (mi + 1) * Tl]
+            hi_w[mi * n_data * sub: mi * n_data * sub + Tl] = \
+                hi_np[mi * Tl: (mi + 1) * Tl]
+        lo_pad, hi_pad = jnp.asarray(lo_w), jnp.asarray(hi_w)
     # all-gather axis: N sits one deeper when a view axis leads
     nax = 2 if views else 1
 
@@ -533,12 +580,12 @@ def make_gs_forward(mesh, grid: TileGrid, *, K: int, impl: str = "auto",
 
         if exchange:
             # ---- sparse-overlap exchange: pack only the splats whose
-            # bboxes overlap each destination's sub-window, move them via
-            # one all_to_all over "part" (module docstring).
+            # bboxes overlap each destination's sub-window (module
+            # docstring).  A scalar budget moves one uniform all_to_all;
+            # a per-edge budget matrix moves a ragged ppermute ladder.
             if views:
                 tabs_l = tuple(fold(x) for x in tabs_l)        # (R, Nl, C)
             Nl = tabs_l[0].shape[1]
-            E = min(exchange_budget, Nl) if exchange_budget else Nl
             # overlap geometry in f32 (promote is a no-op under "f32"):
             # the send-side bbox test must run the same arithmetic as the
             # receive-side assignment on the same rounded values
@@ -552,30 +599,110 @@ def make_gs_forward(mesh, grid: TileGrid, *, K: int, impl: str = "auto",
                 val_l = tabs_l[1][..., 2] > 0.5
             base = 0 if t0_strip is None else t0_strip
             t0_all = base + jnp.arange(n_data, dtype=jnp.int32) * sub
+            # t_end clips padded sub-windows at the strip's real tiles:
+            # pad slots pack (and count) nothing, partial windows never
+            # charge the next strip's rows against an edge budget
             hit = window_overlap_mask(mx_l, my_l, rad_l, val_l, grid,
-                                      t0=t0_all, n_local=sub)
+                                      t0=t0_all, n_local=sub,
+                                      t_end=(base + Tl) if pad else None)
             # hit (n_data, R, Nl): slab d = MY splats destined for the
             # device at part-index d.  Candidates past the edge budget are
             # counted, never silently dropped.
             counts = hit.sum(-1, dtype=jnp.int32)
-            exchange_ov_l = jnp.maximum(counts - E, 0).sum() \
-                .astype(jnp.int32)
-            slots = jax.vmap(jax.vmap(
-                lambda m: jnp.nonzero(m, size=E, fill_value=Nl)[0]))(hit)
+            if ex_budget_mat is None:
+                E = min(int(exchange_budget), Nl) if exchange_budget \
+                    else Nl
+                exchange_ov_l = jnp.maximum(counts - E, 0).sum() \
+                    .astype(jnp.int32)
+                slots = jax.vmap(jax.vmap(
+                    lambda m: jnp.nonzero(m, size=E, fill_value=Nl)[0]))(hit)
 
-            def exch(x):
-                sent = jax.vmap(lambda s: jax.vmap(
-                    lambda row, i: jnp.take(row, i, axis=0, mode="fill",
-                                            fill_value=0))(x, s))(slots)
-                got = lax.all_to_all(sent, data, 0, 0, tiled=True)
-                # got's axis 0 is the SOURCE part index: flattening it
-                # src-major keeps ascending local rows inside each source —
-                # an order-preserving subsequence of the all-gather table,
-                # so the two-key (score, index) top-k selects the identical
-                # splats whenever E covers.  Fill slots carry radius 0 /
-                # valid 0: dead to assignment and compositing.
-                return got.transpose(1, 0, 2, 3).reshape(
-                    (got.shape[1], n_data * E) + got.shape[3:])
+                def exch(x):
+                    sent = jax.vmap(lambda s: jax.vmap(
+                        lambda row, i: jnp.take(row, i, axis=0, mode="fill",
+                                                fill_value=0))(x, s))(slots)
+                    got = lax.all_to_all(sent, data, 0, 0, tiled=True)
+                    # got's axis 0 is the SOURCE part index: flattening it
+                    # src-major keeps ascending local rows inside each
+                    # source — an order-preserving subsequence of the
+                    # all-gather table, so the two-key (score, index) top-k
+                    # selects the identical splats whenever E covers.  Fill
+                    # slots carry radius 0 / valid 0: dead to assignment
+                    # and compositing.
+                    return got.transpose(1, 0, 2, 3).reshape(
+                        (got.shape[1], n_data * E) + got.shape[3:])
+            else:
+                # ---- ragged per-edge transport: all_to_all needs uniform
+                # chunks, so the (n, n) budget matrix rides a ppermute
+                # LADDER — ring shift k carries every (s -> (s+k) % n) edge
+                # at once in a slab sized by the worst edge on that shift;
+                # each source masks its slab past its own B[src, dst], so
+                # the per-edge cap is exact and the wire payload is
+                # sum_k E_shift[k] rows, not n * max(B).
+                Bm = np.minimum(ex_budget_mat, Nl).astype(np.int32)
+                ring = (np.arange(n_data) + np.arange(n_data)[:, None]) \
+                    % n_data                       # ring[k, s] = (s+k) % n
+                # overlap-aware window assignment: device i renders band
+                # tau[i], chosen so each brick's dominant band rides the
+                # free local shift (window_assignment docstring).  The
+                # (P, T) tile layout of return_tiles is band-ordered, so
+                # that path keeps the identity assignment.
+                tau_np = np.arange(n_data, dtype=np.int64) if return_tiles \
+                    else window_assignment(Bm)
+                tau_arr = jnp.asarray(tau_np, jnp.int32)
+                band = tau_np[ring]        # band[k, s]: dst band, shift k
+                E_shift = tuple(
+                    int(Bm[np.arange(n_data), band[k]].max())
+                    for k in range(n_data))
+                R_tot = int(sum(E_shift))
+                me = lax.axis_index(data)
+                b_row = jnp.take(jnp.asarray(Bm), me, axis=0)      # (n,)
+                exchange_ov_edges = jnp.maximum(
+                    counts - b_row[:, None], 0).sum(1).astype(jnp.int32)
+                exchange_ov_l = exchange_ov_edges.sum()
+                exchange_demand_l = counts.max(1).astype(jnp.int32)
+                slot_by_shift = []
+                for k in range(n_data):
+                    # rows for the BAND the shift-k destination renders
+                    hk = jnp.take(hit, jnp.take(tau_arr, (me + k) % n_data),
+                                  axis=0)                          # (R, Nl)
+                    sl = jax.vmap(
+                        lambda m, _E=E_shift[k]: jnp.nonzero(
+                            m, size=_E, fill_value=Nl)[0])(hk)
+                    # my own edge budget on this shift, B[me, tau[(me+k)
+                    # % n]]: slots past it become fill rows (counted above)
+                    cap = jnp.take(
+                        jnp.asarray(Bm[np.arange(n_data), band[k]]), me)
+                    slot_by_shift.append(
+                        jnp.where(jnp.arange(E_shift[k]) < cap, sl, Nl))
+                # receive side: shift k delivers src (me - k) % n; packing
+                # the slabs back in SRC order (exclusive cumsum of the
+                # static per-shift sizes, permuted to src order) keeps the
+                # table an order-preserving subsequence of the all-gather
+                # table — same two-key top-k parity as the uniform path
+                src_shift = (me - jnp.arange(n_data)) % n_data
+                sizes_by_src = jnp.take(
+                    jnp.asarray(E_shift, jnp.int32), src_shift)
+                offs = jnp.concatenate(
+                    [jnp.zeros((1,), jnp.int32),
+                     jnp.cumsum(sizes_by_src)[:-1].astype(jnp.int32)])
+
+                def exch(x):
+                    out = jnp.zeros((x.shape[0], R_tot) + x.shape[2:],
+                                    x.dtype)
+                    for k in range(n_data):
+                        sent = jax.vmap(
+                            lambda row, i: jnp.take(
+                                row, i, axis=0, mode="fill",
+                                fill_value=0))(x, slot_by_shift[k])
+                        got = sent if k == 0 else lax.ppermute(
+                            sent, data,
+                            perm=[(s, (s + k) % n_data)
+                                  for s in range(n_data)])
+                        off = jnp.take(offs, (me - k) % n_data)
+                        out = lax.dynamic_update_slice_in_dim(
+                            out, got, off, axis=1)
+                    return out
 
             tabs = tuple(exch(x) for x in tabs_l)
         else:
@@ -614,9 +741,22 @@ def make_gs_forward(mesh, grid: TileGrid, *, K: int, impl: str = "auto",
         # under exchange; without either axis the window is the whole grid
         if exchange:
             pi = lax.axis_index(data)
+            if ex_budget_mat is not None:
+                # window assignment: this device renders band tau[me] of
+                # its strip (loss partials psum across "part", so the loss
+                # is assignment-invariant; gt/mask slice the same band)
+                pi = jnp.take(tau_arr, pi)
             t0 = (0 if t0_strip is None else t0_strip) + pi * sub
-            lo = lax.dynamic_slice_in_dim(lo_full, t0, sub, 0)
-            hi = lax.dynamic_slice_in_dim(hi_full, t0, sub, 0)
+            if pad:
+                # slice the PADDED per-strip rect table (strip-major window
+                # index), so pad slots get degenerate rects no circle hits
+                mi = lax.axis_index(model) if model is not None else 0
+                w0 = (mi * n_data + pi) * sub
+                lo = lax.dynamic_slice_in_dim(lo_pad, w0, sub, 0)
+                hi = lax.dynamic_slice_in_dim(hi_pad, w0, sub, 0)
+            else:
+                lo = lax.dynamic_slice_in_dim(lo_full, t0, sub, 0)
+                hi = lax.dynamic_slice_in_dim(hi_full, t0, sub, 0)
         elif model is not None:
             t0 = t0_strip                    # strip's flat-tile offset
             lo = lax.dynamic_slice_in_dim(lo_full, t0, Tl, 0)
@@ -629,9 +769,16 @@ def make_gs_forward(mesh, grid: TileGrid, *, K: int, impl: str = "auto",
         if exchange:
             # gt/mask arrive replicated along "part" with the full strip's
             # tiles: slice MY sub-window out of each partition's block
+            # (zero-padding the strip's tile axis first when it does not
+            # divide — pad tiles carry mask=0, so the masked loss partials
+            # never count them and the loss equals the gather loss exactly)
             def subwin(x):
                 lead = 1 if views else 0
                 y = x.reshape(x.shape[:lead] + (-1, Tl) + x.shape[lead + 1:])
+                if pad:
+                    widths = [(0, 0)] * y.ndim
+                    widths[lead + 1] = (0, pad)
+                    y = jnp.pad(y, widths)
                 y = lax.dynamic_slice_in_dim(y, pi * sub, sub, lead + 1)
                 return y.reshape(x.shape[:lead] + (-1,) + x.shape[lead + 1:])
             gt = subwin(gt)
@@ -768,9 +915,29 @@ def make_gs_forward(mesh, grid: TileGrid, *, K: int, impl: str = "auto",
                 red = (lambda x: lax.psum(x, strip_axes)) if strip_axes \
                     else (lambda x: x)
                 all_axes = tuple(a for a in (pod, data, model, view) if a)
-                outs += ({"tiles": red(overflow_l),
+                ov_out = {"tiles": red(overflow_l),
                           "assign": red(assign_ov_l),
-                          "exchange": lax.psum(exchange_ov_l, all_axes)},)
+                          "exchange": lax.psum(exchange_ov_l, all_axes)}
+                if ex_budget_mat is not None:
+                    # per-edge matrices: each "part" device owns row `me`
+                    # (its send side); scatter into an (n, n) zeros and let
+                    # the collective assemble the disjoint rows.  edges =
+                    # total dropped per (src, dst) summed over replicas;
+                    # demand = the in-step probe, the max overlap any
+                    # (view, strip) replica saw on each edge.
+                    em = lax.dynamic_update_slice(
+                        jnp.zeros((n_data, n_data), jnp.int32),
+                        exchange_ov_edges[None, :], (me, 0))
+                    ov_out["exchange_edges"] = lax.psum(em, all_axes)
+                    dm = lax.dynamic_update_slice(
+                        jnp.zeros((n_data, n_data), jnp.int32),
+                        exchange_demand_l[None, :], (me, 0))
+                    dm = lax.psum(dm, data)
+                    rest_axes = tuple(a for a in (pod, model, view) if a)
+                    if rest_axes:
+                        dm = lax.pmax(dm, rest_axes)
+                    ov_out["exchange_demand"] = dm
+                outs += (ov_out,)
             return outs
         return loss
 
@@ -832,7 +999,7 @@ def make_gs_probe(mesh, grid: TileGrid, *, k_tiers, views: Optional[int] = None,
         raise ValueError(
             f"mesh has a 'view' axis of size {n_view} but views=None; pass "
             f"views=V (a multiple of {n_view}) to probe the view-sharded "
-            f"domain")
+            "domain")
     if views is not None and views % n_view:
         raise ValueError(f"views={views} must divide by the 'view' axis "
                          f"size {n_view}")
@@ -844,13 +1011,10 @@ def make_gs_probe(mesh, grid: TileGrid, *, k_tiers, views: Optional[int] = None,
     Tl = T // n_model
     n_data = sizes[data]
     sub = Tl
+    pad = 0
     if exchange:
-        if Tl % n_data:
-            raise ValueError(
-                f"exchange=True splits each {Tl}-tile window over the "
-                f"'{data}' axis (size {n_data}); the window tile count must "
-                f"divide by it")
-        sub = Tl // n_data
+        sub = -(-Tl // n_data)                  # ceil: pad, never refuse
+        pad = sub * n_data - Tl
     if assign_block is None:
         assign_block = max(1024, 4096 // vloc) if views else 4096
 
@@ -865,6 +1029,19 @@ def make_gs_probe(mesh, grid: TileGrid, *, k_tiers, views: Optional[int] = None,
                       fy=P(*vlead) if views else P(),
                       width=P(), height=P())
     lo_full, hi_full = tile_bounds(grid)
+    lo_pad = hi_pad = None
+    if exchange and pad:
+        # padded per-strip rect tables (as in make_gs_forward): pad slots
+        # get degenerate rects, so they bin zero occupancy
+        lo_np, hi_np = np.asarray(lo_full), np.asarray(hi_full)
+        lo_w = np.full((n_model * n_data * sub, 2), 1e9, np.float32)
+        hi_w = np.full((n_model * n_data * sub, 2), -1e9, np.float32)
+        for mi in range(n_model):
+            lo_w[mi * n_data * sub: mi * n_data * sub + Tl] = \
+                lo_np[mi * Tl: (mi + 1) * Tl]
+            hi_w[mi * n_data * sub: mi * n_data * sub + Tl] = \
+                hi_np[mi * Tl: (mi + 1) * Tl]
+        lo_pad, hi_pad = jnp.asarray(lo_w), jnp.asarray(hi_w)
     nax = 2 if views else 1
     reduce_axes = tuple(a for a in (pod, data, model, view) if a)
 
@@ -887,10 +1064,16 @@ def make_gs_probe(mesh, grid: TileGrid, *, k_tiers, views: Optional[int] = None,
         valid_g = radius_g > 0
 
         if exchange:
-            base = lax.axis_index(model) * Tl if model is not None else 0
-            t0 = base + lax.axis_index(data) * sub
-            lo = lax.dynamic_slice_in_dim(lo_full, t0, sub, 0)
-            hi = lax.dynamic_slice_in_dim(hi_full, t0, sub, 0)
+            mi = lax.axis_index(model) if model is not None else 0
+            pi = lax.axis_index(data)
+            t0 = mi * Tl + pi * sub
+            if pad:
+                w0 = (mi * n_data + pi) * sub
+                lo = lax.dynamic_slice_in_dim(lo_pad, w0, sub, 0)
+                hi = lax.dynamic_slice_in_dim(hi_pad, w0, sub, 0)
+            else:
+                lo = lax.dynamic_slice_in_dim(lo_full, t0, sub, 0)
+                hi = lax.dynamic_slice_in_dim(hi_full, t0, sub, 0)
         elif model is not None:
             mi = lax.axis_index(model)
             t0 = mi * Tl
@@ -927,13 +1110,14 @@ def folded_tile_count(mesh, grid: TileGrid, n_parts: int,
     ``Vl * Pl * Tl`` — the cap clamp / ``note_overflow`` ``n_tiles``
     argument (binning over a domain of this size provably cannot drop).
     ``exchange=True`` shrinks the window to the per-"part" sub-window,
-    ``Vl * Pl * (Tl // n_data)``, matching the sparse-exchange step."""
+    ``Vl * Pl * ceil(Tl / n_data)``, matching the sparse-exchange step
+    (which pads non-divisible strips)."""
     ax = _axes(mesh)
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
     vloc = views // sizes.get(ax.view, 1) if views else 1
     t_loc = grid.n_tiles // sizes.get(ax.model, 1)
     if exchange:
-        t_loc //= sizes[ax.data]
+        t_loc = -(-t_loc // sizes[ax.data])
     return vloc * (n_parts // sizes.get(ax.pod, 1)) * t_loc
 
 
@@ -990,49 +1174,178 @@ def probe_gs_schedule(sched: TierSchedule, mesh, grid: TileGrid,
 # ---------------------------------------------------------------------------
 
 
+def check_budget_matrix(budget, n_data: Optional[int] = None) -> np.ndarray:
+    """Validate a per-edge exchange budget matrix LOUDLY.
+
+    ``budget`` must be a square 2-D (n_part, n_part) array of edge budgets
+    ``B[src, dst] >= 1``; with ``n_data`` given it must match the mesh's
+    "part" axis size exactly (an undersized matrix would silently starve
+    the missing edges, an oversized one would address devices that do not
+    exist).  Returns the validated int64 numpy matrix.
+    """
+    B = np.asarray(budget)
+    if B.ndim != 2 or B.shape[0] != B.shape[1]:
+        raise ValueError(
+            "exchange budget matrix must be square (n_part, n_part); got "
+            f"shape {B.shape}")
+    if n_data is not None and B.shape[0] != n_data:
+        raise ValueError(
+            f"exchange budget matrix is {B.shape[0]}x{B.shape[1]} but the "
+            f"'part' axis has {n_data} devices — one row/column per device "
+            "is required (undersized/oversized matrices are refused, never "
+            "padded)")
+    if not np.issubdtype(B.dtype, np.integer):
+        if not np.all(B == np.floor(B)):
+            raise ValueError("exchange budget matrix entries must be "
+                             "integers")
+    B = B.astype(np.int64)
+    if (B < 1).any():
+        raise ValueError(
+            "exchange budget matrix entries must be >= 1 (every edge needs "
+            f"at least one slot); min entry is {int(B.min())}")
+    return B
+
+
+def window_assignment(budget) -> np.ndarray:
+    """Overlap-aware window assignment: which tile sub-window each "part"
+    device renders, chosen from the per-edge budget matrix.
+
+    The ragged ppermute ladder's wire cost is ``sum_k max_s B[s, tau[(s+k)
+    % n]]`` — the per-shift slab is sized by the worst edge it carries, and
+    shift 0 (each device keeping rows for its OWN window) is local, hence
+    free.  With spatially compact (Morton-sorted) partitions each brick's
+    overlap concentrates on a few screen bands, but the identity
+    brick->band assignment scatters those heavy edges across every ring
+    shift, so each slab pays a heavy max and the wire payload stops
+    shrinking with n_part.  This routine returns a permutation ``tau``
+    (``tau[i]`` = the band device ``i`` renders) that pulls each brick's
+    dominant band onto the free local shift and packs the residue tightly:
+    greedy dominant-band seeding (steepest brick first) refined by 2-opt
+    swaps on the exact ladder objective.  Deterministic, pure numpy, a few
+    ms at real part counts; the forward caches per budget matrix.
+    """
+    B = np.asarray(budget, np.int64)
+    n = B.shape[0]
+    if n <= 1:
+        return np.zeros((n,), np.int64)
+    shifts = [(np.arange(n) + k) % n for k in range(1, n)]
+
+    def cost(tau):
+        return sum(int(B[np.arange(n), tau[s]].max()) for s in shifts)
+
+    tau = -np.ones(n, np.int64)
+    used = np.zeros(n, bool)
+    for s in np.argsort(-B.max(1), kind="stable"):
+        d = int(np.argmax(np.where(used, -1, B[s])))
+        tau[s] = d
+        used[d] = True
+    best = cost(tau)
+    improved = True
+    while improved:
+        improved = False
+        for i in range(n):
+            for j in range(i + 1, n):
+                t2 = tau.copy()
+                t2[i], t2[j] = t2[j], t2[i]
+                w = cost(t2)
+                if w < best:
+                    best, tau, improved = w, t2, True
+    ident = np.arange(n, dtype=np.int64)
+    return tau if best < cost(ident) else ident
+
+
 class ExchangeSchedule:
     """Telemetry-driven per-(src, dst) edge budget for the sparse exchange.
 
     The exchange packs, per destination, the local splats overlapping that
-    destination's sub-window into ``budget`` static slots.  Like the tier
+    destination's sub-window into a static number of slots.  Like the tier
     caps, the budget is a STATIC shape fed from concrete telemetry and
     guarded by a psum'd overflow counter — the same probe/overflow honesty
-    contract:
+    contract.  ``budget`` is either one scalar edge budget (every edge
+    packs the same slot count — the legacy shape) or an (n_part, n_part)
+    int matrix ``B[src, dst]`` (per-edge: spatially distant shard pairs
+    get small budgets, neighbours get large ones — the shape that scales
+    with n_part; see ``probe_gs_exchange(per_edge=True)``):
 
       probe_budget(max_edge, n_local)   size the budget from the pmax'd
-          worst per-edge overlap count (``probe_gs_exchange``), scaled by
-          ``slack`` and rounded so nearby probes hash to the same jit entry;
-          clamped to ``n_local`` (a source can never send more splats than
-          it holds, so overflow is impossible at the clamp).
+          worst overlap count — a scalar (worst edge anywhere) or an
+          (n, n) demand matrix (worst per edge) — scaled by ``slack`` and
+          rounded so nearby probes hash to the same jit entry; clamped to
+          ``n_local`` (a source can never send more splats than it holds,
+          so overflow is impossible at the clamp).
       note_overflow(ov, n_local)        a step reported dropped splats: the
-          budget grows geometrically (clamped at ``n_local``).  Returns
-          True when it changed — rebuild the step.  Never silent
-          truncation: every dropped splat shows up in the counter first.
+          budget grows geometrically (clamped at ``n_local``).  With a
+          matrix budget and the step's psum'd per-edge counter matrix,
+          ONLY the starved edges grow — a congested neighbour edge never
+          inflates the whole table.  Returns True when it changed —
+          rebuild the step.  Never silent truncation: every dropped splat
+          shows up in the counter first.
+      ensure(demand, n_local)           grow (never shrink) the budget to
+          cover a demand measured IN-STEP (the forward's pmax'd
+          ``"exchange_demand"`` matrix) — the no-host-round-trip resize
+          ``fit_partitions`` uses after densify.
       state_dict / load_state           checkpointed via the manager's
           ``extra`` payload so a resumed run keeps its probed budget
-          instead of re-probing.
+          instead of re-probing (matrices ride as nested lists).
     """
 
     def __init__(self, *, slack: float = 1.5, round_to: int = 16,
-                 growth: float = 2.0, budget: Optional[int] = None):
+                 growth: float = 2.0, budget=None):
         self.slack = float(slack)
         self.round_to = int(round_to)
         self.growth = float(growth)
-        self.budget: Optional[int] = None if budget is None else int(budget)
+        self.budget = self._coerce(budget)
 
-    def probe_budget(self, max_edge, n_local: int) -> int:
-        """Size the edge budget from the pmax'd worst overlap count."""
-        b = int(np.ceil(max(int(max_edge), 1) * self.slack))
+    def _coerce(self, budget):
+        if budget is None:
+            return None
+        if np.ndim(budget) == 0:
+            return int(budget)
+        return check_budget_matrix(budget)
+
+    def _sized(self, demand, n_local: int) -> np.ndarray:
+        """slack -> round_to -> [1, n_local] clamp, elementwise."""
+        b = np.ceil(np.maximum(np.asarray(demand, np.int64), 1)
+                    * self.slack).astype(np.int64)
         b = -(-b // self.round_to) * self.round_to
-        self.budget = max(1, min(b, int(n_local)))
+        return np.clip(b, 1, int(n_local))
+
+    def probe_budget(self, max_edge, n_local: int):
+        """Size the edge budget from the pmax'd worst overlap count: a
+        scalar count -> scalar budget, an (n, n) per-edge demand matrix ->
+        per-edge budget matrix."""
+        if np.ndim(max_edge) == 2:
+            self.budget = check_budget_matrix(
+                self._sized(np.asarray(max_edge), n_local))
+            return self.budget
+        self.budget = int(self._sized(int(max_edge), n_local))
         return self.budget
 
     def note_overflow(self, overflow, n_local: int) -> bool:
         """React to a step's dropped-splat counter: grow the budget by
         ``growth`` (clamped at ``n_local``, where overflow is impossible).
-        Returns True when it changed — rebuild the step."""
-        ov = int(np.asarray(overflow).sum())
-        if ov <= 0 or self.budget is None:
+        With a matrix budget and a matching (n, n) counter, only the
+        starved edges grow.  Returns True when it changed — rebuild the
+        step."""
+        if self.budget is None:
+            return False
+        ov = np.asarray(overflow)
+        if np.ndim(self.budget) == 2:
+            B = np.asarray(self.budget)
+            starved = (ov > 0) if ov.shape == B.shape \
+                else np.full(B.shape, int(ov.sum()) > 0)
+            if not starved.any():
+                return False
+            grown = np.minimum(
+                int(n_local),
+                np.maximum(self.round_to,
+                           np.ceil(B * self.growth).astype(np.int64)))
+            new = np.where(starved, np.maximum(B, grown), B)
+            if (new == B).all():
+                return False
+            self.budget = new
+            return True
+        if int(ov.sum()) <= 0:
             return False
         grown = min(int(n_local),
                     max(self.round_to, int(np.ceil(self.budget
@@ -1042,20 +1355,57 @@ class ExchangeSchedule:
         self.budget = grown
         return True
 
+    def ensure(self, demand, n_local: int) -> bool:
+        """Grow (never shrink) the budget to cover ``demand`` splats per
+        edge — rounded to ``round_to``, clamped at ``n_local``.  This is
+        the in-step resize path: ``fit_partitions`` feeds it the running
+        max of the step's own pmax'd demand matrix (plus the densify
+        growth bound), so budget growth needs no host probe round-trip.
+        Returns True when the budget changed — rebuild the step."""
+        if self.budget is None:
+            return False
+        d = np.maximum(np.asarray(demand, np.int64), 1)
+        need = np.clip(-(-d // self.round_to) * self.round_to,
+                       1, int(n_local))
+        if np.ndim(self.budget) == 2:
+            need = check_budget_matrix(need, np.asarray(self.budget).shape[0])
+            new = np.maximum(np.asarray(self.budget), need)
+            if (new == np.asarray(self.budget)).all():
+                return False
+            self.budget = new
+            return True
+        new = max(int(self.budget), int(need))
+        if new == self.budget:
+            return False
+        self.budget = new
+        return True
+
+    def budget_key(self):
+        """Hashable snapshot of the budget (int or tuple-of-tuples) — the
+        jit/step-cache key for the static exchange shapes."""
+        if self.budget is None or np.ndim(self.budget) == 0:
+            return self.budget
+        return tuple(tuple(int(x) for x in row)
+                     for row in np.asarray(self.budget))
+
     def state_dict(self) -> dict:
         """JSON-able snapshot, stored under CheckpointManager extra
-        ["exchange"] by ``fit_partitions``."""
+        ["exchange"] by ``fit_partitions``.  A matrix budget serializes as
+        nested lists."""
+        b = self.budget
+        if b is not None and np.ndim(b) == 2:
+            b = [[int(x) for x in row] for row in np.asarray(b)]
         return {"slack": self.slack, "round_to": self.round_to,
-                "growth": self.growth, "budget": self.budget}
+                "growth": self.growth, "budget": b}
 
     def load_state(self, state: dict) -> "ExchangeSchedule":
         """Restore a snapshot IN PLACE (the checkpoint wins) — a resumed
-        run keeps its probed/grown budget without re-probing."""
+        run keeps its probed/grown budget without re-probing.  Matrix
+        budgets are validated loudly (``check_budget_matrix``)."""
         self.slack = float(state["slack"])
         self.round_to = int(state["round_to"])
         self.growth = float(state["growth"])
-        b = state["budget"]
-        self.budget = None if b is None else int(b)
+        self.budget = self._coerce(state["budget"])
         return self
 
     @classmethod
@@ -1064,22 +1414,33 @@ class ExchangeSchedule:
         return cls().load_state(state)
 
     def __repr__(self):
-        return (f"ExchangeSchedule(budget={self.budget}, "
+        b = self.budget
+        if b is not None and np.ndim(b) == 2:
+            B = np.asarray(b)
+            b = (f"{B.shape[0]}x{B.shape[1]}"
+                 f"[{int(B.min())}..{int(B.max())}]")
+        return (f"ExchangeSchedule(budget={b}, "
                 f"slack={self.slack}, round_to={self.round_to})")
 
 
 def make_gs_exchange_probe(mesh, grid: TileGrid, *,
-                           views: Optional[int] = None):
-    """(gaussians, cam) -> () int32: the mesh-wide WORST per-(src, dst)
-    overlap count — the telemetry ``ExchangeSchedule.probe_budget`` sizes
-    the edge budget from.
+                           views: Optional[int] = None,
+                           per_edge: bool = False):
+    """(gaussians, cam) -> exchange-overlap telemetry, REPLICATED — what
+    ``ExchangeSchedule.probe_budget`` sizes the edge budget(s) from.
 
     Each device projects its local splats and counts, per destination
     sub-window, how many overlap (``window_overlap_mask`` — the exchange's
-    exact packing predicate, so the count is the exact slot demand).  The
-    max over destinations is pmax'd over every mesh axis: all hosts agree
-    on the worst edge and land on the identical budget.  No collective
-    moves table data — the probe is cheaper than one gather step.
+    exact packing predicate, so the count is the exact slot demand).
+    ``per_edge=False`` returns the () int32 WORST count over every edge,
+    pmax'd over every mesh axis; ``per_edge=True`` returns the full
+    (n_part, n_part) int32 demand matrix — row ``s`` is what partition
+    ``s`` must send to each destination's sub-window, assembled by a psum
+    of disjoint rows over "part" and pmax'd over the remaining axes.
+    Either way all hosts agree on the result and land on the identical
+    budget.  No collective moves table data — the probe is cheaper than
+    one gather step.  A strip that does not divide by the "part" axis is
+    padded exactly like the forward (pad sub-windows count nothing).
     """
     ax = _axes(mesh)
     pod, data, model, view = ax
@@ -1092,15 +1453,12 @@ def make_gs_exchange_probe(mesh, grid: TileGrid, *,
                          f"size {n_view}")
     if views is None and n_view > 1:
         raise ValueError(f"mesh has a 'view' axis of size {n_view} but "
-                         f"views=None; pass views=V")
+                         "views=None; pass views=V")
     T = grid.n_tiles
     assert T % n_model == 0, (T, n_model)
     Tl = T // n_model
-    if Tl % n_data:
-        raise ValueError(
-            f"exchange splits each {Tl}-tile window over the '{data}' axis "
-            f"(size {n_data}); the window tile count must divide by it")
-    sub = Tl // n_data
+    sub = -(-Tl // n_data)                      # ceil: pad, never refuse
+    pad = sub * n_data - Tl
 
     g_spec = Gaussians(
         means=P(pod, data, None), log_scales=P(pod, data, None),
@@ -1130,8 +1488,18 @@ def make_gs_exchange_probe(mesh, grid: TileGrid, *,
         base = lax.axis_index(model) * Tl if model is not None else 0
         t0_all = base + jnp.arange(n_data, dtype=jnp.int32) * sub
         hit = window_overlap_mask(mx, my, rad, val, grid,
-                                  t0=t0_all, n_local=sub)
-        m = hit.sum(-1, dtype=jnp.int32).max()
+                                  t0=t0_all, n_local=sub,
+                                  t_end=(base + Tl) if pad else None)
+        counts = hit.sum(-1, dtype=jnp.int32)    # (n_data, R)
+        if per_edge:
+            row = counts.max(1)                  # my demand toward each dst
+            dm = lax.dynamic_update_slice(
+                jnp.zeros((n_data, n_data), jnp.int32),
+                row[None, :], (lax.axis_index(data), 0))
+            dm = lax.psum(dm, data)
+            rest_axes = tuple(a for a in (pod, model, view) if a)
+            return lax.pmax(dm, rest_axes) if rest_axes else dm
+        m = counts.max()
         return lax.pmax(m, reduce_axes) if reduce_axes else m
 
     return shard_map(shard_fn, mesh=mesh, in_specs=(g_spec, cam_spec),
@@ -1139,22 +1507,32 @@ def make_gs_exchange_probe(mesh, grid: TileGrid, *,
 
 
 @functools.lru_cache(maxsize=32)
-def _gs_exchange_probe_jit(mesh, grid: TileGrid, views: Optional[int]):
-    return jax.jit(make_gs_exchange_probe(mesh, grid, views=views))
+def _gs_exchange_probe_jit(mesh, grid: TileGrid, views: Optional[int],
+                           per_edge: bool = False):
+    return jax.jit(make_gs_exchange_probe(mesh, grid, views=views,
+                                          per_edge=per_edge))
 
 
 def probe_gs_exchange(esched: ExchangeSchedule, mesh, grid: TileGrid,
                       g: Gaussians, cam, *,
-                      views: Optional[int] = None) -> int:
+                      views: Optional[int] = None, per_edge: bool = False):
     """Probe ``esched`` against the mesh: measure the worst per-edge
     overlap over one or more view batches (max-merged host-side, like
-    ``probe_gs_schedule``) and size the edge budget.  Returns the new
-    budget — identical on every host (pmax'd telemetry)."""
+    ``probe_gs_schedule``) and size the edge budget.  ``per_edge=True``
+    probes the full (n_part, n_part) demand matrix and sizes a matrix
+    budget.  Returns the new budget — identical on every host (pmax'd /
+    psum'd-disjoint telemetry)."""
     cam_batches = [cam] if isinstance(cam, Camera) else list(cam)
-    probe_fn = _gs_exchange_probe_jit(mesh, grid, views)
-    mx = 0
-    for cb in cam_batches:
-        mx = max(mx, int(probe_fn(g, cb)))
+    probe_fn = _gs_exchange_probe_jit(mesh, grid, views, per_edge)
+    if per_edge:
+        mx = None
+        for cb in cam_batches:
+            got = np.asarray(probe_fn(g, cb))
+            mx = got if mx is None else np.maximum(mx, got)
+    else:
+        mx = 0
+        for cb in cam_batches:
+            mx = max(mx, int(probe_fn(g, cb)))
     ax = _axes(mesh)
     n_data = dict(zip(mesh.axis_names, mesh.devices.shape))[ax.data]
     n_local = g.means.shape[1] // n_data
@@ -1300,6 +1678,11 @@ def make_gs_train_step(mesh, cfg: GSTrainCfg, grid: TileGrid, extent: float,
 
     rep = NamedSharding(mesh, P())
     ov_sh = {"tiles": rep, "assign": rep, "exchange": rep}
+    if exchange and exchange_budget is not None \
+            and np.ndim(exchange_budget) == 2:
+        # matrix budgets add the per-edge counters (replicated matrices)
+        ov_sh["exchange_edges"] = rep
+        ov_sh["exchange_demand"] = rep
     if compress == "none":
         out_sh = (g_sh, opt_sh, rep) + ((ov_sh,) if return_overflow else ())
         return jax.jit(
@@ -1424,9 +1807,14 @@ def rebalance_partitions(g: Gaussians, opt: GSOptState, mesh, *,
     rasterizes more than its peers (the gather path is insensitive — every
     device holds the full table either way).  When the worst shard's live
     count exceeds ``threshold`` x the partition mean, live rows are dealt
-    round-robin across shards (a pure PERMUTATION of rows — capacities,
-    shapes and jit caches are untouched; no reshard, no recompile).
-    ``threshold=0.0`` forces the permutation unconditionally (tests).
+    in CONTIGUOUS near-equal blocks across shards (a pure PERMUTATION of
+    rows — capacities, shapes and jit caches are untouched; no reshard,
+    no recompile).  Contiguous dealing preserves the Morton row order the
+    overlap-aware partitioning established (partition.spatial_order):
+    each shard stays a compact spatial brick, which is what keeps the
+    probed per-edge exchange budgets small — a round-robin deal would
+    re-scramble every shard back to ~uniform overlap.  ``threshold=0.0``
+    forces the permutation unconditionally (tests).
 
     Optimizer rows (m/v/grad accumulators) travel with their splats, so
     training is equivalent up to row order: assignment top-k breaks ties by
@@ -1448,15 +1836,27 @@ def rebalance_partitions(g: Gaussians, opt: GSOptState, mesh, *,
     skew = shard_live.max(-1) / np.maximum(shard_live.mean(-1), 1.0)
     if float(skew.max()) <= threshold:
         return g, opt, False
-    # stable live-first order, dealt round-robin: row k of the live-first
-    # ordering lands on shard k % n_data — every shard gets within one of
-    # the same live count, and equal inputs produce the identical
-    # permutation on every host (numpy stable sort, no RNG)
-    k = np.arange(N)
-    dest = (k % n_data) * Nl + (k // n_data)
+    # stable live-first order, dealt in contiguous blocks: the live rows
+    # (which keep their Morton order) split into n_data near-equal chunks
+    # — chunk i fills the front of shard i, dead rows fill the leftover
+    # slots.  Every shard gets within one of the same live count, each
+    # chunk is a contiguous (spatially compact) run, and equal inputs
+    # produce the identical permutation on every host (numpy stable sort,
+    # no RNG).
     perm = np.empty((Pn, N), np.int64)
     for p in range(Pn):
-        perm[p, dest] = np.argsort(~active[p], kind="stable")
+        order = np.argsort(~active[p], kind="stable")
+        L = int(active[p].sum())
+        szs = np.full(n_data, L // n_data, np.int64)
+        szs[: L % n_data] += 1
+        starts = np.concatenate([[0], np.cumsum(szs)[:-1]])
+        dest = np.empty(N, np.int64)
+        for i in range(n_data):
+            dest[starts[i]: starts[i] + szs[i]] = i * Nl + np.arange(szs[i])
+        dest[L:] = np.concatenate(
+            [np.arange(i * Nl + szs[i], (i + 1) * Nl)
+             for i in range(n_data)])
+        perm[p, dest] = order
 
     def take(x):
         x = np.asarray(x)
@@ -1500,15 +1900,23 @@ def fit_partitions(g: Gaussians, cams: Camera, gts, masks, cfg: GSTrainCfg,
     densify event (vmapped over partitions inside jit) re-probes.
 
     Sparse exchange (``cfg.exchange=True``): the step swaps the table
-    all-gather for the budgeted all_to_all exchange.  The edge budget comes
-    from ``cfg.exchange_budget`` when set (pinned — never re-probed), else
-    from an ``ExchangeSchedule`` probed at init and after every densify /
-    rebalance; a starved budget surfaces in the psum'd ``"exchange"``
-    overflow counter and grows geometrically (bounded recompile) — never
-    silent truncation.  ``rebalance_every=R`` additionally checks per-shard
-    live-splat skew every R steps and deals live rows round-robin across
-    the "part" shards when it passes ``rebalance_threshold`` (see
-    ``rebalance_partitions``; works with or without exchange).
+    all-gather for the budgeted sparse exchange.  The budget comes from
+    ``cfg.exchange_budget`` when set (pinned — never re-probed), else from
+    an ``ExchangeSchedule`` probed PER EDGE at init (a full (n, n) demand
+    matrix whenever the "part" axis has more than one shard, so each
+    (src, dst) pair gets its own budget); a starved edge surfaces in the
+    psum'd ``"exchange_edges"`` counter and grows geometrically — only
+    that edge, bounded recompile, never silent truncation.  The step's
+    pmax'd ``"exchange_demand"`` matrix is the IN-STEP probe: the driver
+    keeps its running max and resizes budgets after densify via
+    ``ExchangeSchedule.ensure`` (demand + cfg.max_new upper-bounds the
+    post-densify overlap) with no host probe round-trip; only a rebalance
+    — which re-deals rows across shards — still re-probes on the host.
+    ``rebalance_every=R`` additionally checks per-shard live-splat skew
+    every R steps and deals live rows in contiguous Morton-preserving
+    blocks across the "part" shards when it passes
+    ``rebalance_threshold`` (see ``rebalance_partitions``; works with or
+    without exchange).
 
     Checkpoint/resume: with ``ckpt`` (a runtime.CheckpointManager) the
     driver restores the newest complete (g, opt) checkpoint, loads the
@@ -1548,6 +1956,8 @@ def fit_partitions(g: Gaussians, cams: Camera, gts, masks, cfg: GSTrainCfg,
     ex_pinned = cfg.exchange_budget is not None
     n_data = dict(zip(mesh.axis_names, mesh.devices.shape))[_axes(mesh).data]
     Nl = g.means.shape[1] // n_data
+    # per-edge budgets need a real "part" axis (a 1x1 matrix is a scalar)
+    ex_per_edge = cfg.exchange and not ex_pinned and n_data > 1
 
     gt_tiles, mask_tiles = _tile_view_batches(gts, masks, grid)
     g_sh, opt_sh, b_sh = gs_shardings(mesh, views=vb)
@@ -1635,6 +2045,12 @@ def fit_partitions(g: Gaussians, cams: Camera, gts, masks, cfg: GSTrainCfg,
     # both probes max-merge the telemetry so the static shapes cover the
     # worst probed minibatch of the step's exact folded domain
     n_probe = 2 if vb < 2 and V > 1 else 1
+    if cfg.exchange:
+        # per-edge budgets have no worst-edge slack to hide behind: an
+        # unprobed view whose overlap pattern differs can starve a single
+        # edge.  Probe a few more minibatches (still bounded) — the
+        # overflow counter + in-step demand remain the safety net.
+        n_probe = max(n_probe, min(-(-V // vb), 4))
     probe_cams = [
         jax.device_put(
             select(cams, jnp.asarray((b * vb + np.arange(vb)) % V)),
@@ -1653,7 +2069,8 @@ def fit_partitions(g: Gaussians, cams: Camera, gts, masks, cfg: GSTrainCfg,
         # pinned budgets (explicit cfg.exchange_budget / checkpoint-restored
         # state) are never re-probed — resume keeps its grown budget
         if ex is not None and not ex_pinned:
-            probe_gs_exchange(ex, mesh, grid, gg, probe_cams, views=vb)
+            probe_gs_exchange(ex, mesh, grid, gg, probe_cams, views=vb,
+                              per_edge=ex_per_edge)
 
     probe_assign(g_dev)
     if sched is not None and sched.tier_caps is None:
@@ -1661,7 +2078,8 @@ def fit_partitions(g: Gaussians, cams: Camera, gts, masks, cfg: GSTrainCfg,
         reprobe(g_dev)
     if ex is not None and ex.budget is None:
         # a resume restored the budget: no re-probe
-        probe_gs_exchange(ex, mesh, grid, g_dev, probe_cams, views=vb)
+        probe_gs_exchange(ex, mesh, grid, g_dev, probe_cams, views=vb,
+                          per_edge=ex_per_edge)
 
     opt_vax = GSOptState(m=0, v=0, step=None, grad_accum=0, grad_count=0)
     dcfg = dataclasses.replace(cfg, densify_cap=densify_cap) \
@@ -1671,11 +2089,12 @@ def fit_partitions(g: Gaussians, cams: Camera, gts, masks, cfg: GSTrainCfg,
         in_axes=(0, opt_vax, 0), out_axes=(0, opt_vax)))
 
     step_cache = {}
+    ex_demand = None        # running max of the step's in-step demand probe
 
     def get_step():
         spec = ((sched.k_tiers, sched.tier_caps) if sched else None,
                 assign["impl"], assign["budget"],
-                cfg.exchange, ex.budget if ex else None)
+                cfg.exchange, ex.budget_key() if ex else None)
         if spec not in step_cache:
             step_cache[spec] = make_gs_train_step(
                 mesh, cfg, grid, extent, impl=impl, views=vb,
@@ -1738,7 +2157,13 @@ def fit_partitions(g: Gaussians, cams: Camera, gts, masks, cfg: GSTrainCfg,
             assign["budget"] = grow_tile_budget(
                 assign["budget"] or DEFAULT_TILE_BUDGET, grid.n_tiles)
         if ex is not None:
-            ex.note_overflow(ov["exchange"], Nl)
+            # matrix budgets grow only the starved edges (per-edge psum'd
+            # counter); scalar budgets keep the total-count contract
+            ex.note_overflow(ov.get("exchange_edges", ov["exchange"]), Nl)
+            if "exchange_demand" in ov:
+                dm = np.asarray(ov["exchange_demand"])
+                ex_demand = dm if ex_demand is None \
+                    else np.maximum(ex_demand, dm)
         if densify_every and i >= densify_from \
                 and (i + 1) % densify_every == 0:
             ks = jax.random.split(key, 1 + Pn)
@@ -1753,7 +2178,14 @@ def fit_partitions(g: Gaussians, cams: Camera, gts, masks, cfg: GSTrainCfg,
             probe_assign(g_dev)  # splat sizes shifted: re-size the budget
             if sched is not None:
                 reprobe(g_dev)  # occupancy shifted: re-pick tiers/caps
-            reprobe_exchange(g_dev)  # overlap pattern shifted too
+            if ex is not None and not ex_pinned and ex_demand is not None:
+                # in-step resize, no host probe round-trip: densify clones
+                # at most cfg.max_new rows per partition, so the running
+                # per-edge demand + max_new upper-bounds the post-densify
+                # overlap on every edge
+                ex.ensure(ex_demand + cfg.max_new, Nl)
+            else:
+                reprobe_exchange(g_dev)  # overlap pattern shifted too
         if rebalance_every and (i + 1) % rebalance_every == 0:
             g_reb, opt_reb, moved = rebalance_partitions(
                 g_dev, opt_dev, mesh, threshold=rebalance_threshold)
@@ -1761,7 +2193,9 @@ def fit_partitions(g: Gaussians, cams: Camera, gts, masks, cfg: GSTrainCfg,
                 g_dev = jax.device_put(g_reb, g_sh)
                 opt_dev = jax.device_put(opt_reb, opt_sh)
                 reset_err()  # rows permuted across shards
-                # rows changed shards: per-edge overlap counts shifted
+                # rows moved to different shards: the demand history no
+                # longer describes any edge — drop it and host-probe once
+                ex_demand = None
                 reprobe_exchange(g_dev)
         if ckpt is not None and ckpt_every and (i + 1) % ckpt_every == 0 \
                 and (i + 1) < steps:

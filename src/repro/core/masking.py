@@ -9,7 +9,6 @@ streak artifact of Fig. 2b/4b.
 
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp

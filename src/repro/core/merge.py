@@ -9,9 +9,8 @@ the dedupe exact under clone/split.
 
 from __future__ import annotations
 
-from typing import List, Sequence
+from typing import Sequence
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

@@ -7,9 +7,7 @@ gradient-similarity proxy (``grad_sim``) where the paper reports LPIPS.
 
 from __future__ import annotations
 
-from functools import partial
 
-import jax
 import jax.numpy as jnp
 from jax import lax
 

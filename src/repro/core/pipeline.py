@@ -27,10 +27,10 @@ from repro.core import merge as merge_mod
 from repro.core import metrics
 from repro.core.cameras import Camera, orbital_rig, select
 from repro.core.gaussians import Gaussians, from_points
-from repro.core.masking import background_mask, dilate_mask
+from repro.core.masking import dilate_mask
 from repro.core.partition import PartitionData, partition_points
 from repro.core.render import (occupancy_probe_jit, render_batch,
-                              resolve_assignment, view_occupancy)
+                              resolve_assignment)
 from repro.core.tiling import (DEFAULT_ASSIGN_IMPL, TierSchedule, TileGrid,
                                auto_tier_caps)
 from repro.core.train import GSTrainCfg, fit_partition
@@ -248,8 +248,8 @@ def render_views(g: Gaussians, cams: Camera, grid: TileGrid, *, K: int,
                 warnings.warn(
                     f"render_views: {ov} tile(s) in views [{s}, {s + take})"
                     f" overflowed the explicit tier_caps={tier_caps} and "
-                    f"rendered as background; grow the caps (or pass "
-                    f"tier_caps=None to auto-size)", RuntimeWarning)
+                    "rendered as background; grow the caps (or pass "
+                    "tier_caps=None to auto-size)", RuntimeWarning)
         rgbs.append(np.asarray(out.rgb[:take]))
         covs.append(np.asarray(out.coverage[:take]))
     return np.concatenate(rgbs), np.concatenate(covs)
@@ -296,8 +296,8 @@ def prepare_timestep(ds: GSDataset, cams: Camera, grid: TileGrid, *,
         raise ValueError(
             f"timestep t={t}: partition(s) {over} exceed the series "
             f"capacity {capacity} — raise the dataset capacity_factor (the "
-            f"(P, N) layout is fixed across the series by the warm-started "
-            f"state)")
+            "(P, N) layout is fixed across the series by the warm-started "
+            "state)")
     g0 = jax.tree.map(lambda *xs: jnp.stack(xs),
                       *[init_partition_gaussians(pd, capacity=capacity)
                         for pd in parts])

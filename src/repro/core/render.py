@@ -21,8 +21,7 @@ Two rasterizer dispatch modes:
 from __future__ import annotations
 
 import functools
-from functools import partial
-from typing import NamedTuple, Optional, Sequence, Tuple
+from typing import NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp

@@ -332,7 +332,7 @@ class GSRenderServer:
         if step is None:
             raise FileNotFoundError(
                 f"no merged checkpoint under {ckpt_dir}/{cls.MERGED_SUBDIR} "
-                f"(run launch/train.py --gs first)")
+                "(run launch/train.py --gs first)")
         meta = extra.get("scene", {})
         res = int(meta.get("resolution", 64))
         grid = TileGrid(res, res, int(meta.get("tile_h", 8)),
@@ -391,7 +391,7 @@ class GSRenderServer:
             self._telemetry["rejected"] += 1
             raise QueueFullError(
                 f"request queue at cap {cfg.queue_cap}; rejection counted "
-                f"(telemetry['rejected'])")
+                "(telemetry['rejected'])")
         shed_at = cfg.shed_at if cfg.shed_at is not None \
             else max(1, cfg.queue_cap // 2)
         shed = len(self._queue) >= shed_at

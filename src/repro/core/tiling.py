@@ -28,7 +28,6 @@ launch one kernel per tier instead of paying the max K everywhere; see
 
 from __future__ import annotations
 
-from functools import partial
 from typing import NamedTuple, Optional, Sequence, Tuple
 
 import jax
@@ -221,7 +220,6 @@ def _assign_tiles_coarse(splats: Splats2D, grid: TileGrid, *, K: int,
     tile slots, block) panes, scattered back to row-major tile order at the
     end.
     """
-    T = grid.n_tiles
     N = splats.mean2d.shape[0]
     sx = (grid.nx + sb - 1) // sb
     sy = (grid.ny + sb - 1) // sb
@@ -467,7 +465,7 @@ def resolve_assign_impl(impl: str, n_tiles: int,
         return "sorted"
     if impl not in ("dense", "sorted"):
         raise ValueError(f"unknown assignment impl {impl!r}; expected "
-                         f"'auto', 'dense' or 'sorted'")
+                         "'auto', 'dense' or 'sorted'")
     return impl
 
 
@@ -524,7 +522,7 @@ def auto_tile_budget(max_count, n_tiles: int, *, slack: float = 1.5,
 
 
 def window_overlap_mask(mx, my, rad, valid, grid: TileGrid, *,
-                        t0, n_local: int):
+                        t0, n_local: int, t_end=None):
     """Which splats' clipped tile bboxes can touch the contiguous row-major
     flat-tile window ``[t0, t0 + n_local)``.
 
@@ -540,16 +538,33 @@ def window_overlap_mask(mx, my, rad, valid, grid: TileGrid, *,
     This is the per-(src, dst)-edge overlap test of the sparse splat
     exchange (core.distributed): each destination's sub-strip is one such
     window.
+
+    ``t_end`` (optional, traced ok) clips every window at an exclusive
+    flat-tile bound: the effective range is ``[t0, min(t0+n_local,
+    t_end))`` and a window starting at/after ``t_end`` matches nothing.
+    The exchange uses this for strips that do not divide by the "part"
+    axis — padded sub-windows must not count the NEXT strip's tiles (or
+    anything at all, when fully past the strip) against an edge budget.
     """
     _, _, y0, y1 = _bbox_bounds(mx, my, rad, grid)
     t0 = jnp.asarray(t0, jnp.int32)
+    if t_end is None:
+        lim = t0 + n_local
+        live = None
+    else:
+        t_end = jnp.asarray(t_end, jnp.int32)
+        lim = jnp.minimum(t0 + n_local, t_end)
+        live = t0 < t_end
     r0 = t0 // grid.nx
-    r1 = (t0 + n_local - 1) // grid.nx
+    r1 = (lim - 1) // grid.nx
     if t0.ndim:
         shape = t0.shape + (1,) * y0.ndim
         r0 = r0.reshape(shape)
         r1 = r1.reshape(shape)
-    return valid & (y0 <= r1) & (y1 >= r0)
+        if live is not None:
+            live = live.reshape(shape)
+    out = valid & (y0 <= r1) & (y1 >= r0)
+    return out if live is None else out & live
 
 
 def grow_tile_budget(budget: int, n_tiles: int, *, growth: float = 2.0,
@@ -1003,7 +1018,7 @@ class TierSchedule:
                  growth: float = 2.0, trim: bool = False):
         ladder = tuple(int(k) for k in k_tiers)
         if not ladder or any(b <= a for a, b in zip(ladder, ladder[1:])):
-            raise ValueError(f"k_tiers must be a non-empty strictly "
+            raise ValueError("k_tiers must be a non-empty strictly "
                              f"increasing ladder: {ladder}")
         self.ladder = ladder             # full ladder (probe depth = max)
         self.slack = float(slack)
@@ -1053,7 +1068,7 @@ class TierSchedule:
             raise ValueError(
                 f"probe_counts got {len(counts)} tier counts for the "
                 f"{len(self.ladder)}-tier ladder {self.ladder}; counts must "
-                f"be measured over the schedule's FULL ladder")
+                "be measured over the schedule's FULL ladder")
         max_occ = int(max_occ)
         # default: keep the FULL ladder — unoccupied upper tiers cost
         # nothing (cap 0 -> no launch) and keep overflow telemetry live.

@@ -20,7 +20,6 @@ from typing import NamedTuple, Optional, Tuple, Union
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import lax
 
 from repro.core.cameras import Camera, select
 from repro.core.gaussians import Gaussians
@@ -129,7 +128,7 @@ class GSTrainCfg:
         if self.grad_compress not in ("none", "bf16", "int8"):
             raise ValueError(
                 f"unknown grad_compress {self.grad_compress!r}; expected "
-                f"'none', 'bf16' or 'int8'")
+                "'none', 'bf16' or 'int8'")
 
     def resolved_k_tiers(self) -> Optional[Tuple[int, ...]]:
         """The active K ladder, or None for dense rasterization.
@@ -226,13 +225,13 @@ def _check_resume_policy(extra: dict, cfg: GSTrainCfg):
             f"checkpoint was written under dtype_policy={saved_pol!r} but "
             f"this run uses {cfg.dtype_policy!r}; resume must keep the "
             f"policy — rerun with --dtype-policy {saved_pol} or point "
-            f"--ckpt-dir at a fresh directory")
+            "--ckpt-dir at a fresh directory")
     saved_gc = extra.get("grad_compress", "none")
     if saved_gc != cfg.grad_compress:
         raise ValueError(
             f"checkpoint was written under grad_compress={saved_gc!r} but "
             f"this run uses {cfg.grad_compress!r}; resume must keep the "
-            f"mode (the error-feedback state rides the checkpoint) — rerun "
+            "mode (the error-feedback state rides the checkpoint) — rerun "
             f"with --grad-compress {saved_gc} or use a fresh --ckpt-dir")
 
 

@@ -19,7 +19,6 @@ on [0,1]^3 — no stored data, resolution-scalable to any point budget.
 from __future__ import annotations
 
 import numpy as np
-import jax.numpy as jnp
 
 
 def _grid(res: int):

@@ -26,7 +26,6 @@ import time
 import traceback
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import all_arch_ids, get_spec
@@ -38,7 +37,6 @@ from repro.models.steps import (
     SHAPES,
     TrainCfg,
     cache_pspecs,
-    cache_specs,
     input_pspecs,
     input_specs,
     make_decode_step,

@@ -58,7 +58,6 @@ def main():
     logits, _prefill_caches = prefill(params, batch)
     logits.block_until_ready()
     t_prefill = time.perf_counter() - t0
-    next_tok = jnp.argmax(logits[..., : spec.vocab], axis=-1).astype(jnp.int32)
 
     # fresh fixed-size decode cache (prompt replay then generation)
     total = S + args.gen + 1

@@ -116,7 +116,7 @@ def main():
         print(f"[serve-gs] telemetry -> {args.telemetry_json}")
     if args.passes >= 2 and passes[-1]["hits"] < passes[-1]["requests"]:
         raise SystemExit(
-            f"[serve-gs] FAIL: repeat pass hit the cache on only "
+            "[serve-gs] FAIL: repeat pass hit the cache on only "
             f"{passes[-1]['hits']}/{passes[-1]['requests']} requests")
     print("[serve-gs] ok")
 

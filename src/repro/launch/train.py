@@ -185,7 +185,7 @@ def run_gs(args):
     latest = ckpt.latest_restorable_step()
     if latest is not None:
         print(f"[train-gs] resuming from checkpoint step {latest} "
-              f"(schedule restored, no re-probe)")
+              "(schedule restored, no re-probe)")
     sched = cfg.tier_schedule()
     t0 = time.perf_counter()
     g1, _, losses = fit_partitions(
@@ -206,7 +206,7 @@ def run_gs(args):
               f"final loss {losses[-1]:.4f}")
     else:
         print(f"[train-gs] checkpoint already at step {done}; "
-              f"skipping to merge")
+              "skipping to merge")
     if sched is not None:
         print(f"[train-gs] schedule: {sched}")
 
@@ -384,9 +384,9 @@ def run_gs_timeseries(args):
                 src = warm[1].get("timestep", t - 1)
                 print(f"[train-gs-ts] timestep {t}: warm-start from "
                       f"timestep {src} (step {warm[2]}) — schedule + "
-                      f"exchange restored, no init probe")
+                      "exchange restored, no init probe")
             else:
-                print(f"[train-gs-ts] timestep 0: cold start")
+                print("[train-gs-ts] timestep 0: cold start")
 
             sched = cfg.tier_schedule()
             ex = ExchangeSchedule(budget=cfg.exchange_budget) \
@@ -434,7 +434,7 @@ def run_gs_timeseries(args):
         like = (jax.device_get(td.g0), jax.device_get(init_opt(td.g0)))
         (g1, _), _ = tck.restore_delta(T * S, like)
         print(f"[train-gs-ts] chain already complete at timestep {T - 1}; "
-              f"skipping to merge")
+              "skipping to merge")
 
     # merge + eval + serving checkpoint for the FINAL timestep (same tail
     # as the single-snapshot driver, labelled with the series step)

@@ -8,8 +8,6 @@ scanned HLO body.  Remat wraps the superblock body.
 
 from __future__ import annotations
 
-from functools import partial
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

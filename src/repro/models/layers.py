@@ -716,7 +716,6 @@ def mamba2_decode_block(spec: ModelSpec, x, p, state):
 
     zxbcdt = x @ p["in_proj"]
     z, xbc, dt = jnp.split(zxbcdt, [di, di + di + 2 * ds], axis=-1)
-    kw = p["conv"].shape[0]
     hist = jnp.concatenate([state["conv"], xbc], axis=1)                 # (B,kw,·)
     conv = jnp.einsum("bkc,kc->bc", hist, p["conv"])[:, None, :]
     xbc_t = jax.nn.silu(conv + p["conv_b"][None, None, :])

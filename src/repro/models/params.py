@@ -11,7 +11,6 @@ Layout: ``params["sb"]["slot{i}"][name]`` — arrays stacked over superblocks
 
 from __future__ import annotations
 
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -25,7 +25,6 @@ the spec; ``padded_*`` properties expose the shardable values.
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Optional, Tuple
 
 MODEL_AXIS_SIZE = 16  # production mesh model-axis size; padding targets this

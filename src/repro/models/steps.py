@@ -18,8 +18,6 @@ Sharding of activations / caches:
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -27,7 +25,6 @@ from jax import lax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.models import decoder as dec
-from repro.models import layers as L
 from repro.models.params import param_shardings, param_specs
 from repro.models.spec import ModelSpec
 from repro.optim import AdamWConfig, adamw_update, compress_grads, make_schedule

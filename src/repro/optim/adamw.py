@@ -8,7 +8,6 @@ policies that is ZeRO-3-equivalent placement.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -232,9 +232,9 @@ class CheckpointManager:
         if "delta" in manifest:
             raise ValueError(
                 f"checkpoint step {step} under {self.root} is a DELTA "
-                f"checkpoint (diffed against base step "
+                "checkpoint (diffed against base step "
                 f"{manifest['delta']['base_step']}); restore it with "
-                f"restore_delta, which resolves the base chain")
+                "restore_delta, which resolves the base chain")
         leaves, treedef = _flatten_with_paths(like)
         assert len(leaves) == manifest["n_leaves"], (
             f"leaf count mismatch: have {len(leaves)}, "
@@ -295,7 +295,7 @@ class CheckpointManager:
             raise ValueError(
                 f"save_delta(step={step}): base checkpoint step "
                 f"{base_step} is missing or incomplete under {self.root} — "
-                f"a delta needs its base committed first")
+                "a delta needs its base committed first")
         with open(os.path.join(base_dir, "manifest.json")) as f:
             base_manifest = json.load(f)
         leaves, treedef = _flatten_with_paths(tree)
@@ -305,7 +305,7 @@ class CheckpointManager:
                 f"save_delta(step={step}): tree structure does not match "
                 f"base step {base_step} ({len(leaves)} leaves vs "
                 f"{base_manifest['n_leaves']}) — delta checkpoints diff "
-                f"like against like")
+                "like against like")
 
         final = self._step_dir(step, partition)
         tmp = final + ".tmp"
@@ -383,8 +383,8 @@ class CheckpointManager:
             raise ValueError(
                 f"delta checkpoint step {step} needs base step "
                 f"{base_step}, but {base_dir} is missing or incomplete "
-                f"— the delta chain must be retained (build the "
-                f"manager with keep=0 for timeseries lineage)")
+                "— the delta chain must be retained (build the "
+                "manager with keep=0 for timeseries lineage)")
         digest = self._manifest_digest(base_step, partition)
         if digest != info["base_digest"]:
             raise ValueError(
@@ -392,7 +392,7 @@ class CheckpointManager:
                 f"DIFFERENT base: step {base_step}'s manifest digest "
                 f"{digest[:12]}... != recorded "
                 f"{info['base_digest'][:12]}... — the base was "
-                f"overwritten or replaced; refusing to apply the delta")
+                "overwritten or replaced; refusing to apply the delta")
         arrs, _ = self._resolve_leaves(base_step, partition)
         for i, meta in enumerate(manifest["leaves"]):
             if meta["delta"] == "full":

@@ -14,7 +14,6 @@ import os
 import time
 from typing import Any, Callable, List, Optional
 
-import numpy as np
 
 
 def retry_step(fn: Callable, *args, retries: int = 2,

@@ -1,6 +1,5 @@
 """Data substrate: volumes, isosurface extraction, token streams."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

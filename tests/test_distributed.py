@@ -682,6 +682,98 @@ def test_exchange_schedule_probe_growth_and_state():
     assert "budget=64" in repr(pinned)
 
 
+def test_exchange_schedule_budget_matrix():
+    """The (n_part, n_part) budget matrix keeps the same honesty contract
+    PER EDGE: probes size each edge independently, overflow grows only the
+    starved edges, ``ensure`` is the grow-never-shrink in-step resize, the
+    matrix round-trips through the JSON checkpoint payload, and malformed
+    matrices are refused loudly."""
+    import numpy as np
+    import pytest
+
+    from repro.core.distributed import ExchangeSchedule, check_budget_matrix
+
+    es = ExchangeSchedule()
+    demand = np.array([[40, 5], [90, 10]])
+    B = es.probe_budget(demand, 512)
+    # per-edge: ceil(d * 1.5) rounded up to 16 -> [[64, 16], [144, 16]]
+    np.testing.assert_array_equal(B, [[64, 16], [144, 16]])
+
+    # overflow on one edge grows ONLY that edge (geometric, clamped)
+    ov = np.zeros((2, 2), np.int64)
+    ov[0, 1] = 3
+    assert es.note_overflow(ov, 512) is True
+    B2 = np.asarray(es.budget)
+    assert B2[0, 1] == 32
+    B_ref = np.array([[64, 32], [144, 16]])
+    np.testing.assert_array_equal(B2, B_ref)
+    assert es.note_overflow(np.zeros((2, 2)), 512) is False
+
+    # a SCALAR counter against a matrix budget (older telemetry) grows
+    # every edge — conservative, never silent
+    es_sc = ExchangeSchedule.from_state(es.state_dict())
+    assert es_sc.note_overflow(1, 512) is True
+    assert (np.asarray(es_sc.budget) >= B_ref).all()
+
+    # ensure: grow-never-shrink to cover a demand bound, no slack
+    assert es.ensure(np.full((2, 2), 100), 512) is True
+    np.testing.assert_array_equal(np.asarray(es.budget),
+                                  np.maximum(B_ref, 112))
+    assert es.ensure(np.full((2, 2), 1), 512) is False    # never shrinks
+
+    # round-trip: nested-list JSON payload -> identical matrix + key
+    es2 = ExchangeSchedule.from_state(es.state_dict())
+    np.testing.assert_array_equal(np.asarray(es2.budget),
+                                  np.asarray(es.budget))
+    assert es2.budget_key() == es.budget_key()
+    assert isinstance(es2.budget_key(), tuple)
+    assert "2x2[" in repr(es2)
+
+    # loud validation: non-square, wrong-size and non-positive matrices
+    with pytest.raises(ValueError, match="square"):
+        check_budget_matrix(np.ones((2, 3)))
+    with pytest.raises(ValueError, match="refused"):
+        check_budget_matrix(np.ones((2, 2)), 4)
+    with pytest.raises(ValueError, match="refused"):
+        check_budget_matrix(np.ones((8, 8)), 4)
+    with pytest.raises(ValueError):
+        check_budget_matrix(np.zeros((2, 2)))
+    with pytest.raises(ValueError):
+        ExchangeSchedule(budget=np.ones((2, 3)))
+
+
+def test_window_assignment():
+    """The overlap-aware window assignment is a deterministic permutation
+    that parks each brick's dominant band on the free local shift: when a
+    derangement's edges carry the heavy overlap, tau recovers it and the
+    ladder cost collapses to the light residue; with nothing to gain it
+    stays the identity."""
+    import numpy as np
+
+    from repro.core.distributed import window_assignment
+
+    # uniform overlap: no assignment beats another — identity, both sizes
+    np.testing.assert_array_equal(window_assignment(np.full((4, 4), 7)),
+                                  np.arange(4))
+    np.testing.assert_array_equal(window_assignment(np.ones((1, 1))), [0])
+
+    n = 8
+    sigma = np.roll(np.arange(n), 3)       # heavy edges all on one shift
+    rng = np.random.default_rng(0)
+    B = rng.integers(1, 8, (n, n))
+    B[np.arange(n), sigma] = 500
+    tau = window_assignment(B)
+    assert sorted(tau) == list(range(n)), tau          # a permutation
+    shifts = [(np.arange(n) + k) % n for k in range(1, n)]
+
+    def cost(t):
+        return sum(int(B[np.arange(n), t[s]].max()) for s in shifts)
+
+    np.testing.assert_array_equal(tau, sigma)
+    assert cost(tau) + 400 < cost(np.arange(n)), (cost(tau), cost(sigma))
+    np.testing.assert_array_equal(tau, window_assignment(B))  # deterministic
+
+
 EXCHANGE_SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
@@ -729,6 +821,17 @@ raw = int(jax.jit(make_gs_exchange_probe(mesh2d, grid, views=V))(
 assert E >= min(raw, N // 2), (E, raw)
 print("EX-PROBE", E, raw)
 
+# ---- per-edge probe: the (n, n) demand matrix agrees with the scalar
+# probe (its max IS the worst edge) and sizes a matrix budget ----
+esm = ExchangeSchedule()
+B = probe_gs_exchange(esm, mesh2d, grid, g_dev, cam_dev, views=V,
+                      per_edge=True)
+raw_m = np.asarray(jax.jit(make_gs_exchange_probe(
+    mesh2d, grid, views=V, per_edge=True))(g_dev, cam_dev))
+assert raw_m.shape == (2, 2) and int(raw_m.max()) == raw, (raw_m, raw)
+assert (np.asarray(B) >= np.minimum(raw_m, N // 2)).all(), (B, raw_m)
+print("EX-PROBE-EDGES", raw_m.tolist())
+
 # ---- forward parity vs the all-gather table, dense AND tiered: identical
 # tiles at 1e-6 (the received table is an order-preserving subsequence of
 # the gathered table, so the two-key top-k selects identical splats) and a
@@ -736,33 +839,70 @@ print("EX-PROBE", E, raw)
 for kt in (None, (4, 8, K)):
     fg = make_gs_forward(mesh2d, grid, K=K, impl="ref", views=V, k_tiers=kt,
                          return_tiles=True, return_overflow=True)
-    fe = make_gs_forward(mesh2d, grid, K=K, impl="ref", views=V, k_tiers=kt,
-                         return_tiles=True, return_overflow=True,
-                         exchange=True, exchange_budget=E)
     lg, tg, og = jax.jit(fg)(g_dev, cam_dev, gt_dev, mask_dev)
-    le, te, oe = jax.jit(fe)(g_dev, cam_dev, gt_dev, mask_dev)
-    assert int(oe["exchange"]) == 0 and int(oe["tiles"]) == 0, oe
-    np.testing.assert_allclose(np.asarray(te).reshape(tg.shape),
-                               np.asarray(tg), rtol=1e-6, atol=1e-6)
-    np.testing.assert_allclose(float(le), float(lg), rtol=1e-6, atol=1e-7)
+    for eb in (E, B):   # scalar all_to_all AND ragged per-edge ladder
+        fe = make_gs_forward(mesh2d, grid, K=K, impl="ref", views=V,
+                             k_tiers=kt, return_tiles=True,
+                             return_overflow=True,
+                             exchange=True, exchange_budget=eb)
+        le, te, oe = jax.jit(fe)(g_dev, cam_dev, gt_dev, mask_dev)
+        assert int(oe["exchange"]) == 0 and int(oe["tiles"]) == 0, oe
+        if np.ndim(eb) == 2:
+            # matrix telemetry: zero per-edge drops, and the in-step
+            # demand matrix IS the host probe's measurement
+            assert (np.asarray(oe["exchange_edges"]) == 0).all(), oe
+            np.testing.assert_array_equal(
+                np.asarray(oe["exchange_demand"]), raw_m)
+        np.testing.assert_allclose(np.asarray(te).reshape(tg.shape),
+                                   np.asarray(tg), rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(float(le), float(lg),
+                                   rtol=1e-6, atol=1e-7)
 print("EX-FWD-MATCH")
 
 # ---- 1-D ("part",) x4 mesh: the window splits 4 ways (sub = T // 4) and
-# the exchange must still match its own gather step ----
+# the exchange must still match its own gather step — scalar and per-edge
+# matrix budgets alike ----
 g_sh1, opt_sh1, b_sh1 = gs_shardings(mesh1d, views=V)
-fwd_pair = []
-for exch in (False, True):
+es4 = ExchangeSchedule()
+B4 = probe_gs_exchange(es4, mesh1d, grid,
+                       jax.device_put(g_b, g_sh1),
+                       jax.device_put(cam_b, b_sh1["cam"]),
+                       views=V, per_edge=True)
+fwd_tri = []
+for eb in (None, E, B4):
     f = make_gs_forward(mesh1d, grid, K=K, impl="ref", views=V,
                         k_tiers=(4, 8, K), return_overflow=True,
-                        exchange=exch, exchange_budget=E if exch else None)
+                        exchange=eb is not None, exchange_budget=eb)
     l, ov = jax.jit(f)(jax.device_put(g_b, g_sh1),
                        jax.device_put(cam_b, b_sh1["cam"]),
                        jax.device_put(gt, b_sh1["gt_tiles"]),
                        jax.device_put(mask, b_sh1["mask_tiles"]))
     assert int(ov["exchange"]) == 0 and int(ov["tiles"]) == 0, ov
-    fwd_pair.append(float(l))
-np.testing.assert_allclose(fwd_pair[1], fwd_pair[0], rtol=1e-6, atol=1e-7)
+    fwd_tri.append(float(l))
+np.testing.assert_allclose(fwd_tri[1], fwd_tri[0], rtol=1e-6, atol=1e-7)
+np.testing.assert_allclose(fwd_tri[2], fwd_tri[0], rtol=1e-6, atol=1e-7)
 print("EX-1D-MATCH")
+
+# ---- overlap-aware window assignment: inflating a derangement's edges
+# forces window_assignment to pick a non-identity band permutation inside
+# the ladder; the loss partials psum across "part", so WHICH device
+# renders which band must not change the loss (or fire any counter) ----
+from repro.core.distributed import window_assignment
+sigma = np.array([3, 2, 1, 0])
+B_tau = np.asarray(B4).copy()
+B_tau[np.arange(4), sigma] = N
+tau = window_assignment(np.minimum(B_tau, N))
+assert not (tau == np.arange(4)).all(), tau
+f_tau = make_gs_forward(mesh1d, grid, K=K, impl="ref", views=V,
+                        k_tiers=(4, 8, K), return_overflow=True,
+                        exchange=True, exchange_budget=B_tau)
+l_tau, ov_tau = jax.jit(f_tau)(jax.device_put(g_b, g_sh1),
+                               jax.device_put(cam_b, b_sh1["cam"]),
+                               jax.device_put(gt, b_sh1["gt_tiles"]),
+                               jax.device_put(mask, b_sh1["mask_tiles"]))
+assert int(ov_tau["exchange"]) == 0, ov_tau
+np.testing.assert_allclose(float(l_tau), fwd_tri[0], rtol=1e-6, atol=1e-7)
+print("EX-TAU-MATCH", tau.tolist())
 
 # ---- train-step parity: params after one Adam update at 1e-6, dense and
 # tiered+sorted (the sorted strip assignment composes with the exchange
@@ -809,13 +949,57 @@ assert np.isfinite(lss)
 assert all(np.isfinite(v).all() for v in ps.values())
 print("EX-STARVED", int(ovs["exchange"]))
 
-# ---- loud validation: window not divisible by the "part" axis, and the
-# strip prefilter composed under exchange, both refuse to build ----
+# ---- adversarial, per-edge: starving ONE edge of the matrix fires ONLY
+# that edge's psum'd counter; every other edge stays zero and the output
+# stays finite ----
+B_st = np.asarray(B).copy()
+B_st[0, 1] = 1
+fse = make_gs_forward(mesh2d, grid, K=K, impl="ref", views=V, k_tiers=None,
+                      return_overflow=True,
+                      exchange=True, exchange_budget=B_st)
+lse, ove = jax.jit(fse)(g_dev, cam_dev, gt_dev, mask_dev)
+edges = np.asarray(ove["exchange_edges"])
+assert edges[0, 1] > 0, edges
+others = edges.copy(); others[0, 1] = 0
+assert (others == 0).all(), edges
+assert int(ove["exchange"]) == int(edges.sum()), ove
+assert np.isfinite(float(lse))
+print("EX-STARVED-EDGE", edges.tolist())
+
+# ---- non-divisible window: a 3-tile strip over a 2-wide "part" axis is
+# PADDED (ceil sub-windows, masked pad tiles) and the loss still equals
+# the all-gather loss at 1e-6 — for scalar and matrix budgets ----
 bad = TileGrid(24, 8, 8, 8)          # 3 tiles, part axis 2
+Tb = bad.n_tiles
+cams_b = orbital_rig(V, (0.5, 0.5, 0.5), 1.6, width=24, height=8)
+cb_dev = jax.device_put(select(cams_b, jnp.arange(V)), b_sh["cam"])
+gtb = jax.device_put(
+    jnp.zeros((V, Pn * Tb, 3, bad.tile_h, bad.tile_w)), b_sh["gt_tiles"])
+mkb = jax.device_put(
+    jnp.ones((V, Pn * Tb, bad.tile_h, bad.tile_w), bool),
+    b_sh["mask_tiles"])
+esb = ExchangeSchedule()
+Bb = probe_gs_exchange(esb, mesh2d, bad, g_dev, cb_dev, views=V,
+                       per_edge=True)
+fgb = make_gs_forward(mesh2d, bad, K=K, impl="ref", views=V,
+                      return_overflow=True)
+lgb, _ = jax.jit(fgb)(g_dev, cb_dev, gtb, mkb)
+for eb in (None, Bb):                # scalar (unbudgeted) and matrix
+    feb = make_gs_forward(mesh2d, bad, K=K, impl="ref", views=V,
+                          return_overflow=True, exchange=True,
+                          exchange_budget=eb)
+    leb, oeb = jax.jit(feb)(g_dev, cb_dev, gtb, mkb)
+    assert int(oeb["exchange"]) == 0, oeb
+    np.testing.assert_allclose(float(leb), float(lgb),
+                               rtol=1e-6, atol=1e-7)
+print("EX-PAD-MATCH", float(lgb))
+
+# ---- loud validation: return_tiles cannot reassemble padded sub-windows;
+# the strip prefilter composed under exchange still refuses to build ----
 try:
-    make_gs_forward(mesh2d, TileGrid(24, 8, 8, 8), K=K, views=V,
-                    exchange=True)
-    raise SystemExit("divisibility not enforced")
+    make_gs_forward(mesh2d, bad, K=K, views=V, exchange=True,
+                    return_tiles=True)
+    raise SystemExit("padded return_tiles not enforced")
 except ValueError as e:
     assert "divide" in str(e), e
 try:
@@ -831,18 +1015,21 @@ print("EX-VALIDATE")
 @pytest.mark.slow
 def test_sparse_exchange_matches_all_gather():
     """The sparse-overlap exchange on 4 forced host devices: probed edge
-    budgets, forward tiles/loss == the all-gather forward at 1e-6 (dense
-    and tiered, 2-D ("part", "view") and 1-D ("part",) meshes, overflow
-    0), train-step params == the all-gather step at 1e-6 (dense and
-    tiered+sorted), a starved budget fires the psum'd counter with
-    well-formed (finite) outputs, and invalid configs are rejected
-    loudly."""
+    budgets (scalar AND per-edge matrix), forward tiles/loss == the
+    all-gather forward at 1e-6 (dense and tiered, 2-D ("part", "view")
+    and 1-D ("part",) meshes, overflow 0, in-step demand == the host
+    probe), train-step params == the all-gather step at 1e-6 (dense and
+    tiered+sorted), a starved budget fires the psum'd counter — only on
+    the starved edge for matrices — with well-formed (finite) outputs, a
+    non-divisible window pads instead of refusing (loss parity held), and
+    invalid configs are rejected loudly."""
     code = EXCHANGE_SCRIPT % {"src": SRC}
     out = subprocess.run([sys.executable, "-c", code], capture_output=True,
                          text=True, timeout=900)
     assert out.returncode == 0, (out.stdout[-2000:], out.stderr[-3000:])
-    for tok in ("EX-PROBE", "EX-FWD-MATCH", "EX-1D-MATCH", "EX-STEP-MATCH",
-                "EX-STARVED", "EX-VALIDATE"):
+    for tok in ("EX-PROBE", "EX-PROBE-EDGES", "EX-FWD-MATCH", "EX-1D-MATCH",
+                "EX-TAU-MATCH", "EX-STEP-MATCH", "EX-STARVED",
+                "EX-STARVED-EDGE", "EX-PAD-MATCH", "EX-VALIDATE"):
         assert tok in out.stdout, tok
 
 

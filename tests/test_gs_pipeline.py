@@ -15,9 +15,9 @@ except ImportError:                      # degraded fallback (see tests/_hyp.py)
 from repro.core import metrics
 from repro.core.cameras import orbital_rig, select
 from repro.core.gaussians import from_points
-from repro.core.masking import background_mask, dilate_mask, gs_loss
+from repro.core.masking import background_mask, dilate_mask
 from repro.core.merge import merge_partitions
-from repro.core.partition import factor3, make_partitioning, partition_points
+from repro.core.partition import factor3, partition_points
 from repro.core.pipeline import PipelineCfg, run_pipeline
 from repro.core.render import render
 from repro.core.tiling import TileGrid

@@ -7,12 +7,10 @@ slice-aware fusion I/O, collective wire models, replica-group parsing.
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 from jax import lax
 
-from repro.launch.hlo_analysis import (HloModule, _parse_groups, _wire_bytes,
-                                       analyze)
+from repro.launch.hlo_analysis import _parse_groups, _wire_bytes, analyze
 
 
 def _compile_text(f, *args):

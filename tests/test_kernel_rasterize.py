@@ -12,7 +12,6 @@ import pytest
 
 from repro.kernels import ops
 from repro.kernels import ref as ref_impl
-from repro.kernels.rasterize import ALPHA_MIN
 
 
 def make_tile_inputs(rng, T, K, th, tw, dtype=jnp.float32, dead_frac=0.2):

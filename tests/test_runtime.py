@@ -5,8 +5,6 @@ import json
 import os
 import subprocess
 import sys
-import textwrap
-import time
 
 import jax
 import jax.numpy as jnp

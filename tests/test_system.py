@@ -1,13 +1,10 @@
 """System-level checks: public API surface, config registry integrity,
 dry-run machinery on a reduced mesh (subprocess), spec invariants."""
 
-import json
 import os
 import subprocess
 import sys
 
-import jax
-import numpy as np
 import pytest
 
 try:
@@ -16,7 +13,7 @@ except ImportError:                      # degraded fallback (see tests/_hyp.py)
     from _hyp import given, settings, st
 
 from repro.configs import ALIASES, all_arch_ids, get_smoke, get_spec
-from repro.models.spec import ModelSpec, logical_to_pspec, rules_for
+from repro.models.spec import logical_to_pspec
 
 SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
 

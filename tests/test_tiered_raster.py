@@ -20,7 +20,7 @@ from repro.core.cameras import orbital_rig, select
 from repro.core.gaussians import from_points
 from repro.core.pipeline import render_views
 from repro.core.render import render, render_batch
-from repro.core.tiling import (NEG, TierSchedule, TileGrid, auto_tier_caps,
+from repro.core.tiling import (TierSchedule, TileGrid, auto_tier_caps,
                                bin_tiles_by_occupancy, tile_occupancy,
                                tile_tiers)
 from repro.data.isosurface import point_cloud_for

@@ -1,6 +1,7 @@
 """CI gate tools behave like gates: tools/check_bench.py fails on
-regressions AND on unbaselined benchmarks (with --allow-new as the
-explicit escape hatch), and tools/check_cov.py enforces the core/ line
+regressions, on unbaselined benchmarks (--allow-new is the explicit
+escape hatch) and on baseline entries missing from the run
+(--allow-removed mirrors it), and tools/check_cov.py enforces the core/ line
 coverage floor from a coverage.xml report.  Run as subprocesses — the
 tools are argv -> exit-code programs and that interface is the contract.
 tools/bench_trajectory.py (the cross-commit perf history appender) and
@@ -79,6 +80,38 @@ def test_check_bench_allow_new_demotes_to_warning(tmp_path):
     bench2 = _write(tmp_path, "bench2.json",
                     _summary([("a", 9.0), ("new_bench", 3.0)]))
     out2 = _check_bench("--bench", bench2, "--baseline", base, "--allow-new")
+    assert out2.returncode == 1
+
+
+def test_check_bench_removed_baseline_entry_fails(tmp_path):
+    """A baseline entry with no matching benchmark in the run is the same
+    coverage hole from the other side — a silently dropped benchmark keeps
+    the gate green while measuring less, so it must FAIL."""
+    bench = _write(tmp_path, "bench.json", _summary([("a", 1.0)]))
+    base = _write(tmp_path, "base.json",
+                  _summary([("a", 1.0), ("old_bench", 2.0)]))
+    out = _check_bench("--bench", bench, "--baseline", base)
+    assert out.returncode == 1, out.stdout
+    assert "baseline entry 'old_bench' missing" in out.stdout
+    assert "FAIL" in out.stdout
+
+
+def test_check_bench_allow_removed_demotes_to_warning(tmp_path):
+    """--allow-removed is the explicit escape hatch for the PR that
+    retires a benchmark (mirror of --allow-new): green gate, loud
+    message, and no masking of real regressions elsewhere."""
+    bench = _write(tmp_path, "bench.json", _summary([("a", 1.0)]))
+    base = _write(tmp_path, "base.json",
+                  _summary([("a", 1.0), ("old_bench", 2.0)]))
+    out = _check_bench("--bench", bench, "--baseline", base,
+                       "--allow-removed")
+    assert out.returncode == 0, out.stdout
+    assert "WARNING: baseline entry 'old_bench' missing" in out.stdout
+    assert "PASS" in out.stdout
+    # ...but --allow-removed does NOT mask a real regression elsewhere
+    bench2 = _write(tmp_path, "bench2.json", _summary([("a", 9.0)]))
+    out2 = _check_bench("--bench", bench2, "--baseline", base,
+                        "--allow-removed")
     assert out2.returncode == 1
 
 

@@ -30,8 +30,12 @@ an ungated benchmark is a silent coverage hole (it can regress forever
 without tripping CI).  The escape hatch for the PR that introduces a new
 benchmark is ``--allow-new`` — CI stays green while the run's artifact is
 used to commit an --update'd baseline alongside the new benchmark.
-Baseline entries missing from the run only warn (a bench was removed or
-renamed: update the baseline).
+Baseline entries missing from the run fail symmetrically: a silently
+dropped benchmark is the SAME coverage hole from the other side (the gate
+would keep reporting green while measuring less and less).  The escape
+hatch for the PR that deliberately retires a benchmark is
+``--allow-removed`` — pass it once, and commit an --update'd baseline
+without the retired entry.
 """
 
 from __future__ import annotations
@@ -48,7 +52,7 @@ def load(path):
         raise SystemExit(
             f"{path}: not a schema-1 benchmark summary (run `python -m "
             f"benchmarks.run --smoke --json {path}` — match the baseline's "
-            f"mode)")
+            "mode)")
     return data
 
 
@@ -66,6 +70,11 @@ def main():
                     help="demote missing-baseline entries from FAIL to "
                          "WARNING (the escape hatch for the PR that adds "
                          "a benchmark; commit an --update'd baseline)")
+    ap.add_argument("--allow-removed", action="store_true",
+                    help="demote baseline entries missing from the run "
+                         "from FAIL to WARNING (the escape hatch for the "
+                         "PR that retires a benchmark; commit an "
+                         "--update'd baseline)")
     args = ap.parse_args()
 
     bench = load(args.bench)
@@ -83,8 +92,8 @@ def main():
             f"[check_bench] FAIL: mode mismatch — {args.bench} was run in "
             f"{bench.get('mode')!r} mode but {args.baseline} holds "
             f"{base.get('mode')!r} wall-clocks; comparing them would make "
-            f"the ratio gate meaningless.  Re-run the benchmarks in the "
-            f"baseline's mode, or refresh the baseline with --update.")
+            "the ratio gate meaningless.  Re-run the benchmarks in the "
+            "baseline's mode, or refresh the baseline with --update.")
     base_by_name = {e["name"]: e for e in base["entries"]}
     failures, unbaselined = [], []
     for e in bench["entries"]:
@@ -93,7 +102,7 @@ def main():
             sev = "WARNING" if args.allow_new else "FAIL"
             print(f"[check_bench] {sev}: no baseline for "
                   f"{e['name']!r} ({e['wall_clock_s']:.1f}s) — new "
-                  f"benchmark?  Refresh with --update"
+                  "benchmark?  Refresh with --update"
                   + ("." if args.allow_new
                      else " (or pass --allow-new on the PR adding it)."))
             if not args.allow_new:
@@ -106,20 +115,32 @@ def main():
               f"{status}")
         if ratio > args.max_ratio:
             failures.append((e["name"], ratio))
+    removed = []
     for name in base_by_name:
-        print(f"[check_bench] WARNING: baseline entry {name!r} missing "
-              f"from this run — removed benchmark?  Refresh with --update.")
+        sev = "WARNING" if args.allow_removed else "FAIL"
+        print(f"[check_bench] {sev}: baseline entry {name!r} missing from "
+              "this run — removed benchmark?  Refresh with --update"
+              + ("." if args.allow_removed
+                 else " (or pass --allow-removed on the PR retiring it)."))
+        if not args.allow_removed:
+            removed.append(name)
     bad = False
     if failures:
         names = ", ".join(f"{n} ({r:.2f}x)" for n, r in failures)
-        print(f"[check_bench] FAIL: wall-clock regression past "
+        print("[check_bench] FAIL: wall-clock regression past "
               f"{args.max_ratio}x vs {args.baseline}: {names}")
         bad = True
     if unbaselined:
-        print(f"[check_bench] FAIL: unbaselined benchmark(s) "
+        print("[check_bench] FAIL: unbaselined benchmark(s) "
               f"{', '.join(repr(n) for n in unbaselined)} — refresh "
               f"{args.baseline} with --update (or pass --allow-new on the "
-              f"PR adding them)")
+              "PR adding them)")
+        bad = True
+    if removed:
+        print("[check_bench] FAIL: baseline benchmark(s) "
+              f"{', '.join(repr(n) for n in removed)} missing from this "
+              f"run — refresh {args.baseline} with --update (or pass "
+              "--allow-removed on the PR retiring them)")
         bad = True
     if bad:
         sys.exit(1)
